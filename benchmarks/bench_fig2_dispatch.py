@@ -1,0 +1,49 @@
+"""Figure 2 analogue: host-side input-staging / dispatch overhead.
+
+The paper shows TF's Python binding costs 64% (CPU) to 3-11x (GPU) over the
+C API because Python lists must be unboxed; NumPy costs ~10-15% over C. The
+JAX analogues of the same overhead axis:
+
+    python-list input  -> jnp.asarray(list)       (unboxing, the "Python" bar)
+    numpy input        -> jnp.asarray(ndarray)    (zero-copy-ish, "NumPy" bar)
+    device-resident    -> pre-committed jax.Array (the "C API" bar)
+    per-call jit       -> dispatch through jit cache lookup
+    AOT compiled call  -> compiled.__call__ (minimum dispatch)
+
+Measured per batch size, like the paper's batch sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+from .common import emit, time_call
+
+
+def run() -> None:
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+    seq = 32
+    for batch in (1, 8, 32):
+        base = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (batch, seq)
+        ).astype(np.int32)
+        as_list = base.tolist()
+        on_device = jax.device_put(jnp.asarray(base))
+        compiled = fwd.lower(params, on_device).compile()
+
+        t_list = time_call(lambda: fwd(params, jnp.asarray(as_list, jnp.int32)))
+        t_numpy = time_call(lambda: fwd(params, jnp.asarray(base)))
+        t_device = time_call(lambda: fwd(params, on_device))
+        t_aot = time_call(lambda: compiled(params, on_device))
+        emit(f"fig2/python_list/b{batch}", t_list,
+             f"vs_aot={t_list / t_aot:.2f}x")
+        emit(f"fig2/numpy/b{batch}", t_numpy, f"vs_aot={t_numpy / t_aot:.2f}x")
+        emit(f"fig2/device_jit/b{batch}", t_device, f"vs_aot={t_device / t_aot:.2f}x")
+        emit(f"fig2/aot_call/b{batch}", t_aot, "baseline=1.00x")

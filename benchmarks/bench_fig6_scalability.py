@@ -1,0 +1,45 @@
+"""Figure 6 analogue: throughput speedup over batch-1 across batch sizes.
+
+The paper's heatmap shows per-model throughput scalability. We measure the
+zoo (reduced configs) across a batch sweep via the platform's batched
+scenario and report the speedup-over-batch-1 matrix (CSV rows per cell).
+"""
+from __future__ import annotations
+
+from repro.core import EvaluationRequest, ScenarioSpec
+from repro.core.analysis import throughput_scalability
+from repro.core.platform import LocalPlatform
+
+from .common import emit
+
+MODELS = ["mamba2-130m", "glm4-9b", "zamba2-2.7b", "whisper-large-v3"]
+BATCHES = [1, 2, 4, 8]
+
+
+def run() -> None:
+    platform = LocalPlatform(backends=("ref",))
+    try:
+        for model in MODELS:
+            req = EvaluationRequest(
+                model=model,
+                backend="ref",
+                scenario=ScenarioSpec(
+                    kind="batched", num_requests=3, batch_sizes=BATCHES, warmup=1
+                ),
+                trace_level="NONE",
+                seq_len=32,
+            )
+            res = platform.evaluate(req)[0]
+            per_batch = {
+                int(bs): v["throughput_ips"]
+                for bs, v in res["metrics"]["per_batch"].items()
+            }
+            speedups = throughput_scalability(per_batch)
+            for bs in BATCHES:
+                emit(
+                    f"fig6/{model}/b{bs}",
+                    1.0 / max(per_batch[bs], 1e-9),
+                    f"speedup_over_b1={speedups[bs]:.2f}x;tput_ips={per_batch[bs]:.2f}",
+                )
+    finally:
+        platform.shutdown()

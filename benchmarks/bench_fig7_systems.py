@@ -1,0 +1,56 @@
+"""Figure 7 analogue: one model across "systems".
+
+The paper runs ResNet-50 across 4 GPU/CPU systems. Our "systems" axis is
+the (backend × mesh) grid the platform serves: the measured CPU host (ref
+and pallas-interpret backends), plus the two production TPU meshes whose
+latency bound comes from the dry-run roofline (step-time lower bound =
+dominant roofline term) — the cross-system comparison MLModelScope's
+registry/dispatch was built for.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core import EvaluationRequest, ScenarioSpec
+from repro.core.platform import LocalPlatform
+
+from .common import emit
+
+ARCH = "glm4-9b"
+
+
+def run() -> None:
+    platform = LocalPlatform(backends=("ref", "pallas"))
+    try:
+        for backend in ("ref", "pallas"):
+            req = EvaluationRequest(
+                model=ARCH,
+                backend=backend,
+                scenario=ScenarioSpec(kind="online", num_requests=3, rate_hz=1000.0, warmup=1),
+                trace_level="NONE",
+                seq_len=32,
+            )
+            res = platform.evaluate(req)[0]
+            emit(
+                f"fig7/{ARCH}/cpu-{backend}",
+                res["metrics"]["trimmed_mean_ms"] / 1e3,
+                "measured=trimmed_mean",
+            )
+    finally:
+        platform.shutdown()
+    # dry-run-derived bounds for the TPU meshes
+    for mesh in ("16x16", "2x16x16"):
+        path = f"results/dryrun/{ARCH}__decode_32k__{'pod' if mesh == '16x16' else 'multipod'}.json"
+        if not os.path.exists(path):
+            continue
+        d = json.load(open(path))
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        emit(
+            f"fig7/{ARCH}/tpu-v5e-{mesh}",
+            r["step_time_bound_s"],
+            f"bound={r['dominant']};decode_step",
+        )

@@ -1,0 +1,73 @@
+"""Figure 8 analogue: "cold-start" inference inspection.
+
+The paper's case study: one-off AlexNet inference where lazy weight copies
+stall the fc6 layer; eager/async copy (the better strategy) hides them. The
+JAX cold-start anatomy is weight materialization + first-call compile +
+host->device transfer. We trace both strategies through the platform:
+
+    lazy  — weights stay as host numpy; first predict pays the transfer
+    eager — weights device_put ahead of time (the Caffe2/TF/TRT strategy)
+
+and report the timeline split (the paper's "zoom-in"), using the tracing
+hooks + critical-path analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.analysis import critical_path
+from repro.core.tracing import Tracer, TraceLevel, TracingServer
+from repro.models import build_model
+
+from .common import emit
+
+
+def run() -> None:
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    server = TracingServer()
+
+    def cold_start(eager: bool, trace_id: str) -> float:
+        tracer = Tracer(trace_id, server, TraceLevel.FULL)
+        fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+        tokens = jnp.zeros((1, 32), jnp.int32)
+        t0 = time.perf_counter()
+        with tracer.span("cold_start", TraceLevel.MODEL, eager=eager):
+            with tracer.span("weight_init", TraceLevel.MODEL):
+                host_params = jax.tree.map(
+                    np.asarray, jax.block_until_ready(model.init(jax.random.PRNGKey(0)))
+                )
+            if eager:
+                with tracer.span("weight_transfer", TraceLevel.MODEL):
+                    params = jax.block_until_ready(
+                        jax.tree.map(jax.device_put, host_params)
+                    )
+            else:
+                params = host_params   # transfers happen lazily inside predict
+            with tracer.span("first_inference", TraceLevel.MODEL):
+                with tracer.span("compile+transfer+run", TraceLevel.FRAMEWORK):
+                    jax.block_until_ready(fwd(params, tokens))
+            with tracer.span("steady_inference", TraceLevel.MODEL):
+                jax.block_until_ready(fwd(params, tokens))
+        return time.perf_counter() - t0
+
+    t_lazy = cold_start(False, "cold-lazy")
+    t_eager = cold_start(True, "cold-eager")
+    for tid, total in (("cold-lazy", t_lazy), ("cold-eager", t_eager)):
+        spans = server.timeline(tid)
+        path = critical_path(spans)
+        parts = {s.name: s.duration for s in spans if s.parent_id is not None}
+        first = parts.get("first_inference", 0.0)
+        steady = parts.get("steady_inference", 0.0)
+        emit(
+            f"fig8/{tid}",
+            total,
+            f"first_ms={first*1e3:.1f};steady_ms={steady*1e3:.1f};"
+            f"coldstart_overhead={first / max(steady, 1e-9):.1f}x;"
+            f"critical={'>'.join(s.name for s in path)}",
+        )

@@ -1,0 +1,57 @@
+"""Table 2 analogue: per-model latency/throughput comparison.
+
+The paper evaluates 37 models, reporting trimmed-mean latency, p90 latency,
+max throughput, and the optimal batch size per model. We run the platform's
+built-in zoo (reduced configs, CPU) through the SAME evaluation workflow:
+online scenario (batch 1) for latency, batched scenario sweep for max
+throughput — all metrics produced by the platform's analysis layer.
+"""
+from __future__ import annotations
+
+from repro.core import DispatchPolicy, EvaluationRequest, ScenarioSpec
+from repro.core.platform import LocalPlatform
+
+from .common import emit
+
+MODELS = [
+    "mamba2-130m",
+    "glm4-9b",
+    "gemma2-27b",
+    "zamba2-2.7b",
+    "qwen3-moe-30b-a3b",
+    "resnet50",
+]
+
+
+def run() -> None:
+    platform = LocalPlatform(backends=("ref",))
+    try:
+        for model in MODELS:
+            req = EvaluationRequest(
+                model=model,
+                backend="ref",
+                scenario=ScenarioSpec(kind="online", num_requests=5, rate_hz=1000.0, warmup=2),
+                trace_level="NONE",
+                seq_len=32,
+            )
+            res = platform.evaluate(req)[0]
+            m = res["metrics"]
+            online_tm = m["trimmed_mean_ms"]
+            online_p90 = m["p90_ms"]
+            req2 = EvaluationRequest(
+                model=model,
+                backend="ref",
+                scenario=ScenarioSpec(kind="batched", num_requests=3, batch_sizes=[1, 4], warmup=1),
+                trace_level="NONE",
+                seq_len=32,
+            )
+            res2 = platform.evaluate(req2)[0]
+            m2 = res2["metrics"]
+            emit(
+                f"table2/{model}",
+                online_tm / 1e3,
+                f"p90_ms={online_p90:.2f};max_tput_ips={m2['max_throughput_ips']:.2f};"
+                f"opt_batch={m2['optimal_batch_size']}",
+            )
+    finally:
+        platform.shutdown()

@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) and may emit extra derived columns in the third field.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+
+def time_call(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time (seconds) of fn(), blocking on jax values."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived")

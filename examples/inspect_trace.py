@@ -1,0 +1,44 @@
+"""Model-execution inspection (the paper's Figure-8 "zoom-in" case study).
+
+Runs a FRAMEWORK+SYSTEM traced evaluation, then walks the aggregated
+timeline: per-level time, the top-5 layers (Table 3), and the critical
+path from the evaluation span down to the hottest layer.
+
+    PYTHONPATH=src python examples/inspect_trace.py
+"""
+from repro.core import EvaluationRequest, ScenarioSpec, Span
+from repro.core.analysis import critical_path, level_breakdown, top_layers
+from repro.core.platform import LocalPlatform
+
+platform = LocalPlatform(backends=("ref",))
+try:
+    (result,) = platform.evaluate(
+        EvaluationRequest(
+            model="zamba2-2.7b",           # hybrid: mamba + shared-attention layers
+            backend="ref",
+            scenario=ScenarioSpec(kind="online", num_requests=2, rate_hz=1000.0, warmup=1),
+            trace_level="FULL",
+            seq_len=32,
+        )
+    )
+    spans = [Span.from_dict(d) for d in platform.evaldb.spans(result["eval_id"])]
+    print(f"{len(spans)} spans in the aggregated timeline\n")
+
+    print("== time per stack level ==")
+    for level, seconds in sorted(level_breakdown(spans).items()):
+        print(f"  {level:12s} {seconds * 1e3:9.2f} ms")
+
+    print("\n== top-5 layers (Table 3 style) ==")
+    for stat in top_layers(spans, k=5):
+        print(f"  {stat.name:28s} count={stat.count:3d} total={stat.total_s*1e3:8.2f} ms")
+
+    print("\n== critical path (Figure 8 zoom-in) ==")
+    for depth, span in enumerate(critical_path(spans)):
+        print(f"  {'  ' * depth}{span.name}  ({span.duration * 1e3:.2f} ms)")
+
+    print("\n== SYSTEM-level events (XLA cost analysis = the CUPTI stand-in) ==")
+    for s in spans:
+        if s.name == "system:xla_cost":
+            print(f"  flops={s.tags.get('flops', 0):.3g} bytes={s.tags.get('bytes_accessed', 0):.3g}")
+finally:
+    platform.shutdown()

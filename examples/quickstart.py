@@ -1,0 +1,29 @@
+"""Quickstart: evaluate a model through the platform in ~20 lines.
+
+The paper's evaluation workflow end to end: start a local MLModelScope
+instance (registry + server + agent + middleware), submit an online
+benchmarking scenario for a built-in model, and print the automated report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import EvaluationRequest, ScenarioSpec
+from repro.core.platform import LocalPlatform
+
+platform = LocalPlatform(backends=("ref",))
+try:
+    request = EvaluationRequest(
+        model="glm4-9b",                 # any of the 10 assigned archs (+resnet50)
+        backend="ref",
+        scenario=ScenarioSpec(kind="online", num_requests=5, rate_hz=100.0, warmup=2),
+        trace_level="MODEL",
+        seq_len=32,
+    )
+    (result,) = platform.evaluate(request)
+    print(f"evaluated on agent {result['agent_id']}")
+    for key, value in sorted(result["metrics"].items()):
+        if isinstance(value, (int, float)):
+            print(f"  {key:24s} {value:.3f}")
+    print()
+    print(platform.report(model="glm4-9b"))
+finally:
+    platform.shutdown()

@@ -1,0 +1,20 @@
+"""End-to-end serving driver example (this paper's kind of e2e app).
+
+Serves a small model with batched requests via the ServingEngine under a
+Poisson arrival process — the cloud-serving deployment scenario of §4.
+
+    PYTHONPATH=src python examples/serve_scenarios.py
+"""
+from repro.launch.serve import main
+
+raise SystemExit(
+    main([
+        "--arch", "glm4-9b",
+        "--requests", "8",
+        "--rate-hz", "50",
+        "--engine-batch", "4",
+        "--prompt-len", "12",
+        "--max-new-tokens", "6",
+        "--max-seq", "32",
+    ])
+)

@@ -1,0 +1,20 @@
+"""Training example: train a reduced LM for a few hundred steps with
+checkpoint/restart (kill it mid-run and re-run with --resume: it continues
+from the last atomic checkpoint and the exact data cursor).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main
+
+raise SystemExit(
+    main([
+        "--arch", "mamba2-130m",
+        "--reduced",
+        "--steps", "60",
+        "--batch", "8",
+        "--seq", "64",
+        "--ckpt-dir", "/tmp/repro-ckpt",
+        "--ckpt-every", "20",
+        "--resume",
+    ])
+)

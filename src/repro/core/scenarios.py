@@ -1,0 +1,175 @@
+"""Benchmarking scenarios (paper F7, §4.1.3 / §5.1).
+
+A scenario couples a workload generator with the measurement protocol:
+
+* ``online``   — batch-1 requests with Poisson arrivals; metrics are the
+                 trimmed-mean latency and 90th-percentile latency.
+* ``batched``  — fixed-batch back-to-back requests; metric is throughput
+                 (inputs/sec); sweeping batch sizes yields max throughput
+                 and the optimal batch size (Table 2).
+* ``trace``    — replay of a recorded arrival process.
+
+Scenarios drive a *predict function* ``fn(batch_size) -> None`` supplied by
+the agent; they own timing and metric computation so every model/backend is
+measured identically (F2 consistent evaluation).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .analysis import latency_summary
+from .tracing import Tracer, TraceLevel
+from .workload import BatchedLoad, PoissonLoad, Request, TraceReplayLoad, make_generator
+
+
+@dataclass
+class ScenarioSpec:
+    """User-selected benchmarking scenario (part of the user input)."""
+
+    kind: str = "online"            # online | batched | trace
+    num_requests: int = 32
+    batch_size: int = 1
+    rate_hz: float = 50.0           # online arrival rate
+    warmup: int = 3
+    batch_sizes: Optional[List[int]] = None   # batched sweep
+    arrivals: Optional[List[float]] = None    # trace replay
+    seed: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "num_requests": self.num_requests,
+            "batch_size": self.batch_size,
+            "rate_hz": self.rate_hz,
+            "warmup": self.warmup,
+            "batch_sizes": self.batch_sizes,
+            "arrivals": self.arrivals,
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        return cls(**{k: v for k, v in d.items() if k in cls.__dataclass_fields__})
+
+
+PredictFn = Callable[[int], Any]
+
+
+def run_scenario(
+    spec: ScenarioSpec,
+    predict: PredictFn,
+    tracer: Tracer,
+    clock: Callable[[], float] = time.perf_counter,
+    sleep: Callable[[float], None] = time.sleep,
+) -> Dict[str, Any]:
+    """Execute a scenario and return its metrics dict.
+
+    ``clock``/``sleep`` are injectable for deterministic tests (the paper
+    allows simulated time in traces)."""
+    if spec.kind == "online":
+        return _run_online(spec, predict, tracer, clock, sleep)
+    if spec.kind == "batched":
+        return _run_batched(spec, predict, tracer, clock)
+    if spec.kind == "trace":
+        return _run_trace(spec, predict, tracer, clock, sleep)
+    raise ValueError(f"unknown scenario kind {spec.kind!r}")
+
+
+def _measure(
+    requests: Sequence[Request],
+    predict: PredictFn,
+    tracer: Tracer,
+    clock: Callable[[], float],
+    sleep: Callable[[float], None],
+    honor_arrivals: bool,
+) -> List[Dict[str, float]]:
+    """Issue requests, recording per-request service + queueing latency."""
+    results = []
+    t0 = clock()
+    for req in requests:
+        if honor_arrivals:
+            now = clock() - t0
+            if req.arrival_s > now:
+                sleep(req.arrival_s - now)
+        start = clock()
+        with tracer.span(
+            "predict", TraceLevel.MODEL, request_id=req.request_id, batch=req.batch_size
+        ):
+            predict(req.batch_size)
+        end = clock()
+        results.append(
+            {
+                "request_id": req.request_id,
+                "batch_size": req.batch_size,
+                "arrival_s": req.arrival_s,
+                "start_s": start - t0,
+                "latency_s": end - start,
+                # queueing delay: time between intended arrival and service start
+                "queue_s": max(0.0, (start - t0) - req.arrival_s),
+            }
+        )
+    return results
+
+
+def _warmup(spec: ScenarioSpec, predict: PredictFn, tracer: Tracer, batch: int) -> None:
+    for _ in range(spec.warmup):
+        with tracer.span("warmup", TraceLevel.MODEL, batch=batch):
+            predict(batch)
+
+
+def _run_online(spec, predict, tracer, clock, sleep) -> Dict[str, Any]:
+    _warmup(spec, predict, tracer, 1)
+    load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
+    with tracer.span("scenario:online", TraceLevel.MODEL, rate_hz=spec.rate_hz):
+        rows = _measure(list(load.requests()), predict, tracer, clock, sleep, True)
+    lat = [r["latency_s"] for r in rows]
+    metrics = latency_summary(lat)
+    metrics.update(
+        {
+            "scenario": "online",
+            "num_requests": len(rows),
+            "mean_queue_s": sum(r["queue_s"] for r in rows) / max(len(rows), 1),
+        }
+    )
+    return metrics
+
+
+def _run_batched(spec, predict, tracer, clock) -> Dict[str, Any]:
+    """Throughput at each batch size; max throughput + optimal batch size."""
+    batch_sizes = spec.batch_sizes or [spec.batch_size]
+    per_batch: Dict[int, Dict[str, float]] = {}
+    for bs in batch_sizes:
+        _warmup(spec, predict, tracer, bs)
+        load = BatchedLoad(spec.num_requests, bs)
+        with tracer.span("scenario:batched", TraceLevel.MODEL, batch=bs):
+            t0 = clock()
+            rows = _measure(list(load.requests()), predict, tracer, clock, time.sleep, False)
+            elapsed = clock() - t0
+        inputs = sum(r["batch_size"] for r in rows)
+        lat = [r["latency_s"] for r in rows]
+        per_batch[bs] = {
+            "throughput_ips": inputs / elapsed if elapsed > 0 else float("inf"),
+            **latency_summary(lat),
+        }
+    best_bs = max(per_batch, key=lambda b: per_batch[b]["throughput_ips"])
+    return {
+        "scenario": "batched",
+        "per_batch": {str(k): v for k, v in per_batch.items()},
+        "max_throughput_ips": per_batch[best_bs]["throughput_ips"],
+        "optimal_batch_size": best_bs,
+    }
+
+
+def _run_trace(spec, predict, tracer, clock, sleep) -> Dict[str, Any]:
+    if not spec.arrivals:
+        raise ValueError("trace scenario requires arrivals")
+    _warmup(spec, predict, tracer, spec.batch_size)
+    load = TraceReplayLoad(spec.arrivals, [spec.batch_size] * len(spec.arrivals))
+    with tracer.span("scenario:trace", TraceLevel.MODEL):
+        rows = _measure(list(load.requests()), predict, tracer, clock, sleep, True)
+    lat = [r["latency_s"] for r in rows]
+    metrics = latency_summary(lat)
+    metrics.update({"scenario": "trace", "num_requests": len(rows)})
+    return metrics

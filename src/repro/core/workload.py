@@ -1,0 +1,117 @@
+"""Workload generators (paper F7, §4.1.3).
+
+The server generates an inference request load from the benchmarking
+scenario: batched inference, or online inference with a configurable
+arrival-time distribution (e.g. Poisson). Generators are pluggable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One inference request in a generated load."""
+
+    request_id: int
+    arrival_s: float       # offset from scenario start
+    batch_size: int = 1
+    tags: Dict[str, object] = field(default_factory=dict)
+
+
+class WorkloadGenerator:
+    name = "base"
+
+    def requests(self) -> Iterator[Request]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class BatchedLoad(WorkloadGenerator):
+    """Offline/batched scenario: all requests available at t=0."""
+
+    name = "batched"
+
+    def __init__(self, num_requests: int, batch_size: int) -> None:
+        self.num_requests = num_requests
+        self.batch_size = batch_size
+
+    def requests(self) -> Iterator[Request]:
+        for i in range(self.num_requests):
+            yield Request(request_id=i, arrival_s=0.0, batch_size=self.batch_size)
+
+
+class PoissonLoad(WorkloadGenerator):
+    """Online scenario: exponential inter-arrivals at ``rate_hz`` (batch 1)."""
+
+    name = "poisson"
+
+    def __init__(self, num_requests: int, rate_hz: float, seed: int = 0) -> None:
+        if rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        self.num_requests = num_requests
+        self.rate_hz = rate_hz
+        self.seed = seed
+
+    def requests(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed)
+        t = 0.0
+        for i in range(self.num_requests):
+            t += float(rng.exponential(1.0 / self.rate_hz))
+            yield Request(request_id=i, arrival_s=t, batch_size=1)
+
+
+class UniformLoad(WorkloadGenerator):
+    """Interactive scenario: fixed-interval arrivals."""
+
+    name = "uniform"
+
+    def __init__(self, num_requests: int, interval_s: float, batch_size: int = 1) -> None:
+        self.num_requests = num_requests
+        self.interval_s = interval_s
+        self.batch_size = batch_size
+
+    def requests(self) -> Iterator[Request]:
+        for i in range(self.num_requests):
+            yield Request(
+                request_id=i, arrival_s=i * self.interval_s, batch_size=self.batch_size
+            )
+
+
+class TraceReplayLoad(WorkloadGenerator):
+    """Custom/emerging workloads: replay recorded (arrival, batch) pairs."""
+
+    name = "trace"
+
+    def __init__(self, arrivals: List[float], batch_sizes: Optional[List[int]] = None) -> None:
+        self.arrivals = list(arrivals)
+        self.batch_sizes = list(batch_sizes) if batch_sizes else [1] * len(self.arrivals)
+        if len(self.batch_sizes) != len(self.arrivals):
+            raise ValueError("arrivals and batch_sizes length mismatch")
+
+    def requests(self) -> Iterator[Request]:
+        for i, (t, b) in enumerate(zip(self.arrivals, self.batch_sizes)):
+            yield Request(request_id=i, arrival_s=float(t), batch_size=int(b))
+
+
+_GENERATORS: Dict[str, Callable[..., WorkloadGenerator]] = {
+    "batched": BatchedLoad,
+    "poisson": PoissonLoad,
+    "uniform": UniformLoad,
+    "trace": TraceReplayLoad,
+}
+
+
+def register_generator(name: str, factory: Callable[..., WorkloadGenerator]) -> None:
+    """Pluggable workload generators (§1)."""
+    _GENERATORS[name] = factory
+
+
+def make_generator(name: str, **kwargs) -> WorkloadGenerator:
+    try:
+        return _GENERATORS[name](**kwargs)
+    except KeyError:
+        raise KeyError(f"unknown workload generator {name!r}; have {sorted(_GENERATORS)}")

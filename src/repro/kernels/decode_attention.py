@@ -1,0 +1,130 @@
+"""Pallas TPU decode attention: one new token vs a (ring-buffered) KV cache.
+
+Grid = (batch, q_heads, kv_blocks); the kv dimension is innermost and
+sequential so the online-softmax state persists in VMEM scratch (flash-
+decode structure — on TPU the kv blocks stream HBM→VMEM at full bandwidth,
+which is the roofline of decode). Per-batch ``lengths`` arrive as a
+scalar-prefetch operand so the mask needs no HBM traffic; an optional
+window re-creates the ring-cache semantics of long-context serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    lens_ref,                  # scalar prefetch: (b,) int32 valid lengths
+    w_ref,                     # scalar prefetch: (1,) int32 window (0 = none)
+    q_ref,                     # (1, 1, 1, d)
+    k_ref, v_ref,              # (1, block_s, 1, d)
+    o_ref,                     # (1, 1, 1, d)
+    m_ref, l_ref, acc_ref,     # VMEM scratch
+    *,
+    softcap: float,
+    block_s: int,
+    S: int,
+    scale: float,
+):
+    bi = pl.program_id(0)
+    sj = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0, :]                                   # (d,)
+    k = k_ref[0, :, 0, :]                                   # (bs, d)
+    v = v_ref[0, :, 0, :]
+    length = lens_ref[bi]
+    k_pos = sj * block_s + jax.lax.iota(jnp.int32, block_s)
+    valid = (k_pos < length) & (k_pos < S)
+    w = w_ref[0]
+    valid &= jnp.where(w > 0, k_pos >= length - w, True)
+    v = jnp.where(valid[:, None], v, 0.0)
+    s = jnp.sum(
+        q[None, :].astype(jnp.float32) * k.astype(jnp.float32), axis=-1
+    ) * scale                                               # (bs,)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (bs,)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    m_ref[0] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.sum(
+        p[:, None].astype(jnp.float32) * v.astype(jnp.float32), axis=0
+    )[None]
+
+    @pl.when(sj == ns - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-37)
+        o_ref[0, 0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (b, 1, h, d)
+    k_cache: jnp.ndarray,      # (b, S, kvh, d)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,      # (b,) int32
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    block_s: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    block_s = min(block_s, S)
+    ns = pl.cdiv(S, block_s)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    wval = jnp.asarray([0], jnp.int32) if window is None else jnp.asarray(
+        [window], jnp.int32
+    ).reshape((1,))
+
+    kernel = functools.partial(
+        _kernel, softcap=float(softcap), block_s=block_s, S=S, scale=float(scale)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, sj, lens, w: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, hi, sj, lens, w: (bi, sj, hi // rep, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, hi, sj, lens, w: (bi, sj, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, d), lambda bi, hi, sj, lens, w: (bi, 0, hi, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), wval, q, k_cache, v_cache)

@@ -1,0 +1,389 @@
+"""Kernel dispatch layer.
+
+Models call these ops with a ``backend`` string:
+
+* ``ref``    — the naive oracles in :mod:`.ref` (correct, memory-hungry).
+* ``flash``  — chunked/online pure-JAX implementations (memory-efficient,
+               lowers on any backend; the dry-run default — mirrors the
+               Pallas kernels' blocking so the compiled memory behaviour is
+               representative of the TPU target).
+* ``pallas`` — the Pallas TPU kernels (``interpret=True`` on CPU for tests).
+
+All ops are shape/dtype-polymorphic and jit-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+DEFAULT_BACKEND = "flash"
+NEG_INF = ref.NEG_INF
+
+
+def _soft_cap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill)
+# ---------------------------------------------------------------------------
+def _kv_blocks(t: jnp.ndarray, block_k: int):
+    """(b, sk, kvh, d) -> (nblk, b, block_k, kvh, d) with zero padding."""
+    b, sk, kvh, d = t.shape
+    nblk = (sk + block_k - 1) // block_k
+    pad = nblk * block_k - sk
+    if pad:
+        t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return jnp.moveaxis(t.reshape(b, nblk, block_k, kvh, d), 1, 0)
+
+
+def _block_mask(j, block_k, sk, q_pos, causal, window):
+    k_pos = j * block_k + jnp.arange(block_k)
+    mask = k_pos[None, :] < sk
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return mask                                             # (sq, block_k)
+
+
+def _flash_fwd_core(q, k, v, causal, window, softcap, q_offset, block_k, scale):
+    """Returns (out (b,sq,h,d), m, l with shape (b,kvh,rep,sq) fp32)."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kb = _kv_blocks(k, block_k)
+    vb = _kv_blocks(v, block_k)
+    nblk = kb.shape[0]
+    qr = q.reshape(b, sq, kvh, rep, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        j, k_j, v_j = inputs
+        s = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qr, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        s = _soft_cap(s, softcap)
+        mask = _block_mask(j, block_k, sk, q_pos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_j = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_j)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bgrqk,bkgd->bqgrd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, rep, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (jnp.arange(nblk), kb, vb))
+    l = jnp.maximum(l, 1e-37)
+    out = (acc / jnp.moveaxis(l, 3, 1)[..., None]).reshape(b, sq, h, d)
+    return out.astype(q.dtype), m, l
+
+
+def _flash_bwd_core(
+    q, k, v, o, m, l, do, causal, window, softcap, q_offset, block_k, scale
+):
+    """True flash backward: recompute P per KV block (no saved scores)."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kb = _kv_blocks(k, block_k)
+    vb = _kv_blocks(v, block_k)
+    nblk = kb.shape[0]
+    qr = q.reshape(b, sq, kvh, rep, d)
+    dor = do.reshape(b, sq, kvh, rep, d)
+    q_pos = q_offset + jnp.arange(sq)
+    # D = rowsum(dO * O): (b, kvh, rep, sq)
+    D = jnp.moveaxis(
+        jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        .reshape(b, sq, kvh, rep),
+        1, 3,
+    )
+
+    def step(dq, inputs):
+        j, k_j, v_j = inputs
+        s = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qr, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        sc = _soft_cap(s, softcap)
+        mask = _block_mask(j, block_k, sk, q_pos, causal, window)
+        sc_masked = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jnp.exp(sc_masked - m[..., None]) / l[..., None]    # (b,g,r,sq,bk)
+        dv_j = jnp.einsum(
+            "bgrqk,bqgrd->bkgd", p.astype(do.dtype), dor,
+            preferred_element_type=jnp.float32,
+        )
+        dp = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", dor, v_j, preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - D[..., None])
+        if softcap > 0:
+            ds = ds * (1.0 - jnp.square(sc / softcap))
+        ds = jnp.where(mask[None, None, None], ds, 0.0) * scale
+        dsl = ds.astype(q.dtype)
+        dq = dq + jnp.einsum(
+            "bgrqk,bkgd->bqgrd", dsl, k_j, preferred_element_type=jnp.float32
+        )
+        dk_j = jnp.einsum(
+            "bgrqk,bqgrd->bkgd", dsl, qr.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, kvh, rep, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (jnp.arange(nblk), kb, vb))
+    dq = dq.reshape(b, sq, h, d).astype(q.dtype)
+
+    def unblock(t):  # (nblk, b, block_k, kvh, d) -> (b, sk, kvh, d)
+        t = jnp.moveaxis(t, 0, 1).reshape(b, nblk * block_k, kvh, d)
+        return t[:, :sk]
+
+    dk = unblock(dks).astype(k.dtype)
+    dv = unblock(dvs).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_vjp(causal, windowed, softcap, q_offset, block_k, scale_key):
+    """custom_vjp instance per static-option set (window passed as operand)."""
+
+    @jax.custom_vjp
+    def fa(q, k, v, window):
+        out, _, _ = _flash_fwd_core(
+            q, k, v, causal, window if windowed else None, softcap,
+            q_offset, block_k, scale_key,
+        )
+        return out
+
+    def fwd(q, k, v, window):
+        out, m, l = _flash_fwd_core(
+            q, k, v, causal, window if windowed else None, softcap,
+            q_offset, block_k, scale_key,
+        )
+        return out, (q, k, v, window, out, m, l)
+
+    def bwd(res, do):
+        q, k, v, window, out, m, l = res
+        dq, dk, dv = _flash_bwd_core(
+            q, k, v, out, m, l, do, causal, window if windowed else None,
+            softcap, q_offset, block_k, scale_key,
+        )
+        return dq, dk, dv, None
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,          # (b, sq, h, d)
+    k: jnp.ndarray,          # (b, sk, kvh, d)
+    v: jnp.ndarray,          # (b, sk, kvh, d)
+    *,
+    causal: bool = True,
+    window=None,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    block_k: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanned over KV blocks, O(sq) memory, with a
+    true flash ``custom_vjp`` (backward recomputes scores blockwise — nothing
+    quadratic is ever saved)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    block_k = min(block_k, sk)
+    windowed = window is not None
+    fa = _flash_vjp(causal, windowed, float(softcap), int(q_offset), int(block_k), float(scale))
+    wval = jnp.asarray(window, jnp.int32) if windowed else jnp.int32(0)
+    return fa(q, k, v, wval)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    if backend == "ref":
+        return ref.attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale,
+        )
+    if backend == "flash":
+        return flash_attention_jnp(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, block_k=block_k, scale=scale,
+        )
+    if backend == "pallas":
+        from . import flash_attention as fa  # lazy: pallas import cost
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale,
+        )
+    raise ValueError(f"unknown attention backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs KV cache)
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+) -> jnp.ndarray:
+    if backend == "pallas":
+        from . import decode_attention as da
+
+        return da.decode_attention(
+            q, k_cache, v_cache, lengths, softcap=softcap, window=window, scale=scale
+        )
+    # ref and flash share the same (already memory-light) computation
+    return ref.decode_attention(
+        q, k_cache, v_cache, lengths, softcap=softcap, window=window, scale=scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm(
+    x: jnp.ndarray,
+    weight: jnp.ndarray,
+    eps: float = 1e-6,
+    *,
+    backend: str = DEFAULT_BACKEND,
+) -> jnp.ndarray:
+    if backend == "pallas":
+        from . import rmsnorm as rn
+
+        return rn.rmsnorm(x, weight, eps=eps)
+    return ref.rmsnorm(x, weight, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+def ssd_chunked_jnp(
+    x: jnp.ndarray,       # (b, s, h, p)
+    dt: jnp.ndarray,      # (b, s, h)
+    A: jnp.ndarray,       # (h,)
+    B: jnp.ndarray,       # (b, s, n)
+    C: jnp.ndarray,       # (b, s, n)
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Chunked state-space duality: quadratic intra-chunk attention-like
+    computation + linear inter-chunk recurrence (the Mamba-2 algorithm),
+    scanned over chunks so peak memory is O(chunk^2) not O(s^2)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    nchunk = (s + chunk - 1) // chunk
+    pad = nchunk * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def to_chunks(t):  # (b, s, ...) -> (nchunk, b, chunk, ...)
+        return jnp.moveaxis(t.reshape((b, nchunk, chunk) + t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xf), to_chunks(dtf), to_chunks(Bf), to_chunks(Cf))
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(S, inputs):
+        x_c, dt_c, B_c, C_c = inputs                 # (b, chunk, ...)
+        a = dt_c * Af[None, None, :]                 # (b, chunk, h)  log decays
+        cum = jnp.cumsum(a, axis=1)                  # inclusive
+        # intra-chunk: y[q] += C_q · sum_{k<=q} exp(cum_q - cum_k) dt_k x_k B_k
+        decay_qk = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (b, q, k, h)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay_qk = jnp.where(causal[None, :, :, None], decay_qk, 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", C_c, B_c)                      # (b, q, k)
+        y_intra = jnp.einsum("bqk,bqkh,bkh,bkhp->bqhp", cb, decay_qk, dt_c, x_c)
+        # inter-chunk: contribution of carried state
+        decay_q = jnp.exp(cum)                                         # (b, q, h)
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", C_c, S, decay_q)
+        # state update: S' = exp(sum a) S + sum_k exp(cum_last - cum_k) dt_k x_k B_k
+        chunk_decay = jnp.exp(cum[:, -1, :])                           # (b, h)
+        decay_k = jnp.exp(cum[:, -1, None, :] - cum)                   # (b, k, h)
+        dS = jnp.einsum("bkh,bkh,bkhp,bkn->bhpn", decay_k, dt_c, x_c, B_c)
+        S_new = chunk_decay[:, :, None, None] * S + dS
+        return S_new, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunk * chunk, h, p)[:, :s]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state.astype(x.dtype)
+    return y
+
+
+def ssd(
+    x, dt, A, B, C, *,
+    chunk: int = 64,
+    initial_state=None,
+    return_state: bool = False,
+    backend: str = DEFAULT_BACKEND,
+):
+    if backend == "ref":
+        return ref.ssd(x, dt, A, B, C, initial_state=initial_state, return_state=return_state)
+    if backend == "flash":
+        return ssd_chunked_jnp(
+            x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+            return_state=return_state,
+        )
+    if backend == "pallas":
+        from . import ssd_scan
+
+        return ssd_scan.ssd(
+            x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+            return_state=return_state,
+        )
+    raise ValueError(f"unknown ssd backend {backend!r}")
+
+
+def ssd_step(x, dt, A, B, C, state, *, backend: str = DEFAULT_BACKEND):
+    """Decode step — shared implementation (already O(1) in seq)."""
+    return ref.ssd_step(x, dt, A, B, C, state)

@@ -1,0 +1,174 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantic ground truth: naive, memory-hungry, but obviously
+correct. Pallas kernels (and the chunked/flash pure-JAX implementations in
+``ops.py``) are validated against these in tests across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _soft_cap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def repeat_kv(k: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """Expand (b, s, kvh, d) -> (b, s, h, d) for GQA."""
+    b, s, kvh, d = k.shape
+    if kvh == num_q_heads:
+        return k
+    reps = num_q_heads // kvh
+    return jnp.repeat(k, reps, axis=2)
+
+
+def attention(
+    q: jnp.ndarray,          # (b, sq, h, d)
+    k: jnp.ndarray,          # (b, sk, kvh, d)
+    v: jnp.ndarray,          # (b, sk, kvh, d)
+    *,
+    causal: bool = True,
+    window=None,              # None = unlimited; int or traced scalar window
+    softcap: float = 0.0,
+    q_offset: int = 0,        # absolute position of q[0] (for cached decode)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive full-materialization GQA attention oracle. Returns (b, sq, h, d)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    scores = _soft_cap(scores, softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]          # (sq, 1)
+    k_pos = jnp.arange(sk)[None, :]                      # (1, sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,           # (b, 1, h, d) — one new token
+    k_cache: jnp.ndarray,     # (b, S, kvh, d)
+    v_cache: jnp.ndarray,     # (b, S, kvh, d)
+    lengths: jnp.ndarray,     # (b,) valid cache lengths (incl. the new token)
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode attention vs a (possibly ring-buffered) cache.
+
+    Grouped-einsum form (no ``repeat_kv`` materialization): the cache keeps
+    its native layout/sharding — with a seq-sharded cache GSPMD computes
+    partial softmax stats per shard instead of regathering the cache.
+    """
+    b, _, h, d = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, 1, kvh, rep, d)
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                            # (b, kvh, rep, 1, S)
+    scores = _soft_cap(scores, softcap)
+    k_pos = jnp.arange(S)[None, None, None, None, :]
+    valid = k_pos < lengths[:, None, None, None, None]
+    if window is not None:
+        valid &= k_pos >= (lengths[:, None, None, None, None] - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bgrqk,bkgd->bqgrd", probs.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm oracle: x * w / sqrt(mean(x^2) + eps), stats in fp32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssd(
+    x: jnp.ndarray,       # (b, s, h, p)  inner activations split into heads
+    dt: jnp.ndarray,      # (b, s, h)     softplus'd time deltas (>0)
+    A: jnp.ndarray,       # (h,)          negative decay rates (A < 0)
+    B: jnp.ndarray,       # (b, s, n)     input projection (single group)
+    C: jnp.ndarray,       # (b, s, n)     output projection
+    *,
+    initial_state: Optional[jnp.ndarray] = None,   # (b, h, p, n)
+    return_state: bool = False,
+) -> jnp.ndarray:
+    """Mamba-2 SSD oracle: sequential recurrence over time (fp32).
+
+        S_t = exp(dt_t * A) * S_{t-1} + dt_t * x_t B_t^T
+        y_t = S_t C_t
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    decay = jnp.exp(dtf * Af[None, None, :])                    # (b, s, h)
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(S, inputs):
+        x_t, dt_t, dec_t, B_t, C_t = inputs
+        # dB: (b, h, p, n) = dt * x outer B
+        dB = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        S = dec_t[..., None, None] * S + dB
+        y = jnp.einsum("bhpn,bn->bhp", S, C_t)
+        return S, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),       # (s, b, h, p)
+        jnp.moveaxis(dtf, 1, 0),      # (s, b, h)
+        jnp.moveaxis(decay, 1, 0),    # (s, b, h)
+        jnp.moveaxis(Bf, 1, 0),       # (s, b, n)
+        jnp.moveaxis(Cf, 1, 0),       # (s, b, n)
+    )
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                  # (b, s, h, p)
+    if return_state:
+        return y, final_state.astype(x.dtype)
+    return y
+
+
+def ssd_step(
+    x: jnp.ndarray,       # (b, h, p)
+    dt: jnp.ndarray,      # (b, h)
+    A: jnp.ndarray,       # (h,)
+    B: jnp.ndarray,       # (b, n)
+    C: jnp.ndarray,       # (b, n)
+    state: jnp.ndarray,   # (b, h, p, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step of the SSD recurrence. Returns (y, new_state)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32)[None, :])        # (b, h)
+    dB = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, B.astype(jnp.float32))
+    new_state = dec[..., None, None] * state.astype(jnp.float32) + dB
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y.astype(x.dtype), new_state.astype(state.dtype)

@@ -1,0 +1,107 @@
+"""Subprocess agent: one MLModelScope agent per process over a JSON-line
+socket protocol (the offline stand-in for the paper's gRPC agent service).
+
+Protocol (newline-delimited JSON over TCP):
+
+    -> {"method": "Open",    "params": {...OpenRequest-ish...}}
+    <- {"ok": true, "result": {...}}
+    -> {"method": "Predict", "params": {"request": {...EvaluationRequest...}}}
+    <- {"ok": true, "result": {...metrics...}}
+    -> {"method": "Close"}
+
+Semantically the same 3-call interface as Listing 3/4; heartbeats renew the
+registry lease file so the server can detect dead agents.
+
+    PYTHONPATH=src python -m repro.launch.agent_main --port 7071 --backend ref
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socketserver
+import threading
+import time
+
+from ..core.agent import Agent, EvaluationRequest
+from ..core.evaldb import EvalDB
+from ..core.platform import builtin_manifests
+from ..core.registry import KVStore, Registry
+from ..core.tracing import TracingServer
+
+
+def make_agent(backend: str, registry_file: str = "") -> Agent:
+    store = KVStore()
+    if registry_file:
+        try:
+            store.load(registry_file)
+        except FileNotFoundError:
+            pass
+    registry = Registry(store)
+    agent = Agent(
+        backend=backend,
+        registry=registry,
+        tracing_server=TracingServer(),
+        evaldb=EvalDB(),
+    )
+    agent.register_models(builtin_manifests(reduced=True))
+    if registry_file:
+        store.dump(registry_file)
+
+        def heartbeat() -> None:
+            while True:
+                time.sleep(Registry.AGENT_TTL / 3)
+                agent.heartbeat()
+                store.dump(registry_file)
+
+        threading.Thread(target=heartbeat, daemon=True).start()
+    return agent
+
+
+class Handler(socketserver.StreamRequestHandler):
+    def handle(self) -> None:
+        agent: Agent = self.server.agent  # type: ignore[attr-defined]
+        for line in self.rfile:
+            try:
+                msg = json.loads(line)
+                method = msg.get("method")
+                if method == "Predict":
+                    req = EvaluationRequest.from_dict(msg["params"]["request"])
+                    result = agent.evaluate(req)
+                    resp = {"ok": True, "result": result}
+                elif method == "Heartbeat":
+                    resp = {"ok": agent.heartbeat()}
+                elif method == "Info":
+                    resp = {"ok": True, "result": {
+                        "agent_id": agent.agent_id,
+                        "backend": agent.backend,
+                        "models": sorted(agent.manifests),
+                    }}
+                elif method == "Close":
+                    resp = {"ok": True}
+                    self.wfile.write((json.dumps(resp) + "\n").encode())
+                    return
+                else:
+                    resp = {"ok": False, "error": f"unknown method {method!r}"}
+            except Exception as e:  # noqa: BLE001
+                resp = {"ok": False, "error": str(e)}
+            self.wfile.write((json.dumps(resp) + "\n").encode())
+            self.wfile.flush()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7071)
+    ap.add_argument("--backend", default="ref")
+    ap.add_argument("--registry-file", default="")
+    args = ap.parse_args(argv)
+    agent = make_agent(args.backend, args.registry_file)
+    with socketserver.ThreadingTCPServer((args.host, args.port), Handler) as srv:
+        srv.agent = agent  # type: ignore[attr-defined]
+        print(f"[agent] {agent.agent_id} serving on {args.host}:{args.port}")
+        srv.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

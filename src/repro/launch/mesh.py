@@ -1,0 +1,32 @@
+"""Production mesh definition.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The single-pod mesh is 16×16 = 256 chips
+(data × model); the multi-pod mesh adds a leading pod axis (2 pods = 512
+chips). Batch-like dimensions shard over ("pod","data"); tensor-parallel
+dimensions over "model" (intra-pod ICI); only data-parallel gradient
+reductions cross the pod boundary (DCI) — the standard hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke paths (axis sizes 1)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(f"{mesh.shape[a]}" for a in mesh.axis_names)

@@ -1,0 +1,148 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSON.
+
+    PYTHONPATH=src python -m repro.launch.report --results results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+from ..configs import SHAPES, list_archs
+
+GB = 2 ** 30
+
+
+def load_cells(results_dir: str) -> List[Dict[str, Any]]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_bytes(b) -> str:
+    return f"{b / GB:.2f}"
+
+
+def dryrun_table(cells: List[Dict[str, Any]], mesh: str) -> str:
+    rows = [
+        "| arch | shape | status | peak GiB/dev | TPU-est GiB | HLO GFLOPs/dev | HBM GB/dev | coll GB/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(list_archs())}
+    sorted_cells = sorted(
+        (c for c in cells if c["mesh"] == mesh or (c["status"] == "skip" and c.get("mesh") == mesh)),
+        key=lambda c: (order.get(c["arch"], 99), list(SHAPES).index(c["shape"])),
+    )
+    for c in sorted_cells:
+        if c["status"] == "skip":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP (full-attn @500k) | – | – | – | – | – | – |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | – | – | – | – | – | – |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        est = m.get("tpu_estimate_bytes")
+        colls = ", ".join(
+            f"{k}×{v}" for k, v in sorted(r["collective_count"].items())
+        ) or "none"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok | {_fmt_bytes(m['peak_per_device_bytes'])} "
+            f"| {_fmt_bytes(est) if est else '–'} "
+            f"| {r['flops_per_device'] / 1e9:.1f} | {r['memory_bytes_per_device'] / 1e9:.1f} "
+            f"| {r['collective_bytes_per_device'] / 1e9:.2f} | {colls} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(cells: List[Dict[str, Any]]) -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | roofline frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(list_archs())}
+    for c in sorted(
+        (c for c in cells if c["mesh"] == "16x16"),
+        key=lambda c: (order.get(c["arch"], 99), list(SHAPES).index(c["shape"])),
+    ):
+        if c["status"] == "skip":
+            rows.append(f"| {c['arch']} | {c['shape']} | – | – | – | SKIP | – | – | – | full-attention arch at 500k decode |")
+            continue
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        hint = _bottleneck_hint(c)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_term_s']:.4f} | {r['memory_term_s']:.4f} "
+            f"| {r['collective_term_s']:.4f} | **{r['dominant']}** | {r['model_flops']:.3g} "
+            f"| {r['model_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | {hint} |"
+        )
+    return "\n".join(rows)
+
+
+def _bottleneck_hint(c: Dict[str, Any]) -> str:
+    r = c["roofline"]
+    dom = r["dominant"]
+    kind = c.get("kind", "")
+    if dom == "collective":
+        big = max(r["by_collective"], key=r["by_collective"].get) if r["by_collective"] else "?"
+        return f"cut {big} volume (sharding/overlap); biggest contributor {big}"
+    if dom == "memory":
+        if kind == "decode":
+            return "decode is KV-cache-bandwidth bound; shrink cache dtype/window or raise batch"
+        return "fuse attention HBM traffic into the Pallas kernel (q/acc stay in VMEM); trim fp32 remat copies"
+    return "increase per-chip matmul utilization (larger microbatch / less remat recompute)"
+
+
+def perf_section(results_dir: str) -> str:
+    path = os.path.join(results_dir, "..", "perf_log.json")
+    if not os.path.exists(path):
+        return "_Perf iteration log pending (see §Perf below)._"
+    with open(path) as f:
+        log = json.load(f)
+    out = []
+    for entry in log:
+        out.append(
+            f"**{entry['cell']}** — {entry['hypothesis']}\n\n"
+            f"- change: {entry['change']}\n"
+            f"- before: {entry['before']}\n"
+            f"- after: {entry['after']}\n"
+            f"- verdict: {entry['verdict']}\n"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.results)
+    parts = [
+        "## §Dry-run — single-pod mesh 16x16 (256 chips)",
+        "",
+        dryrun_table(cells, "16x16"),
+        "",
+        "## §Dry-run — multi-pod mesh 2x16x16 (512 chips)",
+        "",
+        dryrun_table(cells, "2x16x16"),
+        "",
+        "## §Roofline — per (arch × shape), single-pod",
+        "",
+        roofline_table(cells),
+    ]
+    text = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

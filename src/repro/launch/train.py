@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+Runs real optimization steps on the host devices (CPU here; the same code
+jits onto a TPU mesh — shardings come from the same rules as the dry-run).
+Demonstrates the full fault-tolerant loop: RecordIO/synthetic data with
+cursor resume, atomic checkpoints, checkpoint-restart, loss logging into
+the platform's evaluation database.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --reduced \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..core.evaldb import EvalDB, EvaluationRecord
+from ..models import build_model
+from ..train.checkpoint import CheckpointManager
+from ..train.data import SyntheticTokenDataset, make_loader
+from ..train.optimizer import OptimizerConfig, init_opt_state
+from ..train.step import make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--backend", default="flash")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--evaldb", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg, backend=args.backend)
+    opt_cfg = OptimizerConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 20, 1), total_steps=args.steps
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt_state(model.param_defs(), opt_cfg)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params:,} params")
+
+    start_step, cursor = 0, 0
+    mgr: Optional[CheckpointManager] = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if args.resume and mgr.latest_step() is not None:
+            params, opt_state, meta = mgr.restore(
+                params_template=params, opt_template=opt_state
+            )
+            start_step = int(meta["step"])
+            cursor = int(meta.get("data_cursor", 0))
+            print(f"[train] resumed from step {start_step} (cursor {cursor})")
+
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, microbatches=args.microbatches, remat=True)
+    )
+    data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=0)
+    loader = make_loader(data, args.batch, skip=cursor)
+    db = EvalDB(args.evaldb) if args.evaldb else None
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start_step, args.steps):
+        cursor, batch = next(loader)
+        jbatch = {"tokens": jnp.asarray(batch["tokens"])}
+        if cfg.family == "encdec":
+            jbatch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+        params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if (step + 1) % args.log_every == 0:
+            dt = time.perf_counter() - t0
+            tps = args.batch * args.seq * args.log_every / dt
+            print(
+                f"[train] step {step+1:5d} loss={loss:.4f} "
+                f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                f"tok/s={tps:,.0f}"
+            )
+            t0 = time.perf_counter()
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            path = mgr.save(step + 1, params, opt_state, extra={"data_cursor": cursor})
+            print(f"[train] checkpoint -> {path}")
+    if db is not None:
+        db.insert(
+            EvaluationRecord(
+                model=cfg.name, model_version="1.0.0", backend=args.backend,
+                backend_version="1.0.0", system="local", scenario="train",
+                batch_size=args.batch, trace_level="NONE", agent_id="train-driver",
+                metrics={"final_loss": losses[-1], "first_loss": losses[0]},
+            )
+        )
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,15 @@
+from .config import ArchConfig
+from .lm import BaseModel, DecoderLM, EncDecLM, build_model
+from .params import P, count_params, init_params, param_specs
+
+__all__ = [
+    "ArchConfig",
+    "BaseModel",
+    "DecoderLM",
+    "EncDecLM",
+    "P",
+    "build_model",
+    "count_params",
+    "init_params",
+    "param_specs",
+]

@@ -1,0 +1,462 @@
+"""Block-level model components, functional style.
+
+Every component provides ``*_defs(cfg, Lp)`` (a :class:`~repro.models.params.P`
+tree, optionally stacked with leading dims ``Lp`` for scan-over-layers) and
+apply functions for the full-sequence (train/prefill) and single-token
+(decode) paths. All attention/SSD math routes through
+:mod:`repro.kernels.ops` so the kernel backend is selectable per evaluation
+(the platform's "framework" axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding.specs import opt_enabled, shard_act
+from .config import ArchConfig
+from .params import P
+
+
+# ---------------------------------------------------------------------------
+# Positional embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (b, s, h, d); positions: (s,) or (b, s)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)   # (half,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs           # (b, s, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embedding. positions: (s,) -> (s, D)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Norm + MLP
+# ---------------------------------------------------------------------------
+def norm_defs(cfg: ArchConfig, Lp: Tuple[int, ...]) -> P:
+    return P(Lp + (cfg.d_model,), "zeros", axes=_ax(Lp) + ("embed",))
+
+
+def _ax(Lp: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    return ("layer",) * len(Lp)
+
+
+def mlp_defs(
+    cfg: ArchConfig, Lp: Tuple[int, ...], gated: bool = True, d_ff: int = 0
+) -> Dict[str, P]:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    std_in = 0.02
+    std_out = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    la = _ax(Lp)
+    defs = {
+        "w_up": P(Lp + (D, F), std=std_in, axes=la + ("embed", "ffn")),
+        "w_down": P(Lp + (F, D), std=std_out, axes=la + ("ffn", "embed")),
+    }
+    if gated:
+        defs["w_gate"] = P(Lp + (D, F), std=std_in, axes=la + ("embed", "ffn"))
+    return defs
+
+
+def mlp_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attn_defs(cfg: ArchConfig, Lp: Tuple[int, ...], cross: bool = False) -> Dict[str, P]:
+    D, H, KV, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    std_in = 0.02
+    std_out = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    la = _ax(Lp)
+    defs = {
+        "wq": P(Lp + (D, H, dh), std=std_in, axes=la + ("embed", "heads", "head_dim")),
+        "wk": P(Lp + (D, KV, dh), std=std_in, axes=la + ("embed", "kv", "head_dim")),
+        "wv": P(Lp + (D, KV, dh), std=std_in, axes=la + ("embed", "kv", "head_dim")),
+        "wo": P(Lp + (H, dh, D), std=std_out, axes=la + ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = P(Lp + (dh,), "zeros", axes=la + ("head_dim",))
+        defs["k_norm"] = P(Lp + (dh,), "zeros", axes=la + ("head_dim",))
+    return defs
+
+
+def _project_qkv(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: Optional[jnp.ndarray],
+    backend: str,
+    kv_from: Optional[jnp.ndarray] = None,
+):
+    """Project q (from x) and k/v (from kv_from or x); apply qk-norm + RoPE."""
+    src = x if kv_from is None else kv_from
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "q_norm" in p:
+        q = ops.rmsnorm(q, p["q_norm"], cfg.norm_eps, backend=backend)
+        k = ops.rmsnorm(k, p["k_norm"], cfg.norm_eps, backend=backend)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_positions = positions if kv_from is None else jnp.arange(src.shape[1])
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_full(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                       # (b, s, D)
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    causal: bool = True,
+    window=None,
+    use_rope: bool = True,
+    kv_from: Optional[jnp.ndarray] = None,   # cross-attention source
+    q_offset: int = 0,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    positions = (q_offset + jnp.arange(s)) if use_rope else None
+    q, k, v = _project_qkv(p, x, cfg, positions, backend, kv_from)
+    if opt_enabled("gather_kv_once"):
+        # with a seq-sharded residual (SP), K/V inherit the seq sharding and
+        # the flash KV-block scan would all-gather them once PER BLOCK;
+        # constraining them seq-replicated here gathers once per layer
+        k = shard_act(k, ("batch", None, "act_kv", None))
+        v = shard_act(v, ("batch", None, "act_kv", None))
+    out = ops.attention(
+        q, k, v,
+        causal=causal and kv_from is None,
+        window=window,
+        softcap=cfg.attn_softcap,
+        q_offset=q_offset,
+        backend=backend,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(
+    p: Dict[str, jnp.ndarray],
+    x1: jnp.ndarray,                      # (b, 1, D) — one new token
+    k_cache: jnp.ndarray,                 # (b, S, kv, dh)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,                     # (b,) absolute position of the new token
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    window=None,
+    use_rope: bool = True,
+    ring: bool = False,                   # ring-buffer cache (windowed long context)
+    uniform_pos: bool = True,             # all rows share one decode position
+):
+    """Single-token attention against a KV cache; returns (y, k_cache, v_cache)."""
+    b = x1.shape[0]
+    S = k_cache.shape[1]
+    positions = pos[:, None] if use_rope else None
+    q, k, v = _project_qkv(p, x1, cfg, positions, backend)
+    slot = (pos % S) if ring else pos
+    if uniform_pos:
+        # dynamic-update-slice at a scalar offset: GSPMD partitions it on any
+        # cache sharding AND XLA aliases it in-place inside the layer scan
+        # (no second cache buffer). Batched serving left-pads so positions
+        # are uniform; ragged continuous batching uses the masked path below.
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[:, :1].astype(k_cache.dtype), (0, slot[0], 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[:, :1].astype(v_cache.dtype), (0, slot[0], 0, 0)
+        )
+    else:
+        # masked (elementwise) update: GSPMD-native for per-row positions
+        sel = (jnp.arange(S)[None, :] == slot[:, None])[:, :, None, None]
+        k_cache = jnp.where(sel, k[:, :1].astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(sel, v[:, :1].astype(v_cache.dtype), v_cache)
+    lengths = jnp.minimum(pos + 1, S) if ring else pos + 1
+    out = ops.decode_attention(
+        q, k_cache, v_cache, lengths,
+        softcap=cfg.attn_softcap,
+        window=window if not ring else None,   # ring cache is already windowed
+        backend=backend,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, k_cache, v_cache
+
+
+def cross_attn_decode(
+    p: Dict[str, jnp.ndarray],
+    x1: jnp.ndarray,                      # (b, 1, D)
+    k_cross: jnp.ndarray,                 # (b, Se, kv, dh) — precomputed at prefill
+    v_cross: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    backend: str,
+):
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    Se = k_cross.shape[1]
+    lengths = jnp.full((x1.shape[0],), Se, jnp.int32)
+    out = ops.decode_attention(q, k_cross, v_cross, lengths, backend=backend)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+def moe_defs(cfg: ArchConfig, Lp: Tuple[int, ...]) -> Dict[str, P]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    std_in = 0.02
+    std_out = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    la = _ax(Lp)
+    # experts shard the model axis (EP); the per-expert FFN dim stays local
+    # ("expert_ffn" -> None) so specs never map one mesh axis twice.
+    return {
+        "router": P(Lp + (D, E), std=std_in, axes=la + ("embed", None)),
+        "w_gate": P(Lp + (E, D, F), std=std_in, axes=la + ("experts", "embed", "expert_ffn")),
+        "w_up": P(Lp + (E, D, F), std=std_in, axes=la + ("experts", "embed", "expert_ffn")),
+        "w_down": P(Lp + (E, F, D), std=std_out, axes=la + ("experts", "expert_ffn", "embed")),
+    }
+
+
+def _positions_in_expert(eid: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Per-token rank within its expert's queue. eid: (n,) -> (n,)."""
+    n = eid.shape[0]
+    order = jnp.argsort(eid, stable=True)
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    sorted_eid = eid[order]
+    seg_starts = jnp.searchsorted(sorted_eid, jnp.arange(num_experts, dtype=eid.dtype))
+    return ranks - seg_starts[eid].astype(jnp.int32)
+
+
+def moe_apply(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                       # (b, s, D)
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k routing with scatter dispatch (no (T,E,C) one-hot).
+
+    Groups = batch rows; per-group capacity C = cf * s * k / E. Tokens over
+    capacity are dropped (standard Switch behaviour). Returns (out, aux_loss).
+    """
+    b, s, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = max(int(cfg.capacity_factor * s * K / E), 1)
+    C = min(C, s * K)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, K)                     # (b, s, K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))                                # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (b * s * K)
+    aux = E * jnp.sum(me * ce)
+
+    if s == 1 and opt_enabled("moe_decode_gather"):
+        # decode fast path: compute ONLY the selected experts by gathering
+        # their weights (K·D·F reads per token instead of running every
+        # expert over mostly-empty capacity slots)
+        sel = idx[:, 0]                                          # (b, K)
+        xt = x[:, 0]                                             # (b, D)
+        wg = p["w_gate"][sel]                                    # (b, K, D, F)
+        wu = p["w_up"][sel]
+        wd = p["w_down"][sel]                                    # (b, K, F, D)
+        hg = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xt, wg))
+        hu = jnp.einsum("bd,bkdf->bkf", xt, wu)
+        expert_out = jnp.einsum("bkf,bkfd->bkd", hg * hu, wd)    # (b, K, D)
+        comb = jnp.einsum("bkd,bk->bd", expert_out, weights[:, 0].astype(expert_out.dtype))
+        return comb[:, None, :].astype(x.dtype), aux
+
+    eid = idx.reshape(b, s * K).astype(jnp.int32)               # (b, n) slots
+    pos = jax.vmap(lambda e: _positions_in_expert(e, E))(eid)   # (b, n)
+    x_slots = jnp.broadcast_to(x[:, :, None, :], (b, s, K, D)).reshape(b, s * K, D)
+
+    # dispatch: (b, E, C, D); slots with pos >= C are dropped.
+    # The scatter runs with E *unsharded* (batch-sharded buffer) — a scatter
+    # into an expert-sharded buffer would make GSPMD gather it. The reshard
+    # to expert-sharded happens right before the expert matmul: that pair of
+    # constraints IS the MoE all-to-all.
+    buf = jnp.zeros((b, E, C, D), x.dtype)
+    buf = shard_act(buf, ("batch", None, None, None))
+    # vmapped scatter: the batch dim becomes an explicit scatter batch dim,
+    # which GSPMD partitions instead of replicating the buffer
+    buf = jax.vmap(
+        lambda bb, e, p2, xs: bb.at[e, p2].set(xs, mode="drop")
+    )(buf, eid, pos, x_slots)
+    buf = shard_act(buf, ("batch", "act_experts", None, None))
+
+    # expert computation (experts sharded over the model axis)
+    hg = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    hu = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", hg * hu, p["w_down"])
+    out_buf = shard_act(out_buf, ("batch", None, None, None))
+
+    # combine: gather back (vmapped, batch-partitioned), zero dropped slots
+    gathered = jax.vmap(lambda ob, e, p2: ob[e, p2])(
+        out_buf, eid, jnp.minimum(pos, C - 1)
+    )                                                           # (b, n, D)
+    valid = (pos < C)[..., None]
+    gathered = jnp.where(valid, gathered, 0.0)
+    gathered = gathered.reshape(b, s, K, D)
+    out = jnp.einsum("bskd,bsk->bsd", gathered, weights.astype(gathered.dtype))
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+def mamba_defs(cfg: ArchConfig, Lp: Tuple[int, ...]) -> Dict[str, P]:
+    D = cfg.d_model
+    din, n, h, K = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    conv_dim = din + 2 * n
+    std_out = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    la = _ax(Lp)
+    return {
+        "in_proj": P(Lp + (D, 2 * din + 2 * n + h), std=0.02, axes=la + ("embed", "inner_all")),
+        "conv_w": P(Lp + (K, conv_dim), std=0.2, axes=la + (None, "conv_dim")),
+        "conv_b": P(Lp + (conv_dim,), "zeros", axes=la + ("conv_dim",)),
+        "A_log": P(Lp + (h,), "ssm_a", dtype="float32", axes=la + ("ssm_heads",)),
+        "D": P(Lp + (h,), "ones", dtype="float32", axes=la + ("ssm_heads",)),
+        "dt_bias": P(Lp + (h,), "dt_bias", dtype="float32", axes=la + ("ssm_heads",)),
+        "norm": P(Lp + (din,), "zeros", axes=la + ("inner",)),
+        "out_proj": P(Lp + (din, D), std=std_out, axes=la + ("inner", "embed")),
+    }
+
+
+def _mamba_split(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * n
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din : din + conv_dim]
+    dt_raw = zxbcdt[..., din + conv_dim :]
+    return z, xBC, dt_raw
+
+
+def causal_conv1d(
+    x: jnp.ndarray,                        # (b, s, C)
+    w: jnp.ndarray,                        # (K, C) depthwise taps
+    bias: jnp.ndarray,                     # (C,)
+    init: Optional[jnp.ndarray] = None,    # (b, K-1, C) carried state
+) -> jnp.ndarray:
+    K = w.shape[0]
+    b, s, C = x.shape
+    if init is None:
+        init = jnp.zeros((b, K - 1, C), x.dtype)
+    xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)     # (b, s+K-1, C)
+    y = sum(xp[:, i : i + s] * w[i] for i in range(K))
+    return jax.nn.silu(y + bias)
+
+
+def mamba_forward(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                        # (b, s, D)
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    ssm_state: Optional[jnp.ndarray] = None,
+    conv_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    b, s, D = x.shape
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC_raw, dt_raw = _mamba_split(cfg, zxbcdt)
+    xBC = causal_conv1d(xBC_raw, p["conv_w"], p["conv_b"], init=conv_state)
+    x_in = xBC[..., :din]
+    B = xBC[..., din : din + n]
+    C = xBC[..., din + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x_in.reshape(b, s, h, ph)
+    if opt_enabled("ssd_shard_p"):
+        # SSD math is pointwise in the head_dim p: shard p over "model" so
+        # the scan computes 1/16th per chip instead of replicating (used when
+        # the head count — e.g. mamba2's 24 — cannot split the model axis)
+        xh = shard_act(xh, ("batch", None, None, "ssm_p"))
+    result = ops.ssd(
+        xh, dt, A, B, C,
+        chunk=cfg.ssm_chunk,
+        initial_state=ssm_state,
+        return_state=return_state,
+        backend=backend,
+    )
+    if return_state:
+        y, final_state = result
+    else:
+        y = result
+    if opt_enabled("ssd_shard_p"):
+        y = shard_act(y, ("batch", None, None, "ssm_p"))
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, din)
+    y = ops.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps, backend=backend)
+    out = y @ p["out_proj"]
+    if return_state:
+        km1 = cfg.conv_kernel - 1
+        conv_dim = xBC_raw.shape[-1]
+        prev = (
+            conv_state.astype(xBC_raw.dtype)
+            if conv_state is not None
+            else jnp.zeros((b, km1, conv_dim), xBC_raw.dtype)
+        )
+        hist = jnp.concatenate([prev, xBC_raw], axis=1)
+        new_conv = hist[:, hist.shape[1] - km1 :] if km1 else hist[:, :0]
+        return out, final_state, new_conv
+    return out
+
+
+def mamba_step(
+    p: Dict[str, jnp.ndarray],
+    x1: jnp.ndarray,                       # (b, D) — one token
+    ssm_state: jnp.ndarray,                # (b, h, ph, n)
+    conv_state: jnp.ndarray,               # (b, K-1, conv_dim)
+    cfg: ArchConfig,
+    *,
+    backend: str,
+):
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    zxbcdt = x1 @ p["in_proj"]
+    z, xBC_raw, dt_raw = _mamba_split(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state.astype(xBC_raw.dtype), xBC_raw[:, None]], axis=1)
+    y_conv = sum(window[:, i] * p["conv_w"][i] for i in range(cfg.conv_kernel))
+    xBC = jax.nn.silu(y_conv + p["conv_b"])
+    new_conv_state = window[:, 1:]
+    x_in = xBC[..., :din]
+    B = xBC[..., din : din + n]
+    C = xBC[..., din + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x_in.reshape(-1, h, ph)
+    y, new_ssm = ops.ssd_step(xh, dt, A, B, C, ssm_state, backend=backend)
+    y = y + p["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(-1, din)
+    y = ops.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps, backend=backend)
+    return y @ p["out_proj"], new_ssm, new_conv_state.astype(conv_state.dtype)

@@ -1,0 +1,113 @@
+"""Parameter definition trees.
+
+Models describe their parameters once as a tree of :class:`P` leaves; the
+same tree yields (a) materialized params for smoke-scale runs, and (b)
+``jax.ShapeDtypeStruct`` stand-ins for AOT dry-runs (no allocation), and
+(c) a matching PartitionSpec tree via name-based sharding rules.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter leaf definition.
+
+    ``axes`` names each dimension with a *logical* axis (``embed``, ``heads``,
+    ``ffn``, ``vocab``, ``experts``, …); :mod:`repro.sharding.specs` maps
+    logical axes to mesh axes to derive PartitionSpecs without the model
+    knowing anything about meshes.
+    """
+
+    shape: Tuple[int, ...]
+    init: str = "normal"      # normal | zeros | ones | ssm_a | dt_bias
+    std: float = 0.02         # stddev for `normal`
+    dtype: Optional[str] = None  # override the model dtype for this leaf
+    axes: Optional[Tuple[Optional[str], ...]] = None  # logical axis names per dim
+
+
+def _is_leaf(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_defs(fn, defs):
+    """Map ``fn(path, P) -> value`` over a def tree, preserving structure."""
+
+    def walk(path, node):
+        if _is_leaf(node):
+            return fn(path, node)
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        raise TypeError(f"bad def node at {path}: {type(node)}")
+
+    return walk("", defs)
+
+
+def _leaf_key(path: str) -> int:
+    return int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+
+
+def init_params(rng: jax.Array, defs, dtype=jnp.float32):
+    """Materialize a def tree (deterministic per-leaf folding of ``rng``)."""
+
+    def make(path: str, p: P):
+        ldtype = jnp.dtype(p.dtype) if p.dtype else jnp.dtype(dtype)
+        key = jax.random.fold_in(rng, _leaf_key(path))
+        if p.init == "normal":
+            return (jax.random.normal(key, p.shape, jnp.float32) * p.std).astype(ldtype)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, ldtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, ldtype)
+        if p.init == "ssm_a":
+            # A_log in [log(1), log(16)] as in Mamba-2
+            u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(ldtype)
+        if p.init == "dt_bias":
+            # bias such that softplus(dt_bias) spans [1e-3, 1e-1]
+            u = jax.random.uniform(key, p.shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(ldtype)
+        raise ValueError(f"unknown init {p.init!r} at {path}")
+
+    return tree_map_defs(make, defs)
+
+
+def param_specs(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree matching ``init_params`` (no allocation)."""
+
+    def make(path: str, p: P):
+        ldtype = jnp.dtype(p.dtype) if p.dtype else jnp.dtype(dtype)
+        return jax.ShapeDtypeStruct(p.shape, ldtype)
+
+    return tree_map_defs(make, defs)
+
+
+def count_params(defs) -> int:
+    total = 0
+
+    def add(path: str, p: P):
+        nonlocal total
+        total += int(np.prod(p.shape))
+        return None
+
+    tree_map_defs(add, defs)
+    return total
+
+
+def tree_paths(defs) -> Dict[str, P]:
+    """Flatten the def tree to {path: P}."""
+    flat: Dict[str, P] = {}
+
+    def grab(path: str, p: P):
+        flat[path] = p
+        return None
+
+    tree_map_defs(grab, defs)
+    return flat

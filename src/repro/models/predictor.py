@@ -1,0 +1,170 @@
+"""The JAX model-zoo predictor: the platform's "framework predictor".
+
+Implements the 3-function predictor interface (core.predictor) over the
+architecture zoo. The backend string selects the kernel implementation
+(``ref`` | ``pallas``) — the TPU analogue of the paper's framework axis.
+
+Trace levels:
+
+* MODEL     — model_load / inference spans only (jit'd whole-graph path)
+* FRAMEWORK — adds per-layer spans via the instrumented (eager per-layer)
+              forward, like TF's RunOptions tracer: more visibility, more
+              overhead (documented, mirrors the paper's behaviour)
+* SYSTEM    — adds compiled-artifact counters (FLOPs/bytes from XLA
+              cost_analysis) as trace events — the CUPTI stand-in on TPU
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..core.predictor import OpenRequest, Predictor, PredictorHandle, _handles
+from ..core.tracing import Tracer, TraceLevel
+from .lm import build_model
+from .resnet import ResNet, ResNetConfig
+
+
+class JaxModelPredictor(Predictor):
+    name = "jax-zoo"
+    version = "1.0.0"
+
+    def __init__(self, kernel_backend: str = "ref") -> None:
+        self.kernel_backend = kernel_backend
+        self.name = kernel_backend
+
+    # -- ModelLoad ---------------------------------------------------------------
+    def open(self, req: OpenRequest, tracer: Tracer) -> PredictorHandle:
+        manifest = req.manifest
+        arch = manifest.arch or manifest.name
+        with tracer.span("model_load", TraceLevel.MODEL, arch=arch, backend=self.name):
+            if arch.startswith("resnet"):
+                state = self._open_resnet(req, tracer)
+            else:
+                state = self._open_lm(req, tracer, arch)
+        return PredictorHandle(
+            handle_id=next(_handles),
+            backend=self.name,
+            model_key=manifest.key,
+            state=state,
+        )
+
+    def _open_lm(self, req: OpenRequest, tracer: Tracer, arch: str) -> Dict[str, Any]:
+        # map the platform backend onto kernel backends: the "ref" platform
+        # backend uses the chunked pure-JAX kernels; "pallas" the TPU kernels
+        # in interpret mode on CPU.
+        kernel = {"ref": "flash", "pallas": "pallas"}.get(
+            self.kernel_backend, self.kernel_backend
+        )
+        cfg = get_config(arch, reduced=req.manifest.reduced)
+        model = build_model(cfg, backend=kernel)
+        seed = int(req.manifest.model_assets.get("seed", 0))
+        with tracer.span("weight_init", TraceLevel.MODEL):
+            params = model.init(jax.random.PRNGKey(seed))
+            params = jax.block_until_ready(params)
+        fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+        state = {
+            "kind": "lm",
+            "cfg": cfg,
+            "model": model,
+            "params": params,
+            "forward": fwd,
+            "seq_len": req.seq_len,
+            "compiled": {},
+        }
+        return state
+
+    def _open_resnet(self, req: OpenRequest, tracer: Tracer) -> Dict[str, Any]:
+        rcfg = ResNetConfig()
+        if req.manifest.reduced:
+            rcfg = rcfg.reduced()
+        model = ResNet(rcfg)
+        seed = int(req.manifest.model_assets.get("seed", 0))
+        with tracer.span("weight_init", TraceLevel.MODEL):
+            params = jax.block_until_ready(model.init(jax.random.PRNGKey(seed)))
+        fwd = jax.jit(model.forward)
+        return {
+            "kind": "resnet",
+            "cfg": rcfg,
+            "model": model,
+            "params": params,
+            "forward": fwd,
+            "compiled": {},
+        }
+
+    # -- Predict ------------------------------------------------------------------
+    def predict(self, handle: PredictorHandle, batch: Any, tracer: Tracer) -> Any:
+        state = handle.state
+        model, params = state["model"], state["params"]
+        if state["kind"] == "resnet":
+            images = jnp.asarray(np.asarray(batch, dtype=np.float32))
+            if images.ndim == 3:
+                images = images[None]
+            with tracer.span("inference", TraceLevel.MODEL, batch=int(images.shape[0])):
+                out = jax.block_until_ready(state["forward"](params, images))
+            self._system_events(state, tracer, {"images": images})
+            return np.asarray(out)
+
+        tokens = jnp.asarray(np.asarray(batch, dtype=np.int32))
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        model_batch = {"tokens": tokens}
+        if state["cfg"].family == "encdec":
+            model_batch["frames"] = jnp.zeros(
+                (tokens.shape[0], state["cfg"].encoder_seq, state["cfg"].d_model),
+                jnp.float32,
+            )
+        if tracer.enabled(TraceLevel.FRAMEWORK):
+            out = self._predict_instrumented(state, model_batch, tracer)
+        else:
+            with tracer.span("inference", TraceLevel.MODEL, batch=int(tokens.shape[0])):
+                out = jax.block_until_ready(state["forward"](params, model_batch))
+        self._system_events(state, tracer, model_batch)
+        return np.asarray(out)
+
+    def _predict_instrumented(self, state, model_batch, tracer: Tracer):
+        model, params = state["model"], state["params"]
+        clock = tracer.clock
+
+        def hook(name: str, thunk):
+            with tracer.span(name, TraceLevel.FRAMEWORK):
+                return jax.block_until_ready(thunk())
+
+        with tracer.span("inference", TraceLevel.MODEL, instrumented=True):
+            return model.forward_instrumented(params, model_batch, hook)
+
+    def _system_events(self, state, tracer: Tracer, model_batch) -> None:
+        if not tracer.enabled(TraceLevel.SYSTEM):
+            return
+        key = tuple(
+            (k, tuple(v.shape)) for k, v in sorted(model_batch.items())
+        )
+        cost = state["compiled"].get(key)
+        if cost is None:
+            try:
+                lowered = jax.jit(
+                    lambda p, b: state["model"].forward(p, b)[0]
+                    if state["kind"] == "lm"
+                    else state["model"].forward(p, b)
+                ).lower(state["params"], model_batch)
+                cost = lowered.compile().cost_analysis()
+            except Exception:  # pragma: no cover - cost analysis best effort
+                cost = {}
+            state["compiled"][key] = cost
+        if cost:
+            tracer.event(
+                "system:xla_cost",
+                0.0,
+                0.0,
+                TraceLevel.SYSTEM,
+                flops=float(cost.get("flops", 0.0)),
+                bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            )
+
+    # -- ModelUnload ----------------------------------------------------------------
+    def close(self, handle: PredictorHandle) -> None:
+        handle.state = None

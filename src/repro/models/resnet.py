@@ -1,0 +1,121 @@
+"""ResNet-50 (v1.5) in JAX — the paper's own flagship workload.
+
+MLModelScope's case studies (Table 2/3, Figs 4-8) revolve around TF-Slim
+image-classification models with ResNet-50 as the representative. We carry
+a ResNet-50 config so the Table-2/3/Fig-8 analogue benchmarks exercise the
+same model family the paper measured. Reduced configs shrink width/depth
+for CPU benchmarking.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import P, init_params, param_specs
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet50"
+    stage_sizes: Tuple[int, ...] = (3, 4, 6, 3)
+    width: int = 64
+    num_classes: int = 1000
+    img_size: int = 224
+
+    def reduced(self) -> "ResNetConfig":
+        return ResNetConfig(
+            name=self.name + "-reduced",
+            stage_sizes=(1, 1, 1, 1),
+            width=16,
+            num_classes=64,
+            img_size=32,
+        )
+
+
+def _conv_defs(cin: int, cout: int, k: int) -> P:
+    std = math.sqrt(2.0 / (k * k * cin))
+    return P((k, k, cin, cout), std=std, axes=(None, None, None, "ffn"))
+
+
+def _bn_defs(c: int) -> Dict[str, P]:
+    # inference-mode batchnorm folded to scale+bias
+    return {"scale": P((c,), "ones", axes=("ffn",)), "bias": P((c,), "zeros", axes=("ffn",))}
+
+
+class ResNet:
+    """Functional ResNet-50 v1.5 (stride-2 in the 3x3 of downsampling blocks)."""
+
+    def __init__(self, cfg: ResNetConfig) -> None:
+        self.cfg = cfg
+
+    def param_defs(self):
+        cfg = self.cfg
+        w = cfg.width
+        defs: Dict[str, Any] = {
+            "stem": {"conv": _conv_defs(3, w, 7), "bn": _bn_defs(w)},
+            "stages": [],
+            "head": P((8 * w * 4, cfg.num_classes), std=0.01, axes=(None, "vocab")),
+        }
+        stages: List[Any] = []
+        cin = w
+        for i, n_blocks in enumerate(cfg.stage_sizes):
+            cmid = w * (2 ** i)
+            cout = cmid * 4
+            blocks = []
+            for b in range(n_blocks):
+                blk = {
+                    "conv1": _conv_defs(cin, cmid, 1), "bn1": _bn_defs(cmid),
+                    "conv2": _conv_defs(cmid, cmid, 3), "bn2": _bn_defs(cmid),
+                    "conv3": _conv_defs(cmid, cout, 1), "bn3": _bn_defs(cout),
+                }
+                if b == 0:
+                    blk["proj"] = _conv_defs(cin, cout, 1)
+                    blk["proj_bn"] = _bn_defs(cout)
+                blocks.append(blk)
+                cin = cout
+            stages.append(blocks)
+        defs["stages"] = {str(i): {str(b): blk for b, blk in enumerate(st)} for i, st in enumerate(stages)}
+        return defs
+
+    def init(self, rng, dtype=jnp.float32):
+        return init_params(rng, self.param_defs(), dtype)
+
+    def param_specs(self, dtype=jnp.float32):
+        return param_specs(self.param_defs(), dtype)
+
+    @staticmethod
+    def _conv(x, w, stride=1):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+
+    @staticmethod
+    def _bn(x, p):
+        return x * p["scale"] + p["bias"]
+
+    def forward(self, params, images: jnp.ndarray) -> jnp.ndarray:
+        """images: (b, H, W, 3) float -> logits (b, num_classes)."""
+        cfg = self.cfg
+        x = self._conv(images, params["stem"]["conv"], stride=2)
+        x = jax.nn.relu(self._bn(x, params["stem"]["bn"]))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+        for i in range(len(cfg.stage_sizes)):
+            stage = params["stages"][str(i)]
+            for b in range(cfg.stage_sizes[i]):
+                blk = stage[str(b)]
+                stride = 2 if (b == 0 and i > 0) else 1
+                residual = x
+                y = jax.nn.relu(self._bn(self._conv(x, blk["conv1"]), blk["bn1"]))
+                y = jax.nn.relu(self._bn(self._conv(y, blk["conv2"], stride), blk["bn2"]))
+                y = self._bn(self._conv(y, blk["conv3"]), blk["bn3"])
+                if "proj" in blk:
+                    residual = self._bn(self._conv(x, blk["proj"], stride), blk["proj_bn"])
+                x = jax.nn.relu(y + residual)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ params["head"]

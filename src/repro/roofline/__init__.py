@@ -1,0 +1,11 @@
+from .hlo import HloCostModel, parse_hlo
+from .model import HardwareSpec, RooflineReport, TPU_V5E, roofline_from_compiled
+
+__all__ = [
+    "HardwareSpec",
+    "HloCostModel",
+    "RooflineReport",
+    "TPU_V5E",
+    "parse_hlo",
+    "roofline_from_compiled",
+]

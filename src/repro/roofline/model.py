@@ -1,0 +1,154 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+All terms in seconds for ONE step of the lowered function. The HLO module
+is a per-device program, so per-device numbers × chips = totals; both give
+the same term values (peak is per-chip). Dominant term = the bottleneck.
+
+``MODEL_FLOPS`` = 6·N·D for training (fwd+bwd), 2·N·D for inference, with
+N = active params — the "useful work" yardstick; MODEL_FLOPS/HLO_FLOPs
+exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Optional
+
+from .hlo import Costs, HloCostModel
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per link (ICI)
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device accounting from the parsed HLO (trip-count corrected)
+    flops_per_device: float
+    memory_bytes_per_device: float
+    collective_bytes_per_device: float
+    by_collective: Dict[str, float]
+    collective_count: Dict[str, int]
+    # XLA's own (once-per-while-body) numbers, for reference
+    xla_flops: float
+    xla_bytes: float
+    # memory analysis
+    peak_memory_bytes: float
+    argument_bytes: float
+    output_bytes: float
+    temp_bytes: float
+    # terms (seconds)
+    compute_term_s: float = 0.0
+    memory_term_s: float = 0.0
+    collective_term_s: float = 0.0
+    dominant: str = ""
+    # useful-work accounting
+    model_flops: float = 0.0
+    model_flops_ratio: float = 0.0
+    step_time_bound_s: float = 0.0
+    roofline_fraction: float = 0.0
+    note: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RooflineReport":
+        return cls(**d)
+
+
+def model_flops_for(
+    param_count_active: int, tokens: int, kind: str
+) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * param_count_active * tokens
+
+
+def roofline_from_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    hw: HardwareSpec = TPU_V5E,
+    model_flops: float = 0.0,
+    note: str = "",
+) -> RooflineReport:
+    """Build the report from a jax ``compiled`` object."""
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    cm = HloCostModel(text)
+    costs = cm.entry_costs()
+
+    compute_term = costs.flops / hw.peak_flops
+    memory_term = costs.memory_bytes / hw.hbm_bw
+    collective_term = costs.collective_bytes / hw.link_bw
+    terms = {
+        "compute": compute_term,
+        "memory": memory_term,
+        "collective": collective_term,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_flops = costs.flops * chips
+    ratio = model_flops / total_flops if total_flops else 0.0
+    # roofline fraction: useful-model-FLOPs time at peak vs the bound time
+    ideal_s = (model_flops / chips) / hw.peak_flops if chips else 0.0
+    fraction = ideal_s / bound if bound > 0 else 0.0
+
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=costs.flops,
+        memory_bytes_per_device=costs.memory_bytes,
+        collective_bytes_per_device=costs.collective_bytes,
+        by_collective=dict(costs.by_collective),
+        collective_count=dict(costs.collective_count),
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=float(cost.get("bytes accessed", 0.0)),
+        peak_memory_bytes=float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        ),
+        argument_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+        compute_term_s=compute_term,
+        memory_term_s=memory_term,
+        collective_term_s=collective_term,
+        dominant=dominant,
+        model_flops=model_flops,
+        model_flops_ratio=ratio,
+        step_time_bound_s=bound,
+        roofline_fraction=fraction,
+        note=note,
+    )

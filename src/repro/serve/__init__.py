@@ -1,0 +1,3 @@
+from .engine import ServingEngine
+
+__all__ = ["ServingEngine"]

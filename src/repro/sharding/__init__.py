@@ -1,0 +1,21 @@
+from .specs import (
+    ShardingRules,
+    opt_enabled,
+    activation_rules,
+    batch_axes,
+    cache_pspec,
+    param_pspecs,
+    set_activation_rules,
+    shard_act,
+)
+
+__all__ = [
+    "ShardingRules",
+    "opt_enabled",
+    "activation_rules",
+    "batch_axes",
+    "cache_pspec",
+    "param_pspecs",
+    "set_activation_rules",
+    "shard_act",
+]

@@ -1,0 +1,207 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Models annotate parameters (:class:`repro.models.params.P.axes`) and
+activations with *logical* axis names; this module maps them onto the mesh
+axes of :func:`repro.launch.mesh.make_production_mesh`:
+
+    single-pod:  ("data", "model")
+    multi-pod:   ("pod", "data", "model")
+
+Batch-like logical axes shard over ("pod","data"); tensor-parallel axes
+(heads / ffn / vocab / experts / inner) shard over "model". FSDP mode
+additionally shards the "embed" axis of weights over the data axes (used by
+the ≥400B training configs) and ZeRO-1 shards optimizer state the same way.
+
+A *non-divisible* logical dim falls back to replication (e.g. mamba2-130m's
+24 SSD heads on a 16-way model axis, or whisper's 51866 vocab).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.params import P, tree_map_defs
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """One arch×mode sharding policy: logical axis -> mesh axes.
+
+    ``opts`` gates beyond-baseline optimizations (the §Perf hillclimb
+    levers) so baseline and optimized lowerings are both reproducible:
+
+    * ``gather_kv_once``     — all-gather seq-sharded K/V once per layer
+                               instead of once per flash KV-block
+    * ``rs_block_outputs``   — constrain attention/MLP outputs seq-sharded
+                               so TP partial sums reduce-scatter instead of
+                               all-reduce
+    * ``ssd_shard_p``        — shard the SSD head_dim (p) over "model" when
+                               the head count can't split it
+    * ``moe_decode_gather``  — single-token MoE path computes only the
+                               selected experts
+    """
+
+    mesh: Mesh
+    fsdp: bool = False          # shard weight "embed" dims over data axes
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+    opts: Dict[str, bool] = field(default_factory=dict)
+
+    def axis_size(self, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def mesh_axes_for(self, logical: Optional[str], dim: int) -> MeshAxes:
+        """Resolve a logical axis to mesh axes, honouring divisibility."""
+        if logical is None:
+            return None
+        axes = self.rules.get(logical)
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        # drop trailing axes until the dim divides evenly
+        cur: Tuple[str, ...] = tuple(a for a in axes if a in self.mesh.shape)
+        while cur:
+            size = 1
+            for a in cur:
+                size *= self.mesh.shape[a]
+            if dim % size == 0:
+                return cur if len(cur) > 1 else cur[0]
+            cur = cur[:-1]
+        return None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes a batch dimension shards over (pod composes with data)."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def default_rules(mesh: Mesh, fsdp: bool = False) -> ShardingRules:
+    b = batch_axes(mesh)
+    rules: Dict[str, MeshAxes] = {
+        # --- weights ---
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "ffn": "model",
+        "experts": "model",
+        "expert_ffn": None,
+        "inner": "model",
+        "inner_all": "model",
+        "conv_dim": "model",
+        "ssm_heads": "model",
+        "embed": b if fsdp else None,   # FSDP: weight embed dims over data
+        "head_dim": None,
+        "layer": None,
+        "group": None,
+        # --- activations ---
+        "batch": b,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv": "model",
+        "act_ffn": "model",
+        "seq": None,
+        "kv_seq": None,                 # overridden to "model" when kv heads don't shard
+        "act_experts": "model",
+        "act_vocab": "model",
+        "ssm_p": "model",
+        "state": None,
+    }
+    return ShardingRules(mesh=mesh, fsdp=fsdp, rules=rules)
+
+
+def _dedup(dims):
+    """Drop mesh axes already claimed by an earlier dim (earlier dim wins)."""
+    used = set()
+    out = []
+    for d in dims:
+        axes = (d,) if isinstance(d, str) else tuple(d or ())
+        keep = tuple(a for a in axes if a not in used)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    return out
+
+
+def param_pspecs(defs, rules: ShardingRules):
+    """PartitionSpec tree matching a parameter def tree."""
+
+    def make(path: str, p: P) -> PartitionSpec:
+        axes = p.axes if p.axes is not None else (None,) * len(p.shape)
+        if len(axes) != len(p.shape):
+            raise ValueError(f"{path}: axes {axes} rank != shape {p.shape}")
+        return PartitionSpec(
+            *_dedup([rules.mesh_axes_for(a, d) for a, d in zip(axes, p.shape)])
+        )
+
+    return tree_map_defs(make, defs)
+
+
+def logical_pspec(rules: ShardingRules, axes: Sequence[Optional[str]], shape: Sequence[int]) -> PartitionSpec:
+    return PartitionSpec(
+        *_dedup([rules.mesh_axes_for(a, d) for a, d in zip(axes, shape)])
+    )
+
+
+def cache_pspec(rules: ShardingRules, axes: Sequence[Optional[str]], shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(rules.mesh, logical_pspec(rules, axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints inside model code
+# ---------------------------------------------------------------------------
+_ctx = threading.local()
+
+
+def set_activation_rules(rules: Optional[ShardingRules]):
+    """Context manager enabling ``shard_act`` constraints inside jit."""
+
+    class _Ctx:
+        def __enter__(self):
+            self.prev = getattr(_ctx, "rules", None)
+            _ctx.rules = rules
+            return rules
+
+        def __exit__(self, *exc):
+            _ctx.rules = self.prev
+
+    return _Ctx()
+
+
+def activation_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "rules", None)
+
+
+def shard_act(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a with_sharding_constraint from logical activation axes.
+
+    No-op when no rules are active (single-host tests) or rank mismatches.
+    """
+    rules = activation_rules()
+    if rules is None or len(axes) != x.ndim:
+        return x
+    spec = logical_pspec(rules, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def opt_enabled(name: str) -> bool:
+    """Whether a beyond-baseline optimization is active (see ShardingRules)."""
+    rules = activation_rules()
+    return bool(rules is not None and rules.opts.get(name))

@@ -1,0 +1,150 @@
+"""AdamW with warmup+cosine schedule, clipping, and sharded states.
+
+Optimizer states are described as a P-tree mirroring the parameter tree so
+the dry-run can lower them as ShapeDtypeStructs and ZeRO-1-shard them (the
+states inherit each parameter's sharding, *plus* FSDP-style data-axis
+sharding when the policy enables it — see sharding rules).
+
+``m_dtype``/``v_dtype`` allow reduced-precision moments for the largest
+configs (llama4 training keeps m in bf16), and ``compress_grads`` applies
+int8 quantize/dequantize to the gradient before the update — modelling the
+numerics of compressed cross-pod gradient exchange (the bandwidth win
+itself needs a shard_map reduction; documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import P, init_params, param_specs, tree_map_defs
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+    compress_grads: bool = False
+
+
+def lr_at(step: jnp.ndarray, cfg: OptimizerConfig) -> jnp.ndarray:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def opt_state_defs(model_defs, cfg: OptimizerConfig):
+    """P-tree for (m, v) mirroring the parameter def tree."""
+
+    def mk(dtype):
+        def make(path: str, p: P) -> P:
+            return P(p.shape, "zeros", dtype=dtype, axes=p.axes)
+
+        return make
+
+    return {
+        "step": P((), "zeros", dtype="int32"),
+        "m": tree_map_defs(mk(cfg.m_dtype), model_defs),
+        "v": tree_map_defs(mk(cfg.v_dtype), model_defs),
+    }
+
+
+def init_opt_state(model_defs, cfg: OptimizerConfig):
+    return init_params(jax.random.PRNGKey(0), opt_state_defs(model_defs, cfg))
+
+
+def opt_state_specs(model_defs, cfg: OptimizerConfig):
+    return param_specs(opt_state_defs(model_defs, cfg))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def quantize_int8(g: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Stochastic-rounding int8 quantize/dequantize (per-tensor scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scaled = gf / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def compress_gradients(grads, seed: jnp.ndarray):
+    """Apply int8 compression numerics leaf-wise (deterministic per leaf)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    out = [
+        quantize_int8(g, jax.random.fold_in(key, i)) for i, g in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    if cfg.compress_grads:
+        grads = compress_gradients(grads, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = lr_at(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pn, mn, vn = upd(p, g, m, v)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "step": step,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,113 @@
+"""Training step: loss, microbatch gradient accumulation, remat.
+
+``make_train_step`` builds the function the dry-run lowers and the training
+driver jits: (params, opt_state, batch) -> (params, opt_state, metrics).
+Microbatching scans over batch slices accumulating gradients (activations
+for only one microbatch are ever live), remat checkpoints each layer-scan
+body (saves block inputs only).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import BaseModel
+from .optimizer import OptimizerConfig, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def make_loss_fn(model: BaseModel, remat: bool = False):
+    """Next-token cross entropy (+ MoE aux loss); labels = shifted tokens."""
+
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = model.forward(params, batch, remat=remat)
+        tokens = batch["tokens"]
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        loss = ce + AUX_LOSS_WEIGHT * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model: BaseModel,
+    opt_cfg: OptimizerConfig,
+    microbatches: int = 1,
+    remat: bool = True,
+    accum_dtype=jnp.float32,
+    grad_shardings=None,
+    cast_params_once: bool = False,
+):
+    """``grad_shardings`` (a NamedSharding tree matching params) pins the
+    microbatch gradients and the accumulation buffer to the parameters'
+    (FSDP) sharding, so GSPMD reduce-scatters each microbatch's gradients
+    instead of all-reducing them (~2x less gradient traffic, and the accum
+    buffer is shard-sized). ``cast_params_once`` casts the fp32 master
+    weights to the compute dtype once per step BEFORE the microbatch loop,
+    so FSDP weight all-gathers move bf16, not fp32 (~2x less weight
+    traffic); gradients still flow to the fp32 master through the cast."""
+    if cast_params_once and model.compute_dtype is not None:
+        inner_loss = make_loss_fn(model, remat=remat)
+
+        def loss_fn(params, batch):
+            return inner_loss(model._cast(params), batch)
+
+    else:
+        loss_fn = make_loss_fn(model, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    accum_dtype = jnp.dtype(accum_dtype)
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s), tree, grad_shardings
+        )
+
+    def split_micro(batch):
+        def r(t):
+            b = t.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return t.reshape((microbatches, b // microbatches) + t.shape[1:])
+
+        return jax.tree.map(r, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = split_micro(batch)
+            zeros = pin(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            )
+
+            def acc_body(carry, mb):
+                acc, met_sum = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                grads = pin(grads)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), acc, grads
+                )
+                met_sum = jax.tree.map(jnp.add, met_sum, metrics)
+                return (acc, met_sum), None
+
+            met0 = {"loss": jnp.float32(0), "ce": jnp.float32(0), "aux": jnp.float32(0)}
+            (grads, met_sum), _ = jax.lax.scan(acc_body, (zeros, met0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, met_sum)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step

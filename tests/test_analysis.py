@@ -1,0 +1,113 @@
+"""Analysis metrics (F8): trimmed mean, percentile, scalability, layers."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import (
+    comparison_table,
+    critical_path,
+    latency_summary,
+    layer_breakdown,
+    percentile,
+    throughput_scalability,
+    top_layers,
+    trimmed_mean,
+)
+from repro.core.tracing import Span, TraceLevel
+
+
+def test_trimmed_mean_matches_paper_definition():
+    # TrimmedMean(list) = Mean(Sort(list)[floor(0.2*len):-floor(0.2*len)])
+    data = [100.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 0.0]
+    s = sorted(data)
+    k = math.floor(0.2 * len(s))
+    expected = np.mean(s[k:-k])
+    assert trimmed_mean(data) == pytest.approx(expected)
+
+
+@settings(max_examples=60, deadline=None)
+@given(xs=st.lists(st.floats(0, 1e6, allow_nan=False), min_size=1, max_size=50))
+def test_trimmed_mean_bounded_by_min_max(xs):
+    tm = trimmed_mean(xs)
+    assert min(xs) - 1e-9 <= tm <= max(xs) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    xs=st.lists(st.floats(0, 1e6, allow_nan=False), min_size=1, max_size=50),
+    pct=st.floats(0, 100),
+)
+def test_percentile_is_an_element(xs, pct):
+    assert percentile(xs, pct) in xs
+
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 101))
+    assert percentile(xs, 90) == 90
+    assert percentile(xs, 100) == 100
+    assert percentile(xs, 1) == 1
+
+
+def test_trimmed_mean_robust_to_outliers():
+    base = [1.0] * 8
+    assert trimmed_mean(base + [1000.0, 0.0]) == pytest.approx(1.0)
+
+
+def test_latency_summary_keys():
+    out = latency_summary([0.001, 0.002, 0.003])
+    assert set(out) == {"trimmed_mean_ms", "p90_ms", "min_ms", "max_ms"}
+    assert out["min_ms"] == pytest.approx(1.0)
+
+
+def test_throughput_scalability_figure6():
+    per_batch = {1: 100.0, 2: 180.0, 4: 300.0}
+    speedups = throughput_scalability(per_batch)
+    assert speedups[1] == pytest.approx(1.0)
+    assert speedups[4] == pytest.approx(3.0)
+
+
+def _span(name, level, begin, end, parent=None):
+    s = Span(name=name, level=level, trace_id="t", begin=begin, end=end)
+    if parent is not None:
+        s.parent_id = parent
+    return s
+
+
+def test_layer_breakdown_table3():
+    spans = [
+        _span("conv2d_48", TraceLevel.FRAMEWORK, 0, 7.59),
+        _span("conv2d_48", TraceLevel.FRAMEWORK, 8, 8 + 7.57),
+        _span("conv2d_45", TraceLevel.FRAMEWORK, 16, 16 + 5.67),
+        _span("ignored_model_span", TraceLevel.MODEL, 0, 100),
+    ]
+    stats = layer_breakdown(spans)
+    assert stats[0].name == "conv2d_48"
+    assert stats[0].count == 2
+    assert stats[0].total_s == pytest.approx(15.16)
+    assert top_layers(spans, k=1)[0].name == "conv2d_48"
+
+
+def test_critical_path_zoom_in():
+    root = _span("evaluation", TraceLevel.MODEL, 0, 100)
+    child = _span("inference", TraceLevel.MODEL, 10, 90, parent=root.span_id)
+    small = _span("preprocess", TraceLevel.MODEL, 0, 5, parent=root.span_id)
+    leaf = _span("fc6_copy", TraceLevel.FRAMEWORK, 20, 80, parent=child.span_id)
+    path = critical_path([root, child, small, leaf])
+    assert [s.name for s in path] == ["evaluation", "inference", "fc6_copy"]
+
+
+def test_comparison_table_renders():
+    rows = [{"model": "a", "ms": 1.25}, {"model": "b", "ms": 0.5}]
+    txt = comparison_table(rows, ["model", "ms"], sort_by="ms")
+    lines = txt.splitlines()
+    assert lines[0].split() == ["model", "ms"]
+    assert "a" in lines[2] and "b" in lines[3]
+
+
+def test_empty_inputs_raise():
+    with pytest.raises(ValueError):
+        trimmed_mean([])
+    with pytest.raises(ValueError):
+        percentile([], 50)

@@ -1,0 +1,180 @@
+"""Kernel sweeps: every Pallas kernel (interpret mode) and the chunked JAX
+implementations against the pure-jnp oracles in ref.py, across shapes and
+dtypes; custom_vjp gradients against autodiff of the oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention as pallas_decode
+from repro.kernels.flash_attention import flash_attention as pallas_flash
+from repro.kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+from repro.kernels.ssd_scan import ssd as pallas_ssd
+
+_RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=5e-5, atol=5e-5)
+
+
+def _mk(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(_RNG.normal(size=shape) * scale, dtype)
+
+
+ATTN_SHAPES = [
+    # b, sq, sk, h, kvh, d
+    (1, 16, 16, 2, 2, 8),       # MHA
+    (2, 33, 33, 4, 1, 16),      # MQA, ragged
+    (2, 64, 64, 8, 2, 32),      # GQA
+    (1, 24, 48, 4, 4, 64),      # cross-ish (sk > sq)
+]
+ATTN_OPTS = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=9),
+    dict(causal=True, softcap=11.0),
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("opts", ATTN_OPTS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_jnp_vs_ref(shape, opts, dtype):
+    b, sq, sk, h, kvh, d = shape
+    q, k, v = _mk((b, sq, h, d), dtype), _mk((b, sk, kvh, d), dtype), _mk((b, sk, kvh, d), dtype)
+    off = max(sk - sq, 0)
+    a = ref.attention(q, k, v, q_offset=off, **opts)
+    f = ops.flash_attention_jnp(q, k, v, q_offset=off, block_k=16, **opts)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(f, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("opts", ATTN_OPTS)
+def test_pallas_flash_vs_ref(shape, opts):
+    b, sq, sk, h, kvh, d = shape
+    q, k, v = _mk((b, sq, h, d)), _mk((b, sk, kvh, d)), _mk((b, sk, kvh, d))
+    off = max(sk - sq, 0)
+    a = ref.attention(q, k, v, q_offset=off, **opts)
+    f = pallas_flash(q, k, v, q_offset=off, block_q=16, block_k=16, **opts)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(f), rtol=5e-5, atol=5e-5)
+
+
+def test_pallas_flash_bf16():
+    b, sq, sk, h, kvh, d = 2, 32, 32, 4, 2, 16
+    q, k, v = (
+        _mk((b, sq, h, d), jnp.bfloat16),
+        _mk((b, sk, kvh, d), jnp.bfloat16),
+        _mk((b, sk, kvh, d), jnp.bfloat16),
+    )
+    a = ref.attention(q, k, v)
+    f = pallas_flash(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(f, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+@pytest.mark.parametrize("opts", ATTN_OPTS)
+def test_flash_custom_vjp_grads(opts):
+    b, sq, sk, h, kvh, d = 2, 24, 24, 4, 2, 16
+    q, k, v = _mk((b, sq, h, d)), _mk((b, sk, kvh, d)), _mk((b, sk, kvh, d))
+    do = _mk((b, sq, h, d))
+    f_ref = lambda q, k, v: ref.attention(q, k, v, **opts)
+    f_fla = lambda q, k, v: ops.flash_attention_jnp(q, k, v, block_k=8, **opts)
+    o_r, vjp_r = jax.vjp(f_ref, q, k, v)
+    o_f, vjp_f = jax.vjp(f_fla, q, k, v)
+    np.testing.assert_allclose(o_r, o_f, rtol=3e-5, atol=3e-5)
+    for g_r, g_f, name in zip(vjp_r(do), vjp_f(do), "qkv"):
+        np.testing.assert_allclose(
+            g_r, g_f, rtol=5e-4, atol=5e-4, err_msg=f"d{name} mismatch {opts}"
+        )
+
+
+DECODE_SHAPES = [
+    (2, 16, 4, 2, 8),
+    (3, 40, 4, 1, 16),
+    (1, 64, 8, 8, 32),
+]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("opts", [dict(), dict(softcap=7.0), dict(window=5)])
+def test_pallas_decode_vs_ref(shape, opts):
+    b, S, h, kvh, d = shape
+    q = _mk((b, 1, h, d))
+    kc, vc = _mk((b, S, kvh, d)), _mk((b, S, kvh, d))
+    lengths = jnp.asarray(_RNG.integers(1, S + 1, size=(b,)), jnp.int32)
+    a = ref.decode_attention(q, kc, vc, lengths, **opts)
+    f = pallas_decode(q, kc, vc, lengths, block_s=16, **opts)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(f), rtol=5e-5, atol=5e-5)
+
+
+SSD_SHAPES = [
+    # b, s, h, p, n, chunk
+    (1, 16, 2, 4, 8, 4),
+    (2, 40, 4, 8, 16, 8),
+    (1, 64, 3, 16, 32, 16),     # h not power of two
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("with_init", [False, True])
+def test_ssd_chunked_and_pallas_vs_ref(shape, with_init):
+    b, s, h, p, n, chunk = shape
+    x = _mk((b, s, h, p))
+    dt = jnp.asarray(_RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-_RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B, C = _mk((b, s, n)), _mk((b, s, n))
+    init = _mk((b, h, p, n)) if with_init else None
+    y_ref, S_ref = ref.ssd(x, dt, A, B, C, initial_state=init, return_state=True)
+    y_chk, S_chk = ops.ssd_chunked_jnp(
+        x, dt, A, B, C, chunk=chunk, initial_state=init, return_state=True
+    )
+    np.testing.assert_allclose(y_ref, y_chk, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S_ref, S_chk, rtol=5e-4, atol=5e-4)
+    y_pal, S_pal = pallas_ssd(
+        x, dt, A, B, C, chunk=chunk, initial_state=init, return_state=True
+    )
+    np.testing.assert_allclose(y_ref, y_pal, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S_ref, S_pal, rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_decode_step_consistency():
+    b, s, h, p, n = 2, 12, 2, 4, 8
+    x = _mk((b, s, h, p))
+    dt = jnp.asarray(_RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-_RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B, C = _mk((b, s, n)), _mk((b, s, n))
+    y_full, S_full = ref.ssd(x, dt, A, B, C, return_state=True)
+    _, S_part = ref.ssd(
+        x[:, :-1], dt[:, :-1], A, B[:, :-1], C[:, :-1], return_state=True
+    )
+    y_step, S_step = ops.ssd_step(
+        x[:, -1], dt[:, -1], A, B[:, -1], C[:, -1], S_part
+    )
+    np.testing.assert_allclose(y_step, y_full[:, -1], rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S_step, S_full, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("rows,D", [(1, 8), (17, 64), (64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_rmsnorm_vs_ref(rows, D, dtype):
+    x = _mk((rows, D), dtype)
+    w = _mk((D,), jnp.float32, 0.1)
+    a = ref.rmsnorm(x, w, eps=1e-5)
+    f = pallas_rmsnorm(x, w, eps=1e-5, block_rows=8)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(f, np.float32), **_tol(dtype)
+    )
+
+
+def test_ops_backend_dispatch():
+    q, k, v = _mk((1, 8, 2, 8)), _mk((1, 8, 2, 8)), _mk((1, 8, 2, 8))
+    for backend in ("ref", "flash", "pallas"):
+        out = ops.attention(q, k, v, backend=backend)
+        assert out.shape == q.shape
+    with pytest.raises(ValueError):
+        ops.attention(q, k, v, backend="bogus")

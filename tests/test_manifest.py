@@ -1,0 +1,118 @@
+"""Manifest spec + versioning tests (F1/F2/F5), incl. property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.manifest import (
+    BackendManifest,
+    ModelManifest,
+    SystemRequirements,
+    VersionConstraint,
+    parse_version,
+)
+
+PAPER_MANIFEST = """
+name: MLPerf_ResNet50_v1.5
+version: 1.0.0
+description: resnet50 v1.5 from MLPerf
+framework:
+  name: ref
+  version: '>=1.0.0 <2.0'
+inputs:
+  - type: image
+    layer_name: input_tensor
+    element_type: float32
+    steps:
+      - decode:
+          element_type: float32
+      - resize:
+          dimensions: [3, 224, 224]
+      - normalize:
+          mean: [123.68, 116.78, 103.94]
+          rescale: 1.0
+outputs:
+  - type: probability
+    layer_name: prob
+    element_type: float32
+    steps:
+      - argsort:
+          k: 5
+model:
+  base_path: /tmp/does-not-matter
+  checksum: 7b94a2da05d
+attributes:
+  training_dataset: ImageNet
+"""
+
+
+def test_paper_listing1_roundtrip():
+    m = ModelManifest.from_yaml(PAPER_MANIFEST)
+    assert m.name == "MLPerf_ResNet50_v1.5"
+    assert m.backend_constraint == ">=1.0.0 <2.0"
+    assert [s.op for s in m.inputs[0].steps] == ["decode", "resize", "normalize"]
+    assert m.outputs[0].steps[0].params["k"] == 5
+    # dict -> manifest -> dict stable
+    again = ModelManifest.from_dict(m.to_dict())
+    assert again.to_dict() == m.to_dict()
+    assert m.key == "MLPerf_ResNet50_v1.5:1.0.0"
+    assert len(m.checksum()) == 16
+
+
+def test_backend_manifest():
+    b = BackendManifest.from_yaml(
+        "name: pallas\nversion: 1.0.0\nmeshes:\n  pod: {shape: [16, 16]}\n"
+    )
+    assert b.key == "pallas:1.0.0"
+    assert b.meshes["pod"]["shape"] == [16, 16]
+
+
+@pytest.mark.parametrize(
+    "spec,version,ok",
+    [
+        (">=1.12.0 <2.0", "1.15.0", True),
+        (">=1.12.0 <2.0", "2.0.0", False),
+        (">=1.12.0 <2.0", "1.11.9", False),
+        ("", "0.0.1", True),            # no constraint
+        ("==1.2.3", "1.2.3", True),
+        ("~1.2", "1.2.9", True),
+        ("~1.2", "1.3.0", False),
+        (">1.0", "1.0.0", False),
+    ],
+)
+def test_version_constraints(spec, version, ok):
+    assert VersionConstraint(spec).satisfied_by(version) is ok
+
+
+def test_invalid_version_rejected():
+    with pytest.raises(ValueError):
+        parse_version("not-a-version")
+    with pytest.raises(ValueError):
+        ModelManifest.from_dict({"name": "x", "version": "bogus"})
+
+
+ver = st.tuples(
+    st.integers(0, 20), st.integers(0, 20), st.integers(0, 20)
+).map(lambda t: f"{t[0]}.{t[1]}.{t[2]}")
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=ver, b=ver)
+def test_constraint_ordering_property(a, b):
+    """>= and < are consistent with tuple ordering of parsed versions."""
+    ta, tb = parse_version(a), parse_version(b)
+    assert VersionConstraint(f">={b}").satisfied_by(a) == (ta >= tb)
+    assert VersionConstraint(f"<{b}").satisfied_by(a) == (ta < tb)
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=ver)
+def test_exact_constraint_is_reflexive(v):
+    assert VersionConstraint(f"=={v}").satisfied_by(v)
+
+
+def test_system_requirements():
+    info = {"platform": "cpu", "num_devices": 4, "memory_bytes": 1 << 30, "mesh": "host"}
+    assert SystemRequirements().satisfied_by(info)
+    assert SystemRequirements(platform="cpu", min_devices=4).satisfied_by(info)
+    assert not SystemRequirements(min_devices=8).satisfied_by(info)
+    assert not SystemRequirements(platform="tpu").satisfied_by(info)
+    assert not SystemRequirements(mesh="pod").satisfied_by(info)

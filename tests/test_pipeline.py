@@ -1,0 +1,100 @@
+"""Streaming pipeline executor (F6): ordering, threading, built-in ops."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.manifest import ProcessingStep
+from repro.core.pipeline import Pipeline, build_steps, register_op
+from repro.core.tracing import Tracer, TraceLevel, TracingServer
+
+
+def test_order_preserved():
+    pipe = Pipeline([("double", lambda x, m: x * 2), ("inc", lambda x, m: x + 1)])
+    assert pipe.run(range(10)) == [2 * i + 1 for i in range(10)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(xs=st.lists(st.integers(-1000, 1000), max_size=40))
+def test_order_preserved_property(xs):
+    pipe = Pipeline([("id", lambda x, m: x), ("neg", lambda x, m: -x)])
+    assert pipe.run(xs) == [-x for x in xs]
+
+
+def test_stages_overlap_on_threads():
+    """Producer/consumer stages run concurrently (I/O overlaps compute)."""
+    active = {"a": 0, "b": 0}
+    overlap = []
+    lock = threading.Lock()
+
+    def stage(name):
+        def fn(x, m):
+            with lock:
+                active[name] += 1
+                overlap.append(sum(active.values()))
+            time.sleep(0.005)
+            with lock:
+                active[name] -= 1
+            return x
+
+        return fn
+
+    pipe = Pipeline([("a", stage("a")), ("b", stage("b"))], channel_capacity=4)
+    pipe.run(range(16))
+    assert max(overlap) >= 2  # both stages were simultaneously busy
+
+
+def test_error_propagates():
+    def boom(x, m):
+        if x == 3:
+            raise ValueError("boom")
+        return x
+
+    pipe = Pipeline([("boom", boom)])
+    with pytest.raises(ValueError, match="boom"):
+        pipe.run(range(5))
+
+
+def test_tracer_records_operator_spans():
+    server = TracingServer()
+    tr = Tracer("t", server, TraceLevel.MODEL)
+    pipe = Pipeline([("op1", lambda x, m: x)], tracer=tr)
+    pipe.run([1, 2])
+    spans = [s for s in server.timeline("t") if s.name == "op:op1"]
+    assert len(spans) == 2
+
+
+def test_builtin_image_ops_match_manifest_order():
+    steps = [
+        ProcessingStep("decode", {"element_type": "uint8"}),
+        ProcessingStep("resize", {"dimensions": [3, 8, 8]}),
+        ProcessingStep("normalize", {"mean": 127.0, "rescale": 1.0}),
+    ]
+    ops = build_steps(steps)
+    pipe = Pipeline(ops)
+    img = np.arange(16 * 16 * 3, dtype=np.uint8).reshape(16, 16, 3)
+    (out,) = pipe.run([img])
+    assert out.shape == (8, 8, 3)
+    assert out.dtype == np.float32
+
+
+def test_tokenize_and_argsort_ops():
+    ops = build_steps([ProcessingStep("tokenize", {"vocab_size": 50, "max_len": 8})])
+    (out,) = Pipeline(ops).run(["hello world"])
+    assert out.shape == (8,) and out.max() < 50
+    ops2 = build_steps([ProcessingStep("argsort", {"k": 3})])
+    (top,) = Pipeline(ops2).run([np.array([0.1, 0.5, 0.2, 0.9])])
+    assert [i for i, _ in top] == [3, 1, 2]
+
+
+def test_unknown_op_raises():
+    with pytest.raises(KeyError):
+        build_steps([ProcessingStep("nonexistent-op")])
+
+
+def test_register_custom_op():
+    register_op("plus_n", lambda params: (lambda x, m: x + params.get("n", 0)))
+    ops = build_steps([ProcessingStep("plus_n", {"n": 5})])
+    assert Pipeline(ops).run([1, 2]) == [6, 7]

@@ -1,0 +1,112 @@
+"""Distributed registry: TTL leases, heartbeats, resolution, balancing."""
+import pytest
+
+from repro.core.manifest import ModelManifest, SystemRequirements
+from repro.core.registry import AgentRecord, KVStore, Registry
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture
+def clock():
+    return FakeClock()
+
+
+@pytest.fixture
+def registry(clock):
+    return Registry(store=KVStore(clock=clock))
+
+
+def _agent(aid, models, backend="ref", load=0, system=None):
+    return AgentRecord(
+        agent_id=aid,
+        backend=backend,
+        backend_version="1.0.0",
+        system=system or {"platform": "cpu", "num_devices": 1, "mesh": "host"},
+        models=models,
+        load=load,
+    )
+
+
+def test_ttl_expiry_removes_agent(registry, clock):
+    registry.register_agent(_agent("a1", ["m:1.0.0"]))
+    assert len(registry.agents()) == 1
+    clock.t += Registry.AGENT_TTL + 1
+    assert registry.agents() == []
+
+
+def test_heartbeat_extends_lease(registry, clock):
+    registry.register_agent(_agent("a1", ["m:1.0.0"]))
+    for _ in range(5):
+        clock.t += Registry.AGENT_TTL / 2
+        assert registry.heartbeat("a1")
+    assert len(registry.agents()) == 1
+    clock.t += Registry.AGENT_TTL + 1
+    assert not registry.heartbeat("a1")
+
+
+def test_resolution_filters_and_orders(registry):
+    registry.register_agent(_agent("busy", ["m:1.0.0"], load=5))
+    registry.register_agent(_agent("idle", ["m:1.0.0"], load=0))
+    registry.register_agent(_agent("other", ["x:1.0.0"], load=0))
+    recs = registry.resolve("m:1.0.0")
+    assert [r.agent_id for r in recs] == ["idle", "busy"]
+
+
+def test_resolution_backend_and_system_constraints(registry):
+    registry.register_agent(_agent("cpuagent", ["m:1.0.0"], backend="ref"))
+    registry.register_agent(
+        _agent("tpuagent", ["m:1.0.0"], backend="pallas",
+               system={"platform": "tpu", "num_devices": 256, "mesh": "pod"})
+    )
+    assert [r.agent_id for r in registry.resolve("m:1.0.0", backend_name="pallas")] == ["tpuagent"]
+    recs = registry.resolve(
+        "m:1.0.0", requirements=SystemRequirements(platform="tpu", min_devices=256)
+    )
+    assert [r.agent_id for r in recs] == ["tpuagent"]
+
+
+def test_manifest_version_resolution(registry):
+    for v in ("1.0.0", "1.2.0", "2.0.0"):
+        registry.register_manifest(
+            ModelManifest(name="m", version=v, backend_constraint="")
+        )
+    best = registry.find_manifest("m", ">=1.0 <2.0")
+    assert best.version == "1.2.0"
+    assert registry.find_manifest("m").version == "2.0.0"
+    assert registry.find_manifest("missing") is None
+
+
+def test_dynamic_add_delete(registry):
+    key = registry.register_manifest(ModelManifest(name="m", version="1.0.0"))
+    assert registry.manifests("m")
+    assert registry.unregister_manifest(key)
+    assert registry.manifests("m") == []
+
+
+def test_load_tracking(registry):
+    registry.register_agent(_agent("a1", ["m:1.0.0"]))
+    registry.update_load("a1", +2)
+    assert registry.agents()[0].load == 2
+    registry.update_load("a1", -1)
+    assert registry.agents()[0].load == 1
+    registry.update_load("a1", -5)
+    assert registry.agents()[0].load == 0   # clamped
+
+
+def test_kvstore_file_roundtrip(tmp_path, clock):
+    store = KVStore(clock=clock)
+    store.put("k/a", {"v": 1})
+    store.put("k/b", {"v": 2}, ttl=100)
+    path = str(tmp_path / "reg.json")
+    store.dump(path)
+    store2 = KVStore(clock=clock)
+    store2.load(path)
+    assert store2.get("k/a") == {"v": 1}
+    assert [k for k, _ in store2.scan("k/")] == ["k/a", "k/b"]

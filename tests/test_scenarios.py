@@ -1,0 +1,113 @@
+"""Benchmarking scenarios + workload generators (F7)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scenarios import ScenarioSpec, run_scenario
+from repro.core.tracing import NullTracer
+from repro.core.workload import (
+    BatchedLoad,
+    PoissonLoad,
+    TraceReplayLoad,
+    UniformLoad,
+    make_generator,
+    register_generator,
+)
+
+
+def test_batched_load():
+    reqs = list(BatchedLoad(5, 8).requests())
+    assert len(reqs) == 5
+    assert all(r.arrival_s == 0.0 and r.batch_size == 8 for r in reqs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rate=st.floats(0.5, 500), n=st.integers(1, 60), seed=st.integers(0, 5))
+def test_poisson_arrivals_monotone_and_rate(rate, n, seed):
+    reqs = list(PoissonLoad(n, rate, seed=seed).requests())
+    times = [r.arrival_s for r in reqs]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    assert all(r.batch_size == 1 for r in reqs)
+
+
+def test_poisson_mean_interarrival():
+    reqs = list(PoissonLoad(5000, 10.0, seed=0).requests())
+    times = np.array([r.arrival_s for r in reqs])
+    gaps = np.diff(times)
+    assert np.mean(gaps) == pytest.approx(0.1, rel=0.1)
+
+
+def test_uniform_and_trace_loads():
+    u = list(UniformLoad(3, 0.5).requests())
+    assert [r.arrival_s for r in u] == [0.0, 0.5, 1.0]
+    t = list(TraceReplayLoad([0.1, 0.4], [2, 3]).requests())
+    assert [(r.arrival_s, r.batch_size) for r in t] == [(0.1, 2), (0.4, 3)]
+    with pytest.raises(ValueError):
+        TraceReplayLoad([0.1], [1, 2])
+
+
+def test_generator_registry_pluggable():
+    register_generator("fixed3", lambda: BatchedLoad(3, 1))
+    g = make_generator("fixed3")
+    assert len(list(g.requests())) == 3
+    with pytest.raises(KeyError):
+        make_generator("unknown-gen")
+
+
+class VirtualTime:
+    """Deterministic clock+sleep pair for scenario tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+def test_online_scenario_metrics_deterministic():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.010  # each call takes exactly 10 virtual ms
+
+    spec = ScenarioSpec(kind="online", num_requests=10, rate_hz=1000.0, warmup=0)
+    m = run_scenario(spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep)
+    assert m["scenario"] == "online"
+    assert m["trimmed_mean_ms"] == pytest.approx(10.0)
+    assert m["p90_ms"] == pytest.approx(10.0)
+    assert m["num_requests"] == 10
+
+
+def test_batched_scenario_picks_best_batch():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.010 + 0.001 * bs  # sub-linear in batch -> bigger is better
+
+    spec = ScenarioSpec(
+        kind="batched", num_requests=4, batch_sizes=[1, 4, 16], warmup=0
+    )
+    m = run_scenario(spec, predict, NullTracer(), clock=vt.clock)
+    assert m["optimal_batch_size"] == 16
+    t16 = m["per_batch"]["16"]["throughput_ips"]
+    t1 = m["per_batch"]["1"]["throughput_ips"]
+    assert t16 > t1
+
+
+def test_trace_scenario():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.002
+
+    spec = ScenarioSpec(kind="trace", num_requests=3, arrivals=[0.0, 0.5, 0.6], warmup=0)
+    m = run_scenario(spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep)
+    assert m["num_requests"] == 3
+
+
+def test_unknown_scenario_kind():
+    with pytest.raises(ValueError):
+        run_scenario(ScenarioSpec(kind="bogus"), lambda b: None, NullTracer())

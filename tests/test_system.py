@@ -1,0 +1,157 @@
+"""End-to-end platform behaviour tests (the paper's three workflows)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DispatchError,
+    DispatchPolicy,
+    EvaluationRequest,
+    ScenarioSpec,
+    SystemRequirements,
+)
+from repro.core.platform import LocalPlatform, builtin_manifests
+
+
+@pytest.fixture(scope="module")
+def platform():
+    p = LocalPlatform(backends=("ref",))
+    yield p
+    p.shutdown()
+
+
+def test_initialization_workflow_registers_models_and_agents(platform):
+    models = platform.registry.manifests()
+    names = {m.name for m in models}
+    assert "glm4-9b" in names and "resnet50" in names
+    assert len(models) >= 11
+    agents = platform.registry.agents()
+    assert len(agents) == 1
+    assert agents[0].backend == "ref"
+    assert "glm4-9b:1.0.0" in agents[0].models
+
+
+def test_evaluation_workflow_end_to_end(platform):
+    req = EvaluationRequest(
+        model="glm4-9b",
+        backend="ref",
+        scenario=ScenarioSpec(kind="online", num_requests=3, rate_hz=1000.0, warmup=1),
+        trace_level="MODEL",
+        seq_len=16,
+    )
+    results = platform.evaluate(req)
+    assert len(results) == 1
+    metrics = results[0]["metrics"]
+    assert metrics["trimmed_mean_ms"] > 0
+    assert metrics["p90_ms"] >= metrics["min_ms"]
+    # result landed in the evaluation database
+    recs = platform.evaldb.query(model="glm4-9b")
+    assert recs and recs[-1].metrics["trimmed_mean_ms"] > 0
+    # trace landed too
+    spans = platform.evaldb.spans(recs[-1].eval_id)
+    names = {s["name"] for s in spans}
+    assert "evaluation" in names and "model_load" in names
+
+
+def test_batched_scenario_reports_optimal_batch(platform):
+    req = EvaluationRequest(
+        model="mamba2-130m",
+        backend="ref",
+        scenario=ScenarioSpec(kind="batched", num_requests=2, batch_sizes=[1, 2], warmup=1),
+        trace_level="NONE",
+        seq_len=16,
+    )
+    res = platform.evaluate(req)[0]
+    m = res["metrics"]
+    assert m["optimal_batch_size"] in (1, 2)
+    assert m["max_throughput_ips"] > 0
+
+
+def test_analysis_workflow_report(platform):
+    report = platform.report(model="glm4-9b")
+    assert "MLModelScope report" in report
+    assert "glm4-9b" in report
+
+
+def test_dispatch_error_for_unknown_model(platform):
+    req = EvaluationRequest(model="nonexistent-model")
+    with pytest.raises(DispatchError):
+        platform.evaluate(req)
+
+
+def test_system_requirements_filtering(platform):
+    req = EvaluationRequest(
+        model="glm4-9b",
+        scenario=ScenarioSpec(kind="online", num_requests=1, rate_hz=1000.0, warmup=0),
+        trace_level="NONE",
+        seq_len=8,
+    )
+    with pytest.raises(DispatchError):
+        platform.evaluate(req, requirements=SystemRequirements(platform="tpu"))
+
+
+def test_agent_failure_failover():
+    p = LocalPlatform(backends=("ref", "ref"))
+    try:
+        for agent in p.agents.values():
+            agent.fail_next = 1
+            break
+        req = EvaluationRequest(
+            model="mamba2-130m",
+            scenario=ScenarioSpec(kind="online", num_requests=1, rate_hz=1000.0, warmup=0),
+            trace_level="NONE",
+            seq_len=8,
+        )
+        res = p.evaluate(req, policy=DispatchPolicy(max_attempts=3))
+        assert res and res[0]["metrics"]["trimmed_mean_ms"] > 0
+    finally:
+        p.shutdown()
+
+
+def test_lease_expiry_counts_as_node_failure():
+    p = LocalPlatform(backends=("ref",))
+    try:
+        agent = next(iter(p.agents.values()))
+        p.registry.deregister_agent(agent.agent_id)
+        req = EvaluationRequest(
+            model="mamba2-130m",
+            scenario=ScenarioSpec(kind="online", num_requests=1, rate_hz=1000.0, warmup=0),
+            trace_level="NONE",
+            seq_len=8,
+        )
+        with pytest.raises(DispatchError):
+            p.evaluate(req)
+    finally:
+        p.shutdown()
+
+
+def test_all_agents_fanout():
+    p = LocalPlatform(backends=("ref", "ref"))
+    try:
+        req = EvaluationRequest(
+            model="mamba2-130m",
+            scenario=ScenarioSpec(kind="online", num_requests=1, rate_hz=1000.0, warmup=0),
+            trace_level="NONE",
+            seq_len=8,
+        )
+        res = p.evaluate(req, policy=DispatchPolicy(all_agents=True))
+        assert len(res) == 2
+        assert len({r["agent_id"] for r in res}) == 2
+    finally:
+        p.shutdown()
+
+
+def test_framework_level_tracing_produces_layer_spans():
+    p = LocalPlatform(backends=("ref",))
+    try:
+        req = EvaluationRequest(
+            model="mamba2-130m",
+            scenario=ScenarioSpec(kind="online", num_requests=1, rate_hz=1000.0, warmup=0),
+            trace_level="FRAMEWORK",
+            seq_len=8,
+        )
+        res = p.evaluate(req)[0]
+        spans = p.evaldb.spans(res["eval_id"])
+        layer_spans = [s for s in spans if s["name"].startswith("layer_")]
+        assert len(layer_spans) >= 3  # one per reduced layer
+    finally:
+        p.shutdown()

@@ -1,0 +1,131 @@
+"""Across-stack tracing: levels, nesting, aggregation (F9)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tracing import (
+    NullTracer,
+    Span,
+    Tracer,
+    TraceLevel,
+    TracingServer,
+    summarize,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def test_span_nesting_and_timeline():
+    server = TracingServer()
+    tr = Tracer("t1", server, TraceLevel.FULL, clock=FakeClock())
+    with tr.span("outer", TraceLevel.MODEL) as outer:
+        with tr.span("inner", TraceLevel.FRAMEWORK) as inner:
+            pass
+    tl = server.timeline("t1")
+    assert [s.name for s in tl] == ["outer", "inner"]
+    assert tl[1].parent_id == tl[0].span_id
+    assert tl[0].duration >= tl[1].duration > 0
+
+
+def test_trace_levels_filter():
+    server = TracingServer()
+    tr = Tracer("t1", server, TraceLevel.MODEL)
+    with tr.span("model", TraceLevel.MODEL):
+        with tr.span("framework", TraceLevel.FRAMEWORK):
+            with tr.span("system", TraceLevel.SYSTEM):
+                pass
+    names = [s.name for s in server.timeline("t1")]
+    assert names == ["model"]
+
+
+def test_none_level_records_nothing():
+    server = TracingServer()
+    tr = Tracer("t1", server, TraceLevel.NONE)
+    with tr.span("x", TraceLevel.MODEL):
+        pass
+    assert server.timeline("t1") == []
+    nt = NullTracer()
+    with nt.span("y"):
+        pass
+
+
+def test_full_level_records_everything():
+    server = TracingServer()
+    tr = Tracer("t1", server, TraceLevel.FULL)
+    for lvl in (TraceLevel.MODEL, TraceLevel.FRAMEWORK, TraceLevel.SYSTEM):
+        with tr.span(lvl.name, lvl):
+            pass
+    assert len(server.timeline("t1")) == 3
+
+
+def test_out_of_order_async_publish_merges_sorted():
+    server = TracingServer()
+    s1 = Span("late", TraceLevel.MODEL, "t", begin=5.0, end=6.0)
+    s2 = Span("early", TraceLevel.MODEL, "t", begin=1.0, end=2.0)
+    server.publish(s1)
+    server.publish(s2)
+    assert [s.name for s in server.timeline("t")] == ["early", "late"]
+
+
+def test_simulated_clock_supported():
+    """The paper allows simulator-published (non-wall-clock) timestamps."""
+    server = TracingServer()
+    tr = Tracer("sim", server, TraceLevel.FULL, clock=FakeClock())
+    with tr.span("simulated"):
+        pass
+    (sp,) = server.timeline("sim")
+    assert sp.begin == 1.0 and sp.end == 2.0
+
+
+def test_event_api_and_summary():
+    server = TracingServer()
+    tr = Tracer("t", server, TraceLevel.FULL)
+    tr.event("ext", 0.0, 2.5, TraceLevel.SYSTEM, flops=100)
+    tr.event("ext", 3.0, 4.0, TraceLevel.SYSTEM)
+    agg = summarize(server.timeline("t"))
+    assert agg["ext"]["count"] == 2
+    assert agg["ext"]["total_s"] == pytest.approx(3.5)
+
+
+def test_dump_load_roundtrip(tmp_path):
+    server = TracingServer()
+    tr = Tracer("t", server, TraceLevel.FULL)
+    with tr.span("a", TraceLevel.MODEL, tag=1):
+        pass
+    path = str(tmp_path / "trace.json")
+    server.dump("t", path)
+    spans = TracingServer.load(path)
+    assert spans[0].name == "a" and spans[0].tags == {"tag": 1}
+
+
+@settings(max_examples=30, deadline=None)
+@given(depth=st.integers(1, 8))
+def test_nesting_depth_property(depth):
+    """Parent chains always form a path back to the root span."""
+    server = TracingServer()
+    tr = Tracer("t", server, TraceLevel.FULL)
+
+    def rec(d):
+        if d == 0:
+            return
+        with tr.span(f"d{d}"):
+            rec(d - 1)
+
+    rec(depth)
+    spans = {s.span_id: s for s in server.timeline("t")}
+    assert len(spans) == depth
+    roots = [s for s in spans.values() if s.parent_id is None]
+    assert len(roots) == 1
+    for s in spans.values():
+        hops = 0
+        cur = s
+        while cur.parent_id is not None:
+            cur = spans[cur.parent_id]
+            hops += 1
+            assert hops <= depth

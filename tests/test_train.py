@@ -1,0 +1,222 @@
+"""Training substrate: optimizer math, schedule, checkpointing, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.params import P, init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import (
+    RecordIOReader,
+    RecordIOWriter,
+    SyntheticTokenDataset,
+    make_loader,
+)
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    init_opt_state,
+    lr_at,
+    opt_state_defs,
+    quantize_int8,
+)
+from repro.train.step import make_loss_fn, make_train_step
+
+
+def test_adamw_first_step_matches_manual():
+    cfg = OptimizerConfig(lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8,
+                          weight_decay=0.0, warmup_steps=0, total_steps=10**6,
+                          clip_norm=1e9)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    defs = {"w": P((2,))}
+    state = init_opt_state(defs, cfg)
+    new_params, new_state, _ = adamw_update(params, grads, state, cfg)
+    # bias-corrected first step == -lr * sign-ish update
+    m_hat = 0.1 * 0.5 / (1 - 0.9)
+    v_hat = 0.01 * 0.25 / (1 - 0.99)
+    expected = 1.0 - 0.1 * (m_hat / 0.1 / (np.sqrt(v_hat) + 1e-8)) * 0.1  # structure check below
+    step_delta = float(params["w"][0] - new_params["w"][0])
+    manual = 0.1 * ((0.5 / 1.0) / (np.sqrt(0.25 / 1.0) + 1e-8))
+    assert step_delta == pytest.approx(manual, rel=1e-5)
+    assert int(new_state["step"]) == 1
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=0.5, warmup_steps=0,
+                          total_steps=100, clip_norm=1e9)
+    params = {"w": jnp.asarray([4.0])}
+    grads = {"w": jnp.asarray([0.0])}
+    state = init_opt_state({"w": P((1,))}, cfg)
+    new_params, _, _ = adamw_update(params, grads, state, cfg)
+    assert float(new_params["w"][0]) < 4.0
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(lr_at(0, cfg)) == 0.0
+    assert float(lr_at(5, cfg)) == pytest.approx(0.5)
+    assert float(lr_at(10, cfg)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(110, cfg)) == pytest.approx(0.1, rel=1e-3)
+    mid = float(lr_at(60, cfg))
+    assert 0.1 < mid < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3))
+def test_int8_compression_bounded_error(scale):
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * scale, jnp.float32)
+    gq = quantize_int8(g, jax.random.PRNGKey(0))
+    # error bounded by one quantization step (max|g|/127)
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(gq - g))) <= step + 1e-6
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 12)), jnp.int32
+        )
+    }
+    loss_fn = make_loss_fn(model)
+    _, g_full = jax.value_and_grad(lambda p: loss_fn(p, batch)[0])(params)
+    opt_cfg = OptimizerConfig(lr=0.0, warmup_steps=0, total_steps=10, clip_norm=1e9,
+                              weight_decay=0.0)
+    opt_state = init_opt_state(model.param_defs(), opt_cfg)
+
+    # lr=0 so params unchanged; compare reported grad_norm across microbatchings
+    step1 = make_train_step(model, opt_cfg, microbatches=1, remat=False)
+    step4 = make_train_step(model, opt_cfg, microbatches=4, remat=True)
+    _, _, m1 = jax.jit(step1)(params, opt_state, batch)
+    _, _, m4 = jax.jit(step4)(params, opt_state, batch)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]), rel=1e-3)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+
+
+def test_loss_decreases_over_steps():
+    cfg = get_config("mamba2-130m", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+    opt_state = init_opt_state(model.param_defs(), opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg, microbatches=1, remat=False))
+    data = SyntheticTokenDataset(cfg.vocab_size, 16, seed=0)
+    first = last = None
+    for i in range(8):
+        batch = {"tokens": jnp.asarray(data.batch(0, 4))}  # same batch: must overfit
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first, (first, last)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing (fault tolerance)
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "nested": {"b": np.ones(3, np.float32)}}
+    opt = {"step": np.int32(7), "m": {"w": np.zeros((2, 3), np.float32),
+                                      "nested": {"b": np.zeros(3, np.float32)}}}
+    for step in (10, 20, 30):
+        mgr.save(step, params, opt, extra={"data_cursor": step * 100})
+    assert mgr.all_steps() == [20, 30]  # retention pruned step 10
+    restored, opt2, meta = mgr.restore(params_template=params, opt_template=opt)
+    np.testing.assert_array_equal(restored["w"], params["w"])
+    np.testing.assert_array_equal(opt2["m"]["nested"]["b"], np.zeros(3))
+    assert meta["step"] == 30 and meta["data_cursor"] == 3000
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": np.ones(4, np.float32)})
+    cdir = os.path.join(str(tmp_path), "ckpt-000000001")
+    shard = [f for f in os.listdir(cdir) if f.startswith("shard")][0]
+    with open(os.path.join(cdir, shard), "ab") as f:
+        f.write(b"CORRUPT")
+    with pytest.raises(ValueError, match="checksum"):
+        mgr.restore(params_template={"w": None})
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, {"w": np.ones(2, np.float32)})
+    entries = [e for e in os.listdir(str(tmp_path)) if e.startswith(".tmp")]
+    assert entries == []
+
+
+def test_restore_without_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"w": np.ones(2, np.float32)})
+    params, opt, meta = mgr.restore()
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(params["w"], np.ones(2, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_recordio_roundtrip(tmp_path):
+    path = str(tmp_path / "tokens.rio")
+    w = RecordIOWriter(path, seq_len=8)
+    recs = [np.arange(i, i + 8, dtype=np.int32) for i in range(5)]
+    for r in recs:
+        w.append(r)
+    w.close()
+    r = RecordIOReader(path)
+    assert len(r) == 5 and r.seq_len == 8
+    np.testing.assert_array_equal(r.record(3), recs[3])
+    np.testing.assert_array_equal(r.batch(1, 2), np.stack(recs[1:3]))
+    # wraparound
+    wrap = r.batch(4, 2)
+    np.testing.assert_array_equal(wrap[0], recs[4])
+    np.testing.assert_array_equal(wrap[1], recs[0])
+
+
+def test_recordio_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.rio")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="magic"):
+        RecordIOReader(path)
+
+
+def test_loader_resume_from_cursor(tmp_path):
+    ds = SyntheticTokenDataset(vocab_size=97, seq_len=4, seed=1)
+    it = make_loader(ds, batch_size=2)
+    cursor1, b1 = next(it)
+    cursor2, b2 = next(it)
+    assert cursor1 == 2 and cursor2 == 4
+    # resume: skipping cursor1 records reproduces the second batch exactly
+    it2 = make_loader(ds, batch_size=2, skip=cursor1)
+    cursor2b, b2b = next(it2)
+    assert cursor2b == cursor2
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+
+
+def test_synthetic_to_recordio(tmp_path):
+    ds = SyntheticTokenDataset(vocab_size=31, seq_len=6, seed=0)
+    path = str(tmp_path / "synth.rio")
+    ds.write_recordio(path, 4)
+    r = RecordIOReader(path)
+    assert len(r) == 4
+    assert r.batch(0, 4).max() < 31
