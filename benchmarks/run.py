@@ -16,6 +16,7 @@ BENCHES = [
     ("fig7", "benchmarks.bench_fig7_systems"),
     ("table3", "benchmarks.bench_table3_layers"),
     ("fig8", "benchmarks.bench_fig8_coldstart"),
+    ("scheduler", "benchmarks.bench_scheduler"),
 ]
 
 

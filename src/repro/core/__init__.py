@@ -14,8 +14,17 @@ Subsystems (paper objective in brackets):
 * :mod:`.agent`      — evaluation agents [F2, F4]
 * :mod:`.server`     — dispatch, failover, straggler mitigation [F4]
 """
+from ..serve.scheduler import RequestScheduler, SchedulerConfig, SchedulerQueueFull
 from .agent import Agent, DataManager, EvaluationRequest
-from .analysis import latency_summary, percentile, throughput_scalability, top_layers, trimmed_mean
+from .analysis import (
+    latency_summary,
+    percentile,
+    scheduler_summary,
+    slo_attainment,
+    throughput_scalability,
+    top_layers,
+    trimmed_mean,
+)
 from .evaldb import EvalDB, EvaluationRecord
 from .manifest import (
     BackendManifest,
@@ -34,7 +43,14 @@ from .predictor import (
     register_predictor,
 )
 from .registry import AgentRecord, KVStore, Registry
-from .scenarios import ScenarioSpec, run_scenario
+from .scenarios import (
+    Scenario,
+    ScenarioSpec,
+    make_scenario,
+    register_scenario,
+    run_scenario,
+    scenario_kinds,
+)
 from .server import DispatchError, DispatchPolicy, Server
 from .tracing import NullTracer, Span, Tracer, TraceLevel, TracingServer
 from .workload import (
@@ -69,7 +85,11 @@ __all__ = [
     "PredictorHandle",
     "Registry",
     "Request",
+    "RequestScheduler",
+    "Scenario",
     "ScenarioSpec",
+    "SchedulerConfig",
+    "SchedulerQueueFull",
     "Server",
     "Span",
     "SystemRequirements",
@@ -84,11 +104,16 @@ __all__ = [
     "latency_summary",
     "make_generator",
     "make_predictor",
+    "make_scenario",
     "percentile",
     "register_generator",
     "register_op",
     "register_predictor",
+    "register_scenario",
     "run_scenario",
+    "scenario_kinds",
+    "scheduler_summary",
+    "slo_attainment",
     "throughput_scalability",
     "top_layers",
     "trimmed_mean",

@@ -24,6 +24,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
+from ..serve.scheduler import SchedulerConfig
 from .evaldb import EvalDB, EvaluationRecord
 from .manifest import ModelManifest
 from .pipeline import Pipeline, build_steps
@@ -52,6 +53,9 @@ class EvaluationRequest:
     seq_len: int = 128
     mode: str = "serve"
     options: Dict[str, Any] = field(default_factory=dict)
+    # when set, the evaluation runs through the scheduler-backed executor
+    # with these micro-batching / admission knobs (F7 under concurrent load)
+    scheduler: Optional[SchedulerConfig] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -64,12 +68,15 @@ class EvaluationRequest:
             "seq_len": self.seq_len,
             "mode": self.mode,
             "options": self.options,
+            "scheduler": self.scheduler.to_dict() if self.scheduler else None,
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "EvaluationRequest":
         d = dict(d)
         d["scenario"] = ScenarioSpec.from_dict(d.get("scenario", {}))
+        if d.get("scheduler"):
+            d["scheduler"] = SchedulerConfig.from_dict(d["scheduler"])
         return cls(**{k: v for k, v in d.items() if k in cls.__dataclass_fields__})
 
 
@@ -212,7 +219,9 @@ class Agent:
 
                 if tracer.enabled(TraceLevel.SYSTEM):
                     before = host_counters()
-                metrics = run_scenario(req.scenario, predict_once, tracer)
+                metrics = run_scenario(
+                    req.scenario, predict_once, tracer, scheduler=req.scheduler
+                )
                 if tracer.enabled(TraceLevel.SYSTEM):
                     after = host_counters()
                     tracer.event(

@@ -56,6 +56,46 @@ def latency_summary(latencies_s: Sequence[float]) -> Dict[str, float]:
     }
 
 
+def slo_attainment(latencies_s: Sequence[float], slo_ms: float) -> Dict[str, float]:
+    """Server-scenario SLO accounting: violation count + attained fraction."""
+    if not latencies_s:
+        return {"slo_violations": 0.0, "slo_attainment": 1.0}
+    violations = sum(1 for l in latencies_s if l * 1e3 > slo_ms)
+    return {
+        "slo_violations": float(violations),
+        "slo_attainment": 1.0 - violations / len(latencies_s),
+    }
+
+
+def scheduler_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize the scheduler's queue-depth / batch-occupancy trace series.
+
+    The request scheduler publishes one ``scheduler:batch`` event per
+    executed micro-batch, tagged with ``queue_depth`` (arrived-but-unserved
+    requests at batch formation), ``occupancy`` (coalesced requests) and
+    ``inputs`` (total model batch).  This aggregates them into the queueing
+    block of the analysis workflow."""
+    depths: List[float] = []
+    occs: List[float] = []
+    inputs = 0.0
+    for s in spans:
+        if s.name != "scheduler:batch":
+            continue
+        depths.append(float(s.tags.get("queue_depth", 0)))
+        occs.append(float(s.tags.get("occupancy", 0)))
+        inputs += float(s.tags.get("inputs", 0))
+    if not occs:
+        return {}
+    return {
+        "batches": float(len(occs)),
+        "total_inputs": inputs,
+        "mean_batch_occupancy": sum(occs) / len(occs),
+        "max_batch_occupancy": max(occs),
+        "mean_queue_depth": sum(depths) / len(depths),
+        "max_queue_depth": max(depths),
+    }
+
+
 def throughput_scalability(
     per_batch: Dict[int, float]
 ) -> Dict[int, float]:

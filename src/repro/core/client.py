@@ -42,13 +42,24 @@ def build_parser() -> argparse.ArgumentParser:
     ev.add_argument("--model", required=True)
     ev.add_argument("--model-version", default="")
     ev.add_argument("--backend", default="ref")
-    ev.add_argument("--scenario", default="online", choices=["online", "batched", "trace"])
+    ev.add_argument(
+        "--scenario",
+        default="online",
+        choices=["online", "batched", "trace", "single_stream", "server", "offline"],
+    )
     ev.add_argument("--num-requests", type=int, default=8)
     ev.add_argument("--rate-hz", type=float, default=50.0)
     ev.add_argument("--batch-size", type=int, default=1)
     ev.add_argument("--batch-sizes", type=_parse_int_list, default=None)
     ev.add_argument("--seq-len", type=int, default=64)
     ev.add_argument("--warmup", type=int, default=2)
+    ev.add_argument("--slo-ms", type=float, default=100.0, help="server scenario SLO")
+    ev.add_argument(
+        "--sched-max-batch", type=int, default=0,
+        help="run through the scheduler-backed executor coalescing up to N requests",
+    )
+    ev.add_argument("--sched-timeout-ms", type=float, default=2.0)
+    ev.add_argument("--sched-queue-depth", type=int, default=1024)
     ev.add_argument(
         "--trace-level", default="MODEL", choices=["NONE", "MODEL", "FRAMEWORK", "SYSTEM", "FULL"]
     )
@@ -94,7 +105,17 @@ def main(argv: Optional[List[str]] = None) -> int:
             rate_hz=args.rate_hz,
             warmup=args.warmup,
             batch_sizes=args.batch_sizes,
+            slo_ms=args.slo_ms,
         )
+        scheduler = None
+        if args.sched_max_batch > 0:
+            from ..serve.scheduler import SchedulerConfig
+
+            scheduler = SchedulerConfig(
+                max_batch=args.sched_max_batch,
+                batch_timeout_ms=args.sched_timeout_ms,
+                queue_depth=args.sched_queue_depth,
+            )
         req = EvaluationRequest(
             model=args.model,
             model_version=args.model_version,
@@ -103,6 +124,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             trace_level=args.trace_level,
             batch_size=args.batch_size,
             seq_len=args.seq_len,
+            scheduler=scheduler,
         )
         from .server import DispatchPolicy
 

@@ -1,41 +1,63 @@
 """Benchmarking scenarios (paper F7, §4.1.3 / §5.1).
 
-A scenario couples a workload generator with the measurement protocol:
+A scenario couples a workload generator with the measurement protocol.  Each
+scenario is a :class:`Scenario` class that *submits* requests to the shared
+:class:`~repro.serve.scheduler.RequestScheduler` (asynchronous completion
+futures) instead of calling the predict function inline, so queueing,
+micro-batching and admission effects are measured identically everywhere.
 
-* ``online``   — batch-1 requests with Poisson arrivals; metrics are the
-                 trimmed-mean latency and 90th-percentile latency.
-* ``batched``  — fixed-batch back-to-back requests; metric is throughput
-                 (inputs/sec); sweeping batch sizes yields max throughput
-                 and the optimal batch size (Table 2).
-* ``trace``    — replay of a recorded arrival process.
+Six kinds (the first three predate the scheduler and keep their exact
+metrics via the compatibility shim in :func:`run_scenario`; the last three
+are the MLPerf-loadgen-style additions):
+
+* ``online``        — batch-1 Poisson arrivals, closed loop; trimmed-mean +
+                      90th-percentile latency.
+* ``batched``       — fixed-batch back-to-back; throughput sweep over batch
+                      sizes yields max throughput + optimal batch (Table 2).
+* ``trace``         — replay of a recorded arrival process.
+* ``single_stream`` — back-to-back batch-1, latency-bound; p99 latency and
+                      streams/sec.
+* ``server``        — Poisson arrivals, *open loop* through the scheduler's
+                      micro-batching; p99 latency SLO accounting and
+                      achieved-QPS.
+* ``offline``       — submit-everything-at-once, max-throughput; the
+                      scheduler coalesces up to ``max_batch`` per call.
 
 Scenarios drive a *predict function* ``fn(batch_size) -> None`` supplied by
 the agent; they own timing and metric computation so every model/backend is
-measured identically (F2 consistent evaluation).
+measured identically (F2 consistent evaluation).  ``clock``/``sleep`` are
+injectable, making every scenario a deterministic discrete-event simulation
+under a fake clock (the paper allows simulated time in traces).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Type, Union
 
-from .analysis import latency_summary
+from ..serve.scheduler import (
+    RequestScheduler,
+    ScheduledRequest,
+    SchedulerConfig,
+)
+from .analysis import latency_summary, percentile, slo_attainment
 from .tracing import Tracer, TraceLevel
-from .workload import BatchedLoad, PoissonLoad, Request, TraceReplayLoad, make_generator
+from .workload import BatchedLoad, PoissonLoad, Request, TraceReplayLoad
 
 
 @dataclass
 class ScenarioSpec:
     """User-selected benchmarking scenario (part of the user input)."""
 
-    kind: str = "online"            # online | batched | trace
+    kind: str = "online"            # online | batched | trace | single_stream | server | offline
     num_requests: int = 32
     batch_size: int = 1
-    rate_hz: float = 50.0           # online arrival rate
+    rate_hz: float = 50.0           # online/server arrival rate
     warmup: int = 3
     batch_sizes: Optional[List[int]] = None   # batched sweep
     arrivals: Optional[List[float]] = None    # trace replay
     seed: int = 0
+    slo_ms: float = 100.0           # server scenario p99 latency SLO
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -47,6 +69,7 @@ class ScenarioSpec:
             "batch_sizes": self.batch_sizes,
             "arrivals": self.arrivals,
             "seed": self.seed,
+            "slo_ms": self.slo_ms,
         }
 
     @classmethod
@@ -57,119 +80,347 @@ class ScenarioSpec:
 PredictFn = Callable[[int], Any]
 
 
+class _SchedulerTrace:
+    """Adapter publishing scheduler batch events at MODEL level so the
+    default trace level records the queue-depth / occupancy series."""
+
+    def __init__(self, tracer: Tracer) -> None:
+        self._tracer = tracer
+
+    def event(self, name: str, begin: float, end: float, **tags: Any) -> None:
+        self._tracer.event(name, begin, end, TraceLevel.MODEL, **tags)
+
+
+class Scenario:
+    """Base scenario: workload generation + submission + metric computation.
+
+    Subclasses override :meth:`run`.  All requests flow through a
+    :class:`RequestScheduler` built over the predict function — closed-loop
+    kinds use a degenerate batch-1 scheduler, open-loop kinds exercise
+    micro-batch coalescing and the bounded queue.
+    """
+
+    kind = "base"
+    #: scheduler used when the caller does not thread a SchedulerConfig
+    default_scheduler = SchedulerConfig(max_batch=1, batch_timeout_ms=0.0)
+
+    def __init__(self, spec: ScenarioSpec) -> None:
+        self.spec = spec
+
+    # -- plumbing ------------------------------------------------------------
+    def make_scheduler(
+        self,
+        predict: PredictFn,
+        tracer: Tracer,
+        clock: Callable[[], float],
+        sleep: Callable[[float], None],
+        config: Optional[SchedulerConfig],
+    ) -> RequestScheduler:
+        cfg = config or self.default_scheduler
+
+        def execute(batch: List[ScheduledRequest]) -> None:
+            total = sum(r.batch_size for r in batch)
+            with tracer.span(
+                "predict",
+                TraceLevel.MODEL,
+                batch=total,
+                coalesced=len(batch),
+                request_id=batch[0].request_id,
+            ):
+                predict(total)
+
+        return RequestScheduler(
+            execute, cfg, clock=clock, sleep=sleep, tracer=_SchedulerTrace(tracer)
+        )
+
+    def warmup(self, predict: PredictFn, tracer: Tracer, batch: int) -> None:
+        for _ in range(self.spec.warmup):
+            with tracer.span("warmup", TraceLevel.MODEL, batch=batch):
+                predict(batch)
+
+    def closed_loop(
+        self,
+        requests: Sequence[Request],
+        sched: RequestScheduler,
+        clock: Callable[[], float],
+        sleep: Callable[[float], None],
+        t0: float,
+        honor_arrivals: bool,
+    ) -> List[Dict[str, float]]:
+        """Submit each request and wait for its future (sequential issue),
+        recording per-request service + queueing latency — the legacy
+        ``_measure`` protocol, now on the scheduler code path."""
+        rows = []
+        for req in requests:
+            if honor_arrivals:
+                now = clock() - t0
+                if req.arrival_s > now:
+                    sleep(req.arrival_s - now)
+            fut = sched.submit(
+                batch_size=req.batch_size, arrival_s=t0 + req.arrival_s
+            )
+            fut.result()
+            r = fut.request
+            rows.append(
+                {
+                    "request_id": req.request_id,
+                    "batch_size": req.batch_size,
+                    "arrival_s": req.arrival_s,
+                    "start_s": r.start_s - t0,
+                    "latency_s": r.service_s,
+                    # queueing delay: intended arrival -> service start
+                    "queue_s": max(0.0, (r.start_s - t0) - req.arrival_s),
+                }
+            )
+        return rows
+
+    def scheduler_metrics(self, sched: RequestScheduler) -> Dict[str, float]:
+        return {f"sched_{k}": v for k, v in sched.stats().items()}
+
+    # -- interface -----------------------------------------------------------
+    def run(
+        self,
+        predict: PredictFn,
+        tracer: Tracer,
+        clock: Callable[[], float],
+        sleep: Callable[[float], None],
+        scheduler: Optional[SchedulerConfig] = None,
+    ) -> Dict[str, Any]:
+        raise NotImplementedError
+
+
+class OnlineScenario(Scenario):
+    """Closed-loop batch-1 Poisson arrivals (the paper's online scenario)."""
+
+    kind = "online"
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        self.warmup(predict, tracer, 1)
+        sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
+        load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
+        with tracer.span("scenario:online", TraceLevel.MODEL, rate_hz=spec.rate_hz):
+            t0 = clock()
+            rows = self.closed_loop(list(load.requests()), sched, clock, sleep, t0, True)
+        lat = [r["latency_s"] for r in rows]
+        metrics = latency_summary(lat)
+        metrics.update(
+            {
+                "scenario": "online",
+                "num_requests": len(rows),
+                "mean_queue_s": sum(r["queue_s"] for r in rows) / max(len(rows), 1),
+            }
+        )
+        return metrics
+
+
+class BatchedScenario(Scenario):
+    """Throughput at each batch size; max throughput + optimal batch size."""
+
+    kind = "batched"
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        batch_sizes = spec.batch_sizes or [spec.batch_size]
+        per_batch: Dict[int, Dict[str, float]] = {}
+        for bs in batch_sizes:
+            self.warmup(predict, tracer, bs)
+            sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
+            load = BatchedLoad(spec.num_requests, bs)
+            with tracer.span("scenario:batched", TraceLevel.MODEL, batch=bs):
+                t0 = clock()
+                rows = self.closed_loop(
+                    list(load.requests()), sched, clock, sleep, t0, False
+                )
+                elapsed = clock() - t0
+            inputs = sum(r["batch_size"] for r in rows)
+            lat = [r["latency_s"] for r in rows]
+            per_batch[bs] = {
+                "throughput_ips": inputs / elapsed if elapsed > 0 else float("inf"),
+                **latency_summary(lat),
+            }
+        best_bs = max(per_batch, key=lambda b: per_batch[b]["throughput_ips"])
+        return {
+            "scenario": "batched",
+            "per_batch": {str(k): v for k, v in per_batch.items()},
+            "max_throughput_ips": per_batch[best_bs]["throughput_ips"],
+            "optimal_batch_size": best_bs,
+        }
+
+
+class TraceScenario(Scenario):
+    """Replay of a recorded arrival process (closed loop)."""
+
+    kind = "trace"
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        if not spec.arrivals:
+            raise ValueError("trace scenario requires arrivals")
+        self.warmup(predict, tracer, spec.batch_size)
+        sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
+        load = TraceReplayLoad(spec.arrivals, [spec.batch_size] * len(spec.arrivals))
+        with tracer.span("scenario:trace", TraceLevel.MODEL):
+            t0 = clock()
+            rows = self.closed_loop(list(load.requests()), sched, clock, sleep, t0, True)
+        lat = [r["latency_s"] for r in rows]
+        metrics = latency_summary(lat)
+        metrics.update({"scenario": "trace", "num_requests": len(rows)})
+        return metrics
+
+
+class SingleStreamScenario(Scenario):
+    """MLPerf single-stream: back-to-back batch-1 requests, latency-bound."""
+
+    kind = "single_stream"
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        self.warmup(predict, tracer, 1)
+        sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
+        load = BatchedLoad(spec.num_requests, 1)
+        with tracer.span("scenario:single_stream", TraceLevel.MODEL):
+            t0 = clock()
+            rows = self.closed_loop(list(load.requests()), sched, clock, sleep, t0, False)
+            elapsed = clock() - t0
+        lat = [r["latency_s"] for r in rows]
+        metrics = latency_summary(lat)
+        metrics.update(
+            {
+                "scenario": "single_stream",
+                "num_requests": len(rows),
+                "p99_ms": percentile(lat, 99.0) * 1e3,
+                "streams_per_s": len(rows) / elapsed if elapsed > 0 else float("inf"),
+            }
+        )
+        return metrics
+
+
+class ServerScenario(Scenario):
+    """MLPerf server: open-loop Poisson arrivals through the micro-batching
+    scheduler, with p99-latency SLO accounting and achieved-QPS."""
+
+    kind = "server"
+    default_scheduler = SchedulerConfig(max_batch=4, batch_timeout_ms=2.0)
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        self.warmup(predict, tracer, 1)
+        sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
+        load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
+        with tracer.span("scenario:server", TraceLevel.MODEL, rate_hz=spec.rate_hz):
+            t0 = clock()
+            futs = [
+                sched.submit(batch_size=1, arrival_s=t0 + req.arrival_s)
+                for req in load.requests()
+            ]
+            sched.run_until_idle()
+        reqs = [f.request for f in futs]
+        # end-to-end latency including queueing: completion - arrival
+        lat = [r.latency_s for r in reqs]
+        makespan = max(r.end_s for r in reqs) - t0
+        n = len(reqs)
+        p99 = percentile(lat, 99.0) * 1e3
+        metrics = latency_summary(lat)
+        metrics.update(
+            {
+                "scenario": "server",
+                "num_requests": n,
+                "p99_ms": p99,
+                "achieved_qps": n / makespan if makespan > 0 else float("inf"),
+                "offered_qps": spec.rate_hz,
+                "slo_ms": spec.slo_ms,
+                "slo_met": p99 <= spec.slo_ms,
+                "mean_queue_s": sum(r.queue_s for r in reqs) / n,
+                **slo_attainment(lat, spec.slo_ms),
+                **self.scheduler_metrics(sched),
+            }
+        )
+        return metrics
+
+
+class OfflineScenario(Scenario):
+    """MLPerf offline: submit everything at once; the scheduler coalesces
+    micro-batches of up to ``max_batch`` requests — max throughput."""
+
+    kind = "offline"
+    default_scheduler = SchedulerConfig(max_batch=8, batch_timeout_ms=0.0)
+
+    def run(self, predict, tracer, clock, sleep, scheduler=None):
+        spec = self.spec
+        cfg = scheduler or self.default_scheduler
+        self.warmup(predict, tracer, spec.batch_size * cfg.max_batch)
+        sched = self.make_scheduler(predict, tracer, clock, sleep, cfg)
+        with tracer.span("scenario:offline", TraceLevel.MODEL):
+            t0 = clock()
+            futs = [
+                sched.submit(batch_size=spec.batch_size, arrival_s=t0)
+                for _ in range(spec.num_requests)
+            ]
+            sched.run_until_idle()
+            elapsed = clock() - t0
+        reqs = [f.request for f in futs]
+        inputs = sum(r.batch_size for r in reqs)
+        lat = [r.latency_s for r in reqs]
+        metrics = latency_summary(lat)
+        metrics.update(
+            {
+                "scenario": "offline",
+                "num_requests": len(reqs),
+                "throughput_ips": inputs / elapsed if elapsed > 0 else float("inf"),
+                "elapsed_s": elapsed,
+                **self.scheduler_metrics(sched),
+            }
+        )
+        return metrics
+
+
+_SCENARIOS: Dict[str, Type[Scenario]] = {
+    cls.kind: cls
+    for cls in (
+        OnlineScenario,
+        BatchedScenario,
+        TraceScenario,
+        SingleStreamScenario,
+        ServerScenario,
+        OfflineScenario,
+    )
+}
+
+
+def register_scenario(kind: str, cls: Type[Scenario]) -> None:
+    """Pluggable scenarios, mirroring the workload-generator registry."""
+    _SCENARIOS[kind] = cls
+
+
+def scenario_kinds() -> List[str]:
+    return sorted(_SCENARIOS)
+
+
+def make_scenario(spec: ScenarioSpec) -> Scenario:
+    try:
+        return _SCENARIOS[spec.kind](spec)
+    except KeyError:
+        raise ValueError(f"unknown scenario kind {spec.kind!r}; have {sorted(_SCENARIOS)}")
+
+
 def run_scenario(
     spec: ScenarioSpec,
     predict: PredictFn,
     tracer: Tracer,
     clock: Callable[[], float] = time.perf_counter,
     sleep: Callable[[float], None] = time.sleep,
+    scheduler: Optional[Union[SchedulerConfig, Dict[str, Any]]] = None,
 ) -> Dict[str, Any]:
     """Execute a scenario and return its metrics dict.
 
-    ``clock``/``sleep`` are injectable for deterministic tests (the paper
-    allows simulated time in traces)."""
-    if spec.kind == "online":
-        return _run_online(spec, predict, tracer, clock, sleep)
-    if spec.kind == "batched":
-        return _run_batched(spec, predict, tracer, clock)
-    if spec.kind == "trace":
-        return _run_trace(spec, predict, tracer, clock, sleep)
-    raise ValueError(f"unknown scenario kind {spec.kind!r}")
-
-
-def _measure(
-    requests: Sequence[Request],
-    predict: PredictFn,
-    tracer: Tracer,
-    clock: Callable[[], float],
-    sleep: Callable[[float], None],
-    honor_arrivals: bool,
-) -> List[Dict[str, float]]:
-    """Issue requests, recording per-request service + queueing latency."""
-    results = []
-    t0 = clock()
-    for req in requests:
-        if honor_arrivals:
-            now = clock() - t0
-            if req.arrival_s > now:
-                sleep(req.arrival_s - now)
-        start = clock()
-        with tracer.span(
-            "predict", TraceLevel.MODEL, request_id=req.request_id, batch=req.batch_size
-        ):
-            predict(req.batch_size)
-        end = clock()
-        results.append(
-            {
-                "request_id": req.request_id,
-                "batch_size": req.batch_size,
-                "arrival_s": req.arrival_s,
-                "start_s": start - t0,
-                "latency_s": end - start,
-                # queueing delay: time between intended arrival and service start
-                "queue_s": max(0.0, (start - t0) - req.arrival_s),
-            }
-        )
-    return results
-
-
-def _warmup(spec: ScenarioSpec, predict: PredictFn, tracer: Tracer, batch: int) -> None:
-    for _ in range(spec.warmup):
-        with tracer.span("warmup", TraceLevel.MODEL, batch=batch):
-            predict(batch)
-
-
-def _run_online(spec, predict, tracer, clock, sleep) -> Dict[str, Any]:
-    _warmup(spec, predict, tracer, 1)
-    load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
-    with tracer.span("scenario:online", TraceLevel.MODEL, rate_hz=spec.rate_hz):
-        rows = _measure(list(load.requests()), predict, tracer, clock, sleep, True)
-    lat = [r["latency_s"] for r in rows]
-    metrics = latency_summary(lat)
-    metrics.update(
-        {
-            "scenario": "online",
-            "num_requests": len(rows),
-            "mean_queue_s": sum(r["queue_s"] for r in rows) / max(len(rows), 1),
-        }
-    )
-    return metrics
-
-
-def _run_batched(spec, predict, tracer, clock) -> Dict[str, Any]:
-    """Throughput at each batch size; max throughput + optimal batch size."""
-    batch_sizes = spec.batch_sizes or [spec.batch_size]
-    per_batch: Dict[int, Dict[str, float]] = {}
-    for bs in batch_sizes:
-        _warmup(spec, predict, tracer, bs)
-        load = BatchedLoad(spec.num_requests, bs)
-        with tracer.span("scenario:batched", TraceLevel.MODEL, batch=bs):
-            t0 = clock()
-            rows = _measure(list(load.requests()), predict, tracer, clock, time.sleep, False)
-            elapsed = clock() - t0
-        inputs = sum(r["batch_size"] for r in rows)
-        lat = [r["latency_s"] for r in rows]
-        per_batch[bs] = {
-            "throughput_ips": inputs / elapsed if elapsed > 0 else float("inf"),
-            **latency_summary(lat),
-        }
-    best_bs = max(per_batch, key=lambda b: per_batch[b]["throughput_ips"])
-    return {
-        "scenario": "batched",
-        "per_batch": {str(k): v for k, v in per_batch.items()},
-        "max_throughput_ips": per_batch[best_bs]["throughput_ips"],
-        "optimal_batch_size": best_bs,
-    }
-
-
-def _run_trace(spec, predict, tracer, clock, sleep) -> Dict[str, Any]:
-    if not spec.arrivals:
-        raise ValueError("trace scenario requires arrivals")
-    _warmup(spec, predict, tracer, spec.batch_size)
-    load = TraceReplayLoad(spec.arrivals, [spec.batch_size] * len(spec.arrivals))
-    with tracer.span("scenario:trace", TraceLevel.MODEL):
-        rows = _measure(list(load.requests()), predict, tracer, clock, sleep, True)
-    lat = [r["latency_s"] for r in rows]
-    metrics = latency_summary(lat)
-    metrics.update({"scenario": "trace", "num_requests": len(rows)})
-    return metrics
+    Compatibility shim: callers keep passing a bare predict function; the
+    scenario wraps it in a :class:`RequestScheduler` (closed-loop kinds use a
+    degenerate batch-1 scheduler so their metrics are bit-identical to the
+    pre-scheduler implementation).  ``scheduler`` selects the
+    scheduler-backed executor configuration (threaded through
+    ``EvaluationRequest.scheduler`` by the agent/server dispatch).
+    ``clock``/``sleep`` are injectable for deterministic tests."""
+    if isinstance(scheduler, dict):
+        scheduler = SchedulerConfig.from_dict(scheduler)
+    return make_scenario(spec).run(predict, tracer, clock, sleep, scheduler=scheduler)

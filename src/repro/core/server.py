@@ -22,6 +22,7 @@ from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from ..serve.scheduler import SchedulerConfig
 from .agent import Agent, EvaluationRequest
 from .analysis import (
     comparison_table,
@@ -29,6 +30,7 @@ from .analysis import (
     layer_breakdown,
     level_breakdown,
     markdown_report,
+    scheduler_summary,
     top_layers,
     throughput_scalability,
 )
@@ -89,9 +91,17 @@ class Server:
         req: EvaluationRequest,
         requirements: Optional[SystemRequirements] = None,
         policy: Optional[DispatchPolicy] = None,
+        scheduler: Optional[SchedulerConfig] = None,
     ) -> List[Dict[str, Any]]:
-        """Dispatch an evaluation; returns one result per served agent."""
+        """Dispatch an evaluation; returns one result per served agent.
+
+        ``scheduler`` threads a request-scheduler configuration through
+        dispatch so the agent runs the scenario on the scheduler-backed
+        executor (micro-batching + bounded queue); a config already present
+        on the request wins."""
         policy = policy or DispatchPolicy()
+        if scheduler is not None and req.scheduler is None:
+            req.scheduler = scheduler
         model_key = self._model_key(req)
         records = self.registry.resolve(
             model_key,
@@ -246,6 +256,14 @@ class Server:
                         "\n".join(f"- {k}: {v*1e3:.3f} ms" for k, v in sorted(lv.items())),
                     )
                 )
+                sched = scheduler_summary(spans)
+                if sched:
+                    sections.append(
+                        (
+                            "Scheduler (queueing + micro-batching)",
+                            "\n".join(f"- {k}: {v:.3f}" for k, v in sorted(sched.items())),
+                        )
+                    )
         return markdown_report(f"MLModelScope report: {model or 'all models'}", sections)
 
     def shutdown(self) -> None:

@@ -81,6 +81,15 @@ class UniformLoad(WorkloadGenerator):
             )
 
 
+class SingleStreamLoad(BatchedLoad):
+    """MLPerf single-stream: back-to-back batch-1 requests (latency-bound)."""
+
+    name = "single_stream"
+
+    def __init__(self, num_requests: int) -> None:
+        super().__init__(num_requests, 1)
+
+
 class TraceReplayLoad(WorkloadGenerator):
     """Custom/emerging workloads: replay recorded (arrival, batch) pairs."""
 
@@ -102,6 +111,9 @@ _GENERATORS: Dict[str, Callable[..., WorkloadGenerator]] = {
     "poisson": PoissonLoad,
     "uniform": UniformLoad,
     "trace": TraceReplayLoad,
+    "single_stream": SingleStreamLoad,
+    # the server scenario's open-loop arrival process is Poisson
+    "server": PoissonLoad,
 }
 
 

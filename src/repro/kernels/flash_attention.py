@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; bridge both
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version compat
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 

@@ -1,12 +1,21 @@
 """End-to-end serving driver (the e2e application for this paper's kind).
 
-Serves a model with batched requests through the ServingEngine under a
-platform benchmarking scenario: requests arrive (Poisson or batched), get
-grouped into engine batches, prefilled and decoded; latency/throughput
-metrics flow into the evaluation database.
+Serves a model under a Poisson request load through the platform's request
+scheduler.  Two executor modes:
+
+* ``static``      — the threaded RequestScheduler coalesces concurrent
+                    requests into micro-batches (up to ``--engine-batch``
+                    within ``--batch-timeout-ms``) executed by the static
+                    prefill/decode engine.
+* ``continuous``  — slot-based continuous batching: prompts are admitted
+                    into free KV slots at decode-step boundaries; reports
+                    per-request TTFT and tokens/sec.
+
+Latency/throughput metrics and the scheduler's queue/occupancy series flow
+into the evaluation database.
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
-        --requests 16 --rate-hz 20 --max-new-tokens 8
+        --requests 16 --rate-hz 20 --max-new-tokens 8 --mode continuous
 """
 from __future__ import annotations
 
@@ -21,7 +30,84 @@ from ..core.analysis import latency_summary
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.workload import PoissonLoad
 from ..models import build_model
-from ..serve.engine import ServingEngine
+from ..serve.engine import ServeRequest, ServingEngine
+from ..serve.scheduler import RequestScheduler, SchedulerConfig
+
+
+def _serve_static(engine, cfg, args, load, prompts):
+    """Poisson arrivals -> threaded micro-batching scheduler -> engine."""
+    extra = None
+    if cfg.family == "encdec":
+        extra = {
+            "frames": np.zeros((args.engine_batch, cfg.encoder_seq, cfg.d_model), np.float32)
+        }
+
+    def execute(batch):
+        ps = [r.payload for r in batch]
+        ex = None
+        if extra is not None:
+            ex = {"frames": extra["frames"][: len(ps)]}
+        res = engine.generate(ps, args.max_new_tokens, extra_inputs=ex)
+        print(
+            f"[serve] batch of {len(ps)}: prefill {res.prefill_s*1e3:.1f} ms, "
+            f"decode {res.decode_s*1e3:.1f} ms ({res.tokens_per_s:,.1f} tok/s)"
+        )
+
+    sched = RequestScheduler(
+        execute,
+        SchedulerConfig(
+            max_batch=args.engine_batch, batch_timeout_ms=args.batch_timeout_ms
+        ),
+    ).start()
+    t_start = time.perf_counter()
+    futs = []
+    for req, prompt in zip(load, prompts):
+        now = time.perf_counter() - t_start
+        if req.arrival_s > now:
+            time.sleep(req.arrival_s - now)
+        futs.append(sched.submit(payload=prompt))
+    for f in futs:
+        f.result()
+    sched.stop()
+    wall = time.perf_counter() - t_start
+    latencies = [f.request.latency_s for f in futs]
+    generated = len(futs) * args.max_new_tokens
+    summary = latency_summary(latencies) if latencies else {}
+    summary.update(
+        {
+            "tokens_per_s": generated / wall,
+            **{f"sched_{k}": v for k, v in sched.stats().items()},
+        }
+    )
+    return summary, generated, wall
+
+
+def _serve_continuous(engine, cfg, args, load, prompts):
+    """Offline continuous batching over the same request set."""
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=args.max_new_tokens)
+        for i, p in enumerate(prompts)
+    ]
+    stats = engine.serve_continuous(reqs, num_slots=args.engine_batch)
+    for r in stats.results:
+        print(
+            f"[serve] req {r.request_id}: slot {r.slot} "
+            f"(admitted step {r.admit_step}), ttft {r.ttft_s*1e3:.1f} ms, "
+            f"{r.tokens_per_s:,.1f} tok/s"
+        )
+    latencies = [r.latency_s for r in stats.results]
+    summary = latency_summary(latencies) if latencies else {}
+    summary.update(
+        {
+            "tokens_per_s": stats.throughput_tps,
+            "ttft_mean_ms": float(
+                np.mean([r.ttft_s for r in stats.results]) * 1e3
+            ),
+            "mean_slot_occupancy": stats.mean_slot_occupancy,
+            "decode_steps": stats.steps,
+        }
+    )
+    return summary, stats.total_tokens, stats.wall_s
 
 
 def main(argv=None) -> int:
@@ -29,9 +115,11 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--backend", default="flash")
+    ap.add_argument("--mode", default="static", choices=["static", "continuous"])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate-hz", type=float, default=20.0)
     ap.add_argument("--engine-batch", type=int, default=4)
+    ap.add_argument("--batch-timeout-ms", type=float, default=10.0)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
@@ -45,48 +133,26 @@ def main(argv=None) -> int:
         model, params, max_batch=args.engine_batch, max_seq=args.max_seq
     )
     rng = np.random.default_rng(0)
-
-    # generate the request load, group into engine batches as they arrive
     load = list(PoissonLoad(args.requests, args.rate_hz, seed=0).requests())
-    latencies, generated = [], 0
-    t_start = time.perf_counter()
-    pending = []
-    for req in load:
-        now = time.perf_counter() - t_start
-        if req.arrival_s > now:
-            time.sleep(req.arrival_s - now)
-        pending.append(
-            (req, rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32))
-        )
-        if len(pending) == args.engine_batch:
-            batch_reqs, prompts = zip(*pending)
-            pending = []
-            extra = None
-            if cfg.family == "encdec":
-                extra = {"frames": np.zeros(
-                    (len(prompts), cfg.encoder_seq, cfg.d_model), np.float32)}
-            t0 = time.perf_counter()
-            res = engine.generate(list(prompts), args.max_new_tokens, extra_inputs=extra)
-            t1 = time.perf_counter()
-            done = time.perf_counter() - t_start
-            generated += res.tokens.size
-            for r in batch_reqs:
-                latencies.append(done - r.arrival_s)   # queueing + service
-            print(
-                f"[serve] batch of {len(prompts)}: prefill {res.prefill_s*1e3:.1f} ms, "
-                f"decode {res.decode_s*1e3:.1f} ms ({res.tokens_per_s:,.1f} tok/s)"
-            )
-    wall = time.perf_counter() - t_start
-    summary = latency_summary(latencies) if latencies else {}
-    summary["tokens_per_s"] = generated / wall
-    print(f"[serve] {len(latencies)} requests, {generated} tokens in {wall:.2f}s")
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
+        for _ in load
+    ]
+
+    if args.mode == "continuous":
+        summary, generated, wall = _serve_continuous(engine, cfg, args, load, prompts)
+    else:
+        summary, generated, wall = _serve_static(engine, cfg, args, load, prompts)
+
+    print(f"[serve] {len(load)} requests, {generated} tokens in {wall:.2f}s")
     for k, v in summary.items():
-        print(f"[serve]   {k:20s} {v:.2f}")
+        print(f"[serve]   {k:24s} {v:.2f}")
     if args.evaldb:
         EvalDB(args.evaldb).insert(
             EvaluationRecord(
                 model=cfg.name, model_version="1.0.0", backend=args.backend,
-                backend_version="1.0.0", system="local", scenario="serve-poisson",
+                backend_version="1.0.0", system="local",
+                scenario=f"serve-{args.mode}",
                 batch_size=args.engine_batch, trace_level="NONE",
                 agent_id="serve-driver", metrics=summary,
             )

@@ -255,13 +255,14 @@ class DecoderLM(BaseModel):
         x = shard_act(x + m, ("batch", "seq", "act_embed"))
         return (x, aux, kv) if return_kv else (x, aux)
 
-    def _attn_block_decode(self, blk, x1, kc, vc, pos, window, ring=False):
+    def _attn_block_decode(self, blk, x1, kc, vc, pos, window, ring=False,
+                           uniform_pos=True):
         cfg = self.cfg
         blk = self._cast(blk)
         h = self._norm(x1, blk["ln1"])
         a, kc, vc = attn_decode(
             blk["attn"], h, kc, vc, pos, cfg, backend=self.backend,
-            window=window, ring=ring,
+            window=window, ring=ring, uniform_pos=uniform_pos,
         )
         if cfg.post_norms:
             a = self._norm(a, blk["post_attn_norm"])
@@ -557,8 +558,12 @@ class DecoderLM(BaseModel):
         return x, new_cache
 
     # -- decode ------------------------------------------------------------------------
-    def decode(self, params, tokens, cache):
-        """One token step. tokens: (b,) int32. Returns (logits, new cache)."""
+    def decode(self, params, tokens, cache, uniform_pos=True):
+        """One token step. tokens: (b,) int32. Returns (logits, new cache).
+
+        ``uniform_pos=False`` selects the masked per-row cache-update path so
+        slots may sit at different sequence positions (continuous batching).
+        """
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_tokens(params, tokens)[:, None, :]       # (b, 1, D)
@@ -569,8 +574,12 @@ class DecoderLM(BaseModel):
 
                 def body(x1, blk, caches, li):
                     kc, vc = caches["k"], caches["v"]     # (2, b, S, kv, dh)
-                    x1, k0, v0 = self._attn_block_decode(blk["a"], x1, kc[0], vc[0], pos, None)
-                    x1, k1, v1 = self._attn_block_decode(blk["b"], x1, kc[1], vc[1], pos, None)
+                    x1, k0, v0 = self._attn_block_decode(
+                        blk["a"], x1, kc[0], vc[0], pos, None, uniform_pos=uniform_pos
+                    )
+                    x1, k1, v1 = self._attn_block_decode(
+                        blk["b"], x1, kc[1], vc[1], pos, None, uniform_pos=uniform_pos
+                    )
                     return x1, {"k": jnp.stack([k0, k1]), "v": jnp.stack([v0, v1])}
 
                 x, stacks = _scan_cached(
@@ -588,7 +597,8 @@ class DecoderLM(BaseModel):
                     blk = xs_l[0]
                     window = xs_l[1] if len(xs_l) > 1 else None
                     x1, kc, vc = self._attn_block_decode(
-                        blk, x1, caches["k"], caches["v"], pos, window
+                        blk, x1, caches["k"], caches["v"], pos, window,
+                        uniform_pos=uniform_pos,
                     )
                     return x1, {"k": kc, "v": vc}
 
@@ -610,12 +620,12 @@ class DecoderLM(BaseModel):
             )
             new_cache.update(stacks)
         elif cfg.family == "hybrid":
-            x, new_cache = self._hybrid_decode(params, x, cache)
+            x, new_cache = self._hybrid_decode(params, x, cache, uniform_pos=uniform_pos)
         new_cache["pos"] = pos + 1
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache
 
-    def _hybrid_decode(self, params, x, cache):
+    def _hybrid_decode(self, params, x, cache, uniform_pos=True):
         cfg = self.cfg
         G, E = cfg.num_layers // cfg.hybrid_attn_every, cfg.hybrid_attn_every
         grouped = jax.tree.map(
@@ -640,7 +650,8 @@ class DecoderLM(BaseModel):
             x1 = y[:, None]
             h = self._norm(x1, shared["ln1"])
             a, kc, vc = attn_decode(
-                shared["attn"], h, kc, vc, pos, cfg, backend=self.backend, ring=ring
+                shared["attn"], h, kc, vc, pos, cfg, backend=self.backend,
+                ring=ring, uniform_pos=uniform_pos,
             )
             x1 = x1 + a
             x1 = x1 + mlp_apply(shared["mlp"], self._norm(x1, shared["ln2"]))
@@ -804,7 +815,7 @@ class EncDecLM(BaseModel):
         logits = self._logits(params, x[:, -1:, :])[:, 0]
         return logits, new_cache
 
-    def decode(self, params, tokens, cache):
+    def decode(self, params, tokens, cache, uniform_pos=True):
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_tokens(params, tokens)[:, None, :]
@@ -815,7 +826,7 @@ class EncDecLM(BaseModel):
             h = self._norm(x1, blk["ln1"])
             a, kc, vc = attn_decode(
                 blk["self_attn"], h, caches["k"], caches["v"], pos, cfg,
-                backend=self.backend, use_rope=False,
+                backend=self.backend, use_rope=False, uniform_pos=uniform_pos,
             )
             x1 = x1 + a
             h2 = self._norm(x1, blk["ln2"])

@@ -188,7 +188,12 @@ def _parse_instruction(line: str) -> Optional[Instruction]:
     clean_ops = []
     for o in operands:
         o = o.strip()
-        if o.startswith("%"):
+        # newer XLA prints operands with an inline shape ("f32[8]{0} %name");
+        # take the trailing %-token when present, else the bare token
+        pm = re.search(r"%([\w\.\-]+)$", o)
+        if pm:
+            clean_ops.append(pm.group(1))
+        elif o.startswith("%"):
             clean_ops.append(o.lstrip("%"))
         elif re.fullmatch(r"-?\d+", o):
             clean_ops.append(o)

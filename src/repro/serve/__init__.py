@@ -1,3 +1,36 @@
-from .engine import ServingEngine
+"""Serving layer: request scheduler + batched/continuous serving engine.
 
-__all__ = ["ServingEngine"]
+Attribute access is lazy (PEP 562) so that the dependency-light scheduler
+(`repro.serve.scheduler`, pure Python) can be imported by the core scenario
+layer without pulling in jax and the model zoo via `repro.serve.engine`.
+"""
+_EXPORTS = {
+    "ServingEngine": ".engine",
+    "GenerationResult": ".engine",
+    "ServeRequest": ".engine",
+    "RequestResult": ".engine",
+    "ContinuousStats": ".engine",
+    "RequestScheduler": ".scheduler",
+    "SchedulerConfig": ".scheduler",
+    "SchedulerQueueFull": ".scheduler",
+    "ScheduledRequest": ".scheduler",
+    "CompletionFuture": ".scheduler",
+    "SlotPool": ".scheduler",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        module = importlib.import_module(_EXPORTS[name], __name__)
+        value = getattr(module, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,21 +1,35 @@
-"""Batched serving engine: prefill + decode with a reusable KV cache.
+"""Batched + continuous-batching serving engine.
 
 This is the platform's "cloud scenario" executor (the paper deploys models
-either for cloud serving or edge inference). Requests are grouped into
-fixed-size batches (padded), prefilled once, then decoded token-by-token
-with cache donation so decode is allocation-free at steady state.
+either for cloud serving or edge inference). Two generate paths share the
+prefill/decode jits:
+
+* ``generate``          — static fixed-batch: requests grouped into padded
+  batches, prefilled once, decoded token-by-token with cache donation so
+  decode is allocation-free at steady state.
+* ``serve_continuous``  — slot-based continuous batching: a fixed pool of
+  KV-cache slots; finished sequences free their slot and queued prompts are
+  admitted at decode-step boundaries (batch-1 prefill scattered into the
+  pooled cache), so long and short generations no longer convoy. Uses the
+  model's masked per-row cache-update path (``uniform_pos=False``) because
+  slots sit at different sequence positions. Reports per-request
+  time-to-first-token and tokens/sec.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models.lm import BaseModel
+from ..models.params import tree_map_defs
+from .scheduler import SlotPool
 
 
 @dataclass
@@ -24,6 +38,41 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     tokens_per_s: float
+
+
+@dataclass
+class ServeRequest:
+    """One prompt for the continuous-batching loop."""
+
+    request_id: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+@dataclass
+class RequestResult:
+    """Per-request serving metrics (continuous batching)."""
+
+    request_id: int
+    tokens: np.ndarray          # (max_new_tokens,)
+    slot: int
+    admit_step: int             # decode-step boundary at which it was admitted
+    finish_step: int
+    ttft_s: float               # submit -> first token (prefill argmax)
+    latency_s: float            # submit -> last token
+    tokens_per_s: float
+
+
+@dataclass
+class ContinuousStats:
+    """Aggregate output of one ``serve_continuous`` run."""
+
+    results: List[RequestResult]
+    steps: int                  # decode steps executed
+    wall_s: float
+    total_tokens: int
+    throughput_tps: float
+    mean_slot_occupancy: float  # active slots per decode step
 
 
 class ServingEngine:
@@ -43,6 +92,12 @@ class ServingEngine:
         self._prefill = jax.jit(model.prefill)
         # donate the cache so steady-state decode does not reallocate it
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        # continuous batching: masked per-row cache updates (slots decode at
+        # different positions) + slot scatter of a batch-1 prefill cache
+        self._decode_ragged = jax.jit(
+            partial(model.decode, uniform_pos=False), donate_argnums=(2,)
+        )
+        self._slot_writers: Dict[int, Callable] = {}
 
     def _pad_prompts(self, prompts: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
         b = len(prompts)
@@ -90,4 +145,138 @@ class ServingEngine:
             prefill_s=t1 - t0,
             decode_s=decode_s,
             tokens_per_s=b * max_new_tokens / decode_s if decode_s > 0 else float("inf"),
+        )
+
+    # -- continuous batching -------------------------------------------------
+    def _slot_writer(self, num_slots: int) -> Callable:
+        """Jitted scatter of a batch-1 cache into slot ``i`` of the pool.
+
+        The batch axis of each cache leaf comes from the model's own P-tree
+        axis names, so this works for every cache layout (dense/MoE KV,
+        interleaved pairs, SSM state, hybrid, enc-dec cross caches).
+        """
+        writer = self._slot_writers.get(num_slots)
+        if writer is not None:
+            return writer
+        defs = self.model.cache_defs(num_slots, self.max_seq, dtype=self.cache_dtype)
+        axis_tree = tree_map_defs(lambda path, p: p.axes.index("batch"), defs)
+
+        def write(pool, one, slot):
+            def w(dst, src, ax):
+                starts = tuple(slot if i == ax else 0 for i in range(dst.ndim))
+                return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+            return jax.tree.map(w, pool, one, axis_tree)
+
+        writer = jax.jit(write, donate_argnums=(0,))
+        self._slot_writers[num_slots] = writer
+        return writer
+
+    def serve_continuous(
+        self,
+        requests: List[ServeRequest],
+        num_slots: Optional[int] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> ContinuousStats:
+        """Slot-based continuous-batching generate loop.
+
+        All prompts are left-padded to a common prefill length (one compile);
+        admission runs a batch-1 prefill and scatters its cache into the free
+        slot, then every decode step advances all active slots together.
+        ``clock`` is injectable so tests measure deterministic timings.
+        """
+        if not requests:
+            return ContinuousStats([], 0, 0.0, 0, 0.0, 0.0)
+        if getattr(self.model.cfg, "family", "") == "encdec":
+            raise NotImplementedError(
+                "continuous batching does not support encoder-decoder models: "
+                "admission prefill would need per-request encoder frames"
+            )
+        num_slots = num_slots or self.max_batch
+        prefill_len = max(len(r.prompt) for r in requests)
+        for r in requests:
+            if prefill_len + r.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request {r.request_id}: prompt + generation exceeds max_seq"
+                )
+        pool = SlotPool(num_slots)
+        cache = self.model.init_cache(num_slots, self.max_seq, dtype=self.cache_dtype)
+        write = self._slot_writer(num_slots)
+        # one reusable batch-1 cache for admission prefills (prefill is
+        # functional: it returns a fresh tree, the zeros base is never mutated)
+        cache1 = self.model.init_cache(1, self.max_seq, dtype=self.cache_dtype)
+        queue = deque(requests)
+        nxt = np.zeros((num_slots,), np.int32)
+        # slot -> [generated tokens]; request/submit times by id
+        slot_tokens: Dict[int, List[int]] = {}
+        finished: Dict[int, RequestResult] = {}
+        t_start = clock()
+        submit_s = {r.request_id: t_start for r in requests}
+        step = 0
+        occupancy_sum = 0
+        while queue or pool.num_active:
+            # retire sequences that already hold all their tokens, so their
+            # slots are free for admission at this same step boundary
+            for slot in list(pool.active):
+                req = pool.active[slot]
+                if len(slot_tokens[slot]) >= req.max_new_tokens:
+                    now = clock()
+                    finished[req.request_id] = RequestResult(
+                        request_id=req.request_id,
+                        tokens=np.asarray(slot_tokens.pop(slot), np.int32),
+                        slot=slot,
+                        admit_step=req._admit_step,  # type: ignore[attr-defined]
+                        finish_step=step,
+                        ttft_s=req._ttft_s,          # type: ignore[attr-defined]
+                        latency_s=now - submit_s[req.request_id],
+                        tokens_per_s=(
+                            req.max_new_tokens / (now - submit_s[req.request_id])
+                            if now > submit_s[req.request_id] else float("inf")
+                        ),
+                    )
+                    pool.release(slot)
+            # admission at the decode-step boundary: fill every free slot
+            while queue and pool.num_free:
+                req = queue.popleft()
+                slot = pool.admit(req, step=step)
+                padded = np.zeros((prefill_len,), np.int32)
+                padded[prefill_len - len(req.prompt):] = req.prompt
+                logits1, filled = self._prefill(
+                    self.params, {"tokens": jnp.asarray(padded[None])}, cache1
+                )
+                tok0 = int(jnp.argmax(logits1[0]))
+                cache = write(cache, filled, jnp.int32(slot))
+                nxt[slot] = tok0
+                slot_tokens[slot] = [tok0]
+                req._admit_step = step          # type: ignore[attr-defined]
+                req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+            if not pool.num_active:
+                if queue:
+                    continue            # freshly-retired slots admit the queue
+                break
+            if all(
+                len(slot_tokens[s]) >= pool.active[s].max_new_tokens
+                for s in pool.active
+            ):
+                continue  # every active slot is at budget: retire, don't decode
+            # one decode step for the whole pool (inactive slots are ignored)
+            logits, cache = self._decode_ragged(self.params, jnp.asarray(nxt), cache)
+            tokens_all = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            step += 1
+            occupancy_sum += pool.num_active
+            for slot in pool.active:
+                if len(slot_tokens[slot]) < pool.active[slot].max_new_tokens:
+                    slot_tokens[slot].append(int(tokens_all[slot]))
+                    nxt[slot] = tokens_all[slot]
+        jax.block_until_ready(cache["pos"])
+        wall = clock() - t_start
+        results = [finished[r.request_id] for r in requests]
+        total_tokens = sum(len(r.tokens) for r in results)
+        return ContinuousStats(
+            results=results,
+            steps=step,
+            wall_s=wall,
+            total_tokens=total_tokens,
+            throughput_tps=total_tokens / wall if wall > 0 else float("inf"),
+            mean_slot_occupancy=occupancy_sum / step if step else float(num_slots),
         )

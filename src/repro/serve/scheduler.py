@@ -1,0 +1,432 @@
+"""Continuous-batching request scheduler (the shared serving hot path).
+
+Every benchmarking scenario and the serving engine issue work through one
+asynchronous :class:`RequestScheduler`: a bounded FIFO request queue with
+dynamic micro-batching (coalesce up to ``max_batch`` requests that arrive
+within a ``batch_timeout_ms`` admission window) and per-request completion
+futures.  This is the layer the paper's cloud-serving scenarios exercise —
+queueing, batching and admission effects all happen here, not inside the
+model executor.
+
+Two drive modes share the same batch-formation logic:
+
+* **synchronous** (no worker thread) — ``step()`` / ``run_until_idle()``
+  form and execute micro-batches inline.  With an injected fake
+  ``clock``/``sleep`` pair this is a deterministic discrete-event
+  simulation of the server (requests may be pre-submitted with future
+  ``arrival_s`` values); with real time it is a single-threaded server
+  loop.  ``CompletionFuture.result()`` drives the scheduler until that
+  request completes, so closed-loop scenarios need no thread.
+* **threaded** — ``start()`` spawns a worker that coalesces concurrently
+  submitted requests under a condition variable; ``batch_timeout_ms``
+  bounds how long a non-full batch waits for stragglers.
+
+The scheduler also owns the *slot* bookkeeping for continuous batching
+(:class:`SlotPool`): a fixed pool of KV-cache slots where finished
+sequences free their slot and queued prompts are admitted at decode-step
+boundaries (used by ``repro.serve.engine.ServingEngine.serve_continuous``).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+__all__ = [
+    "CompletionFuture",
+    "RequestScheduler",
+    "ScheduledRequest",
+    "SchedulerConfig",
+    "SchedulerQueueFull",
+    "SlotPool",
+]
+
+
+class SchedulerQueueFull(RuntimeError):
+    """Raised when a non-blocking submit finds the bounded queue full."""
+
+
+@dataclass
+class SchedulerConfig:
+    """Knobs for the request scheduler (part of the user input; the server
+    threads this through dispatch so an evaluation can select the
+    scheduler-backed executor)."""
+
+    max_batch: int = 8             # micro-batch coalescing limit (requests)
+    batch_timeout_ms: float = 2.0  # admission window for a non-full batch
+    queue_depth: int = 1024        # bounded queue (admission control)
+    num_slots: int = 8             # KV slots for continuous batching
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "max_batch": self.max_batch,
+            "batch_timeout_ms": self.batch_timeout_ms,
+            "queue_depth": self.queue_depth,
+            "num_slots": self.num_slots,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SchedulerConfig":
+        return cls(**{k: v for k, v in d.items() if k in cls.__dataclass_fields__})
+
+
+@dataclass
+class ScheduledRequest:
+    """One unit of scheduled work plus its measured lifecycle times.
+
+    All times are in scheduler-clock units (``clock()`` values), so an
+    injected fake clock yields fully deterministic latencies.
+    """
+
+    request_id: int
+    batch_size: int = 1
+    arrival_s: float = 0.0      # when the request enters the system
+    payload: Any = None
+    submit_s: float = 0.0       # when submit() was called
+    start_s: float = 0.0        # micro-batch execution start
+    end_s: float = 0.0          # micro-batch execution end
+    future: "CompletionFuture" = None  # type: ignore[assignment]
+
+    @property
+    def queue_s(self) -> float:
+        return max(0.0, self.start_s - self.arrival_s)
+
+    @property
+    def service_s(self) -> float:
+        return self.end_s - self.start_s
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end latency including queueing delay."""
+        return self.end_s - self.arrival_s
+
+
+class CompletionFuture:
+    """Per-request completion handle.
+
+    In threaded mode ``result()`` blocks on an event; in synchronous mode it
+    drives the scheduler until this request's micro-batch has executed.
+    """
+
+    __slots__ = ("request", "_scheduler", "_event", "_value", "_error", "_done")
+
+    def __init__(self, scheduler: "RequestScheduler", request: ScheduledRequest):
+        self.request = request
+        self._scheduler = scheduler
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def _set(self, value: Any = None, error: Optional[BaseException] = None) -> None:
+        self._value = value
+        self._error = error
+        self._done = True
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._done:
+            if self._scheduler.running:
+                if not self._event.wait(timeout):
+                    raise TimeoutError(
+                        f"request {self.request.request_id} not done in {timeout}s"
+                    )
+            else:
+                self._scheduler._drive_until(self)
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class RequestScheduler:
+    """Bounded-queue, micro-batching request scheduler.
+
+    ``execute`` runs one coalesced micro-batch: it receives the list of
+    :class:`ScheduledRequest` and returns either one result per request, or
+    a single value shared by all of them (or ``None``).
+    """
+
+    def __init__(
+        self,
+        execute: Callable[[List[ScheduledRequest]], Any],
+        config: Optional[SchedulerConfig] = None,
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        sleep: Callable[[float], None] = time.sleep,
+        tracer=None,
+    ) -> None:
+        self.execute = execute
+        self.config = config or SchedulerConfig()
+        if self.config.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.config.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        self.clock = clock
+        self.sleep = sleep
+        self.tracer = tracer
+        self._cond = threading.Condition()
+        # pending requests sorted by (arrival_s, request_id): FIFO within
+        # identical arrivals, earliest-arrival-first otherwise
+        self._queue: List[ScheduledRequest] = []
+        self._next_id = 0
+        self._thread: Optional[threading.Thread] = None
+        self.running = False
+        # stats series: (time, value) samples recorded at each batch execution
+        self.queue_depth_series: List[tuple] = []
+        self.batch_occupancy_series: List[tuple] = []
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.batches = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self,
+        payload: Any = None,
+        batch_size: int = 1,
+        arrival_s: Optional[float] = None,
+        block: bool = True,
+    ) -> CompletionFuture:
+        """Enqueue one request; returns its completion future.
+
+        ``arrival_s`` is an absolute scheduler-clock time; pre-submitting
+        future arrivals turns the synchronous drive into a discrete-event
+        simulation.  With ``block=False`` a full queue (counting only
+        requests whose arrival has passed) raises :class:`SchedulerQueueFull`
+        — the admission-control path.
+        """
+        with self._cond:
+            if self._arrived_depth(self.clock()) >= self.config.queue_depth:
+                if not block:
+                    self.rejected += 1
+                    raise SchedulerQueueFull(
+                        f"queue depth {self.config.queue_depth} exceeded"
+                    )
+                if self.running:
+                    while self._arrived_depth(self.clock()) >= self.config.queue_depth:
+                        self._cond.wait()
+            now = self.clock()
+            arrival = now if arrival_s is None else arrival_s
+            req = ScheduledRequest(
+                request_id=self._next_id,
+                batch_size=batch_size,
+                arrival_s=arrival,
+                payload=payload,
+                submit_s=now,
+            )
+            self._next_id += 1
+            req.future = CompletionFuture(self, req)
+            bisect.insort(self._queue, req, key=lambda r: (r.arrival_s, r.request_id))
+            self.submitted += 1
+            self._cond.notify_all()
+        return req.future
+
+    def _arrived_depth(self, now: float) -> int:
+        """Queued requests whose arrival time has passed (the *real* queue);
+        pre-submitted future arrivals are not yet in the system."""
+        return bisect.bisect_right(self._queue, (now, float("inf")),
+                                   key=lambda r: (r.arrival_s, r.request_id))
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # -- synchronous drive ---------------------------------------------------
+    def step(self) -> int:
+        """Form and execute one micro-batch; returns the number of requests
+        served (0 when the queue is empty).  Sleeps (via the injected
+        ``sleep``) to the next arrival when nothing has arrived yet."""
+        batch = self._form_batch_sync()
+        if not batch:
+            return 0
+        self._run_batch(batch)
+        return len(batch)
+
+    def run_until_idle(self) -> int:
+        """Drain the queue completely; returns total requests served."""
+        served = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return served
+            served += n
+
+    def _drive_until(self, future: CompletionFuture) -> None:
+        while not future.done():
+            if self.step() == 0:
+                raise RuntimeError(
+                    f"request {future.request.request_id} unreachable: queue idle"
+                )
+
+    def _form_batch_sync(self) -> List[ScheduledRequest]:
+        with self._cond:
+            if not self._queue:
+                return []
+            first = self._queue[0]
+        now = self.clock()
+        if first.arrival_s > now:
+            self.sleep(first.arrival_s - now)
+            now = self.clock()
+        timeout_s = self.config.batch_timeout_ms / 1e3
+        deadline = now + timeout_s
+        batch: List[ScheduledRequest] = []
+        with self._cond:
+            if not self._queue:
+                return []
+            batch.append(self._queue.pop(0))
+            while len(batch) < self.config.max_batch and self._queue:
+                nxt = self._queue[0]
+                if nxt.arrival_s <= now:
+                    batch.append(self._queue.pop(0))
+                elif timeout_s > 0 and nxt.arrival_s <= deadline:
+                    # hold the batch open until the straggler arrives
+                    self.sleep(nxt.arrival_s - now)
+                    now = self.clock()
+                    batch.append(self._queue.pop(0))
+                else:
+                    break
+            self._cond.notify_all()
+        return batch
+
+    # -- threaded drive ------------------------------------------------------
+    def start(self) -> "RequestScheduler":
+        if self._thread is not None:
+            return self
+        self.running = True
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        with self._cond:
+            self.running = False
+            self._cond.notify_all()
+        if self._thread is not None and wait:
+            self._thread.join()
+            self._thread = None
+
+    def _worker(self) -> None:
+        timeout_s = self.config.batch_timeout_ms / 1e3
+        while True:
+            batch: List[ScheduledRequest] = []
+            with self._cond:
+                while self.running and not self._queue:
+                    self._cond.wait()
+                if not self.running and not self._queue:
+                    return
+                batch.append(self._queue.pop(0))
+                deadline = time.monotonic() + timeout_s
+                while len(batch) < self.config.max_batch:
+                    if self._queue:
+                        batch.append(self._queue.pop(0))
+                        continue
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self.running:
+                        break
+                    self._cond.wait(remaining)
+                    if not self._queue and time.monotonic() >= deadline:
+                        break
+                self._cond.notify_all()
+            self._run_batch(batch)
+
+    # -- execution -----------------------------------------------------------
+    def _run_batch(self, batch: List[ScheduledRequest]) -> None:
+        start = self.clock()
+        with self._cond:
+            depth = self._arrived_depth(start)
+        error: Optional[BaseException] = None
+        out: Any = None
+        try:
+            out = self.execute(batch)
+        except BaseException as e:  # noqa: BLE001 - propagated via futures
+            error = e
+        end = self.clock()
+        results: Sequence[Any]
+        if isinstance(out, (list, tuple)) and len(out) == len(batch):
+            results = out
+        else:
+            results = [out] * len(batch)
+        for req, value in zip(batch, results):
+            req.start_s = start
+            req.end_s = end
+            req.future._set(value, error)
+        self.batches += 1
+        self.completed += len(batch)
+        self.queue_depth_series.append((start, depth))
+        self.batch_occupancy_series.append((start, len(batch)))
+        if self.tracer is not None:
+            self.tracer.event(
+                "scheduler:batch",
+                start,
+                end,
+                occupancy=len(batch),
+                queue_depth=depth,
+                inputs=sum(r.batch_size for r in batch),
+            )
+        with self._cond:
+            self._cond.notify_all()
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Scalar summary of the queue/batching series (metrics block)."""
+        occ = [v for _, v in self.batch_occupancy_series]
+        dep = [v for _, v in self.queue_depth_series]
+        return {
+            "batches": float(self.batches),
+            "submitted": float(self.submitted),
+            "completed": float(self.completed),
+            "rejected": float(self.rejected),
+            "mean_batch_occupancy": sum(occ) / len(occ) if occ else 0.0,
+            "max_queue_depth": float(max(dep)) if dep else 0.0,
+            "mean_queue_depth": sum(dep) / len(dep) if dep else 0.0,
+        }
+
+
+class SlotPool:
+    """Fixed pool of KV-cache slots for continuous batching.
+
+    Finished sequences release their slot; queued prompts are admitted into
+    free slots at decode-step boundaries.  Pure bookkeeping — the engine owns
+    the actual cache tensors — so admission order and slot reuse are testable
+    without a model.
+    """
+
+    def __init__(self, num_slots: int) -> None:
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))  # pop() -> 0,1,..
+        self.active: Dict[int, Any] = {}
+        # admission log: (step, slot, request) — the slot-reuse audit trail
+        self.admissions: List[tuple] = []
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    def admit(self, request: Any, step: int = 0) -> Optional[int]:
+        """Assign a free slot to ``request``; None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.active[slot] = request
+        self.admissions.append((step, slot, request))
+        return slot
+
+    def release(self, slot: int) -> Any:
+        """Free a slot; returns the request that held it."""
+        if slot not in self.active:
+            raise KeyError(f"slot {slot} is not active")
+        req = self.active.pop(slot)
+        self._free.append(slot)
+        return req

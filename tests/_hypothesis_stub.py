@@ -1,0 +1,167 @@
+"""Tiny offline fallback for the ``hypothesis`` API used by this suite.
+
+Installed as ``sys.modules["hypothesis"]`` by ``conftest.py`` ONLY when the
+real package is absent, so the suite collects and passes in hermetic
+environments.  It is not a property-based tester: each strategy yields a
+deterministic stream of examples (boundary values first, then seeded
+pseudo-random draws) and ``@given`` simply replays ``max_examples`` of them
+through the test function.
+"""
+from __future__ import annotations
+
+import random
+import types
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A deterministic example stream; ``example(rng, i)`` yields draw i."""
+
+    def __init__(self, draw: Callable[[random.Random, int], Any]) -> None:
+        self._draw = draw
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        return self._draw(rng, i)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng, i: fn(self._draw(rng, i)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rng: random.Random, i: int) -> Any:
+            for attempt in range(100):
+                v = self._draw(rng, i + attempt)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+
+        return Strategy(draw)
+
+    def flatmap(self, fn: Callable[[Any], "Strategy"]) -> "Strategy":
+        return Strategy(lambda rng, i: fn(self._draw(rng, i)).example(rng, i))
+
+
+def integers(min_value: int = -(2**31), max_value: int = 2**31) -> Strategy:
+    bounds = [min_value, max_value, min(min_value + 1, max_value)]
+
+    def draw(rng: random.Random, i: int) -> int:
+        if i < len(bounds):
+            return bounds[i]
+        return rng.randint(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> Strategy:
+    bounds = [min_value, max_value, (min_value + max_value) / 2.0]
+
+    def draw(rng: random.Random, i: int) -> float:
+        if i < len(bounds):
+            return float(bounds[i])
+        return rng.uniform(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng, i: i % 2 == 0)
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda rng, i: value)
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    elements = list(elements)
+
+    def draw(rng: random.Random, i: int) -> Any:
+        if i < len(elements):
+            return elements[i]
+        return rng.choice(elements)
+
+    return Strategy(draw)
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    sizes = [min_size, max_size, max(min_size, min(max_size, 1))]
+
+    def draw(rng: random.Random, i: int) -> List[Any]:
+        size = sizes[i] if i < len(sizes) else rng.randint(min_size, max_size)
+        return [elements.example(rng, rng.randint(3, 1 << 20)) for _ in range(size)]
+
+    return Strategy(draw)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    def draw(rng: random.Random, i: int) -> tuple:
+        return tuple(s.example(rng, i) for s in strategies)
+
+    return Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "just", "sampled_from", "lists", "tuples"):
+    setattr(strategies, _name, globals()[_name])
+
+
+def settings(*args, max_examples: int = DEFAULT_MAX_EXAMPLES, **kwargs):
+    """Decorator recording max_examples on the (given-wrapped) test."""
+
+    def apply(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    if args and callable(args[0]):
+        return apply(args[0])
+    return apply
+
+
+def assume(condition: bool) -> bool:
+    """Best-effort: a failed assumption just skips the remaining body."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0)
+            for i in range(n):
+                drawn_args = tuple(s.example(rng, i) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng, i) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+                except _Unsatisfied:
+                    continue
+            return None
+
+        # copy identity but NOT the signature (functools.wraps would set
+        # __wrapped__ and pytest would then demand fixtures for the drawn
+        # parameters); plugins (e.g. anyio) introspect `.hypothesis.inner_test`
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"

@@ -1,0 +1,17 @@
+"""Test-suite bootstrap.
+
+Installs the tiny ``_hypothesis_stub`` as the ``hypothesis`` module when the
+real package is not installed (offline / hermetic environments), before any
+test module imports it.  The real package always wins when present.
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+if importlib.util.find_spec("hypothesis") is None:
+    _stub_path = Path(__file__).with_name("_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _stub_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

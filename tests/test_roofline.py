@@ -7,6 +7,14 @@ import pytest
 from repro.roofline.hlo import HloCostModel, _shape_bytes, parse_hlo
 
 
+def _xla_flops(compiled):
+    # jax version compat: cost_analysis() returns a dict or a 1-list of dicts
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca["flops"]
+
+
 def test_scan_trip_count_corrected():
     """XLA cost_analysis counts while bodies once; ours multiplies by trips."""
 
@@ -20,7 +28,7 @@ def test_scan_trip_count_corrected():
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
     c = jax.jit(f).lower(x, ws).compile()
-    xla_flops = c.cost_analysis()["flops"]
+    xla_flops = _xla_flops(c)
     mine = HloCostModel(c.as_text()).entry_costs()
     expected = 12 * 2 * 64**3
     assert mine.flops == pytest.approx(expected, rel=0.01)
@@ -57,7 +65,7 @@ def test_unrolled_matches_xla():
     ws = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
     c = jax.jit(g).lower(x, ws).compile()
     mine = HloCostModel(c.as_text()).entry_costs()
-    assert mine.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.01)
+    assert mine.flops == pytest.approx(_xla_flops(c), rel=0.01)
 
 
 def test_shape_bytes():

@@ -1,0 +1,343 @@
+"""Request scheduler + new scenario kinds (continuous-batching tentpole).
+
+All timing uses injected fake clocks — no real sleeps — so every test is a
+deterministic discrete-event simulation.
+"""
+import threading
+
+import pytest
+
+from repro.core.scenarios import ScenarioSpec, run_scenario, scenario_kinds
+from repro.core.tracing import NullTracer, Tracer, TracingServer
+from repro.core.analysis import scheduler_summary, slo_attainment
+from repro.serve.scheduler import (
+    RequestScheduler,
+    SchedulerConfig,
+    SchedulerQueueFull,
+    SlotPool,
+)
+
+
+class VirtualTime:
+    """Deterministic clock+sleep pair."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# RequestScheduler
+# ---------------------------------------------------------------------------
+def test_fifo_order_under_concurrent_submitters():
+    vt = VirtualTime()
+    served = []
+
+    def execute(batch):
+        served.extend(r.request_id for r in batch)
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=1, batch_timeout_ms=0.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    barrier = threading.Barrier(4)
+    ids = [[] for _ in range(4)]
+
+    def submitter(k):
+        barrier.wait()
+        for _ in range(8):
+            ids[k].append(sched.submit().request.request_id)
+
+    threads = [threading.Thread(target=submitter, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sched.run_until_idle() == 32
+    # FIFO: execution order == submission (request-id) order
+    assert served == sorted(served)
+    # every submitter saw its own ids in increasing order
+    for k in range(4):
+        assert ids[k] == sorted(ids[k])
+
+
+def test_microbatch_coalescing_respects_max_batch_and_timeout():
+    vt = VirtualTime()
+    batches = []
+
+    def execute(batch):
+        batches.append([r.request_id for r in batch])
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=4, batch_timeout_ms=5.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    arrivals = [0.000, 0.001, 0.002, 0.010, 0.011, 0.030]
+    for a in arrivals:
+        sched.submit(arrival_s=a)
+    sched.run_until_idle()
+    # requests 0-2 coalesce inside the 5 ms window; 3 (10 ms) starts a new
+    # batch joined by 4 (11 ms); 5 (30 ms) is alone — and never > max_batch
+    assert batches == [[0, 1, 2], [3, 4], [5]]
+    assert all(len(b) <= 4 for b in batches)
+
+
+def test_microbatch_coalescing_caps_at_max_batch():
+    vt = VirtualTime()
+    batches = []
+    sched = RequestScheduler(
+        lambda b: batches.append([r.request_id for r in b]),
+        SchedulerConfig(max_batch=2, batch_timeout_ms=5.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    for a in [0.000, 0.001, 0.002, 0.003]:
+        sched.submit(arrival_s=a)
+    sched.run_until_idle()
+    assert batches == [[0, 1], [2, 3]]
+
+
+def test_zero_timeout_batches_only_already_arrived():
+    vt = VirtualTime()
+    batches = []
+    sched = RequestScheduler(
+        lambda b: batches.append([r.request_id for r in b]),
+        SchedulerConfig(max_batch=8, batch_timeout_ms=0.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    sched.submit(arrival_s=0.0)
+    sched.submit(arrival_s=0.0)
+    sched.submit(arrival_s=1.0)   # future arrival: not coalesced with t=0
+    sched.run_until_idle()
+    assert batches == [[0, 1], [2]]
+
+
+def test_bounded_queue_rejects_when_full():
+    vt = VirtualTime()
+    sched = RequestScheduler(
+        lambda b: None, SchedulerConfig(max_batch=1, queue_depth=2),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    sched.submit(block=False)
+    sched.submit(block=False)
+    with pytest.raises(SchedulerQueueFull):
+        sched.submit(block=False)
+    assert sched.rejected == 1
+    sched.run_until_idle()
+    assert sched.completed == 2
+
+
+def test_future_results_and_errors_propagate():
+    vt = VirtualTime()
+
+    def execute(batch):
+        if any(r.payload == "boom" for r in batch):
+            raise RuntimeError("kaboom")
+        return [r.payload * 2 for r in batch]
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=1), clock=vt.clock, sleep=vt.sleep
+    )
+    ok = sched.submit(payload=21)
+    bad = sched.submit(payload="boom")
+    assert ok.result() == 42
+    with pytest.raises(RuntimeError, match="kaboom"):
+        bad.result()
+
+
+def test_request_latency_accounting_with_fake_clock():
+    vt = VirtualTime()
+
+    def execute(batch):
+        vt.t += 0.010  # each micro-batch takes exactly 10 virtual ms
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=1, batch_timeout_ms=0.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    # two requests arriving at t=0: the second queues behind the first
+    f1 = sched.submit(arrival_s=0.0)
+    f2 = sched.submit(arrival_s=0.0)
+    sched.run_until_idle()
+    assert f1.request.service_s == pytest.approx(0.010)
+    assert f1.request.queue_s == pytest.approx(0.0)
+    assert f2.request.queue_s == pytest.approx(0.010)
+    assert f2.request.latency_s == pytest.approx(0.020)
+
+
+def test_threaded_mode_coalesces_and_completes():
+    done = threading.Event()
+    batches = []
+
+    def execute(batch):
+        batches.append(len(batch))
+        if sum(batches) == 8:
+            done.set()
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=4, batch_timeout_ms=20.0)
+    ).start()
+    try:
+        futs = [sched.submit() for _ in range(8)]
+        for f in futs:
+            f.result(timeout=5.0)
+        assert done.wait(5.0)
+    finally:
+        sched.stop()
+    assert sum(batches) == 8
+    assert max(batches) <= 4
+
+
+# ---------------------------------------------------------------------------
+# SlotPool (continuous-batching slot bookkeeping)
+# ---------------------------------------------------------------------------
+def test_slot_pool_reuse_and_admission_order():
+    pool = SlotPool(2)
+    s0 = pool.admit("r0", step=0)
+    s1 = pool.admit("r1", step=0)
+    assert (s0, s1) == (0, 1)
+    assert pool.admit("r2", step=0) is None      # full: r2 must wait
+    assert pool.release(s0) == "r0"              # r0 finishes
+    s2 = pool.admit("r2", step=3)
+    assert s2 == s0                              # freed slot is reused
+    assert pool.admissions[-1] == (3, s0, "r2")
+    assert pool.num_active == 2
+    with pytest.raises(KeyError):
+        pool.release(99)
+
+
+# ---------------------------------------------------------------------------
+# New scenario kinds through run_scenario (deterministic fake clocks)
+# ---------------------------------------------------------------------------
+def test_all_six_scenario_kinds_run():
+    assert scenario_kinds() == [
+        "batched", "offline", "online", "server", "single_stream", "trace"
+    ]
+    for kind in scenario_kinds():
+        vt = VirtualTime()
+
+        def predict(bs):
+            vt.t += 0.001 * max(bs, 1)
+
+        spec = ScenarioSpec(
+            kind=kind, num_requests=6, rate_hz=100.0, warmup=0,
+            arrivals=[0.0, 0.01, 0.02], batch_sizes=[1, 2],
+        )
+        m = run_scenario(spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep)
+        assert m["scenario"] == kind
+
+
+def test_single_stream_metrics():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.004
+
+    spec = ScenarioSpec(kind="single_stream", num_requests=10, warmup=0)
+    m = run_scenario(spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep)
+    assert m["num_requests"] == 10
+    assert m["trimmed_mean_ms"] == pytest.approx(4.0)
+    assert m["p99_ms"] == pytest.approx(4.0)
+    assert m["streams_per_s"] == pytest.approx(250.0)
+
+
+def test_server_scenario_slo_accounting_no_queueing():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.010
+
+    # arrivals ~1 s apart >> 10 ms service: no queueing, every request meets
+    # a 25 ms SLO exactly at its 10 ms service latency
+    spec = ScenarioSpec(
+        kind="server", num_requests=12, rate_hz=1.0, warmup=0, slo_ms=25.0, seed=0
+    )
+    m = run_scenario(
+        spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep,
+        scheduler=SchedulerConfig(max_batch=4, batch_timeout_ms=2.0),
+    )
+    assert m["scenario"] == "server"
+    assert m["num_requests"] == 12
+    # most gaps >> service time: the trimmed mean sees pure 10 ms service
+    assert m["trimmed_mean_ms"] == pytest.approx(10.0)
+    assert m["p99_ms"] < 25.0
+    assert m["slo_violations"] == 0
+    assert m["slo_attainment"] == pytest.approx(1.0)
+    assert m["slo_met"]
+    assert m["achieved_qps"] > 0
+    # seed-0 arrivals contain exactly one gap inside the 2 ms window, so one
+    # pair coalesces: 11 micro-batches for 12 requests
+    assert m["sched_batches"] == 11.0
+    assert m["sched_completed"] == 12.0
+
+
+def test_server_scenario_slo_accounting_overload():
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.050  # 50 ms service vs 25 ms SLO at 1000 rps: all violate
+
+    spec = ScenarioSpec(
+        kind="server", num_requests=10, rate_hz=1000.0, warmup=0, slo_ms=25.0
+    )
+    m = run_scenario(
+        spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep,
+        scheduler=SchedulerConfig(max_batch=1, batch_timeout_ms=0.0),
+    )
+    assert m["slo_violations"] == 10
+    assert m["slo_attainment"] == pytest.approx(0.0)
+    assert not m["slo_met"]
+    assert m["mean_queue_s"] > 0
+
+
+def test_offline_scenario_coalescing_beats_sequential():
+    def make_predict(vt):
+        # fixed dispatch overhead + per-input cost: batching amortizes the 5 ms
+        def predict(bs):
+            vt.t += 0.005 + 0.001 * bs
+        return predict
+
+    vt1 = VirtualTime()
+    seq = run_scenario(
+        ScenarioSpec(kind="offline", num_requests=16, warmup=0),
+        make_predict(vt1), NullTracer(), clock=vt1.clock, sleep=vt1.sleep,
+        scheduler=SchedulerConfig(max_batch=1, batch_timeout_ms=0.0),
+    )
+    vt2 = VirtualTime()
+    coal = run_scenario(
+        ScenarioSpec(kind="offline", num_requests=16, warmup=0),
+        make_predict(vt2), NullTracer(), clock=vt2.clock, sleep=vt2.sleep,
+        scheduler=SchedulerConfig(max_batch=8, batch_timeout_ms=0.0),
+    )
+    assert coal["sched_mean_batch_occupancy"] == pytest.approx(8.0)
+    assert coal["throughput_ips"] > 2.0 * seq["throughput_ips"]
+
+
+def test_scheduler_events_flow_to_tracer_and_analysis():
+    vt = VirtualTime()
+    server = TracingServer()
+    tracer = Tracer("t-sched", server)
+
+    def predict(bs):
+        vt.t += 0.002
+
+    spec = ScenarioSpec(kind="offline", num_requests=8, warmup=0)
+    run_scenario(
+        spec, predict, tracer, clock=vt.clock, sleep=vt.sleep,
+        scheduler=SchedulerConfig(max_batch=4, batch_timeout_ms=0.0),
+    )
+    spans = server.timeline("t-sched")
+    summary = scheduler_summary(spans)
+    assert summary["batches"] == 2.0
+    assert summary["mean_batch_occupancy"] == pytest.approx(4.0)
+    assert summary["total_inputs"] == 8.0
+
+
+def test_slo_attainment_helper():
+    out = slo_attainment([0.01, 0.02, 0.05], slo_ms=25.0)
+    assert out["slo_violations"] == 1.0
+    assert out["slo_attainment"] == pytest.approx(2.0 / 3.0)

@@ -66,6 +66,56 @@ def test_batched_scenario_reports_optimal_batch(platform):
     assert m["max_throughput_ips"] > 0
 
 
+def test_scheduler_backed_offline_evaluation(platform):
+    """SchedulerConfig threads client -> server dispatch -> agent -> scenario,
+    and the queue/occupancy series land in the trace + report."""
+    from repro.core import SchedulerConfig, scheduler_summary
+    from repro.core.tracing import Span
+
+    req = EvaluationRequest(
+        model="mamba2-130m",
+        backend="ref",
+        scenario=ScenarioSpec(kind="offline", num_requests=8, warmup=1),
+        trace_level="MODEL",
+        seq_len=16,
+    )
+    # round-trips through the wire format like a subprocess agent would see
+    wire = EvaluationRequest.from_dict(req.to_dict())
+    assert wire.scheduler is None
+    res = platform.evaluate(
+        req, scheduler=SchedulerConfig(max_batch=4, batch_timeout_ms=0.0)
+    )[0]
+    m = res["metrics"]
+    assert m["scenario"] == "offline"
+    assert m["throughput_ips"] > 0
+    assert m["sched_mean_batch_occupancy"] == pytest.approx(4.0)
+    assert req.scheduler is not None  # threaded onto the request by dispatch
+    assert EvaluationRequest.from_dict(req.to_dict()).scheduler.max_batch == 4
+    recs = platform.evaldb.query(model="mamba2-130m", scenario="offline")
+    spans = [Span.from_dict(d) for d in platform.evaldb.spans(recs[-1].eval_id)]
+    summary = scheduler_summary(spans)
+    assert summary["batches"] == 2.0
+    assert summary["total_inputs"] == 8.0
+    report = platform.report(model="mamba2-130m", scenario="offline")
+    assert "Scheduler (queueing + micro-batching)" in report
+
+
+def test_server_scenario_evaluation(platform):
+    req = EvaluationRequest(
+        model="mamba2-130m",
+        backend="ref",
+        scenario=ScenarioSpec(
+            kind="server", num_requests=4, rate_hz=200.0, warmup=1, slo_ms=10_000.0
+        ),
+        trace_level="NONE",
+        seq_len=16,
+    )
+    m = platform.evaluate(req)[0]["metrics"]
+    assert m["scenario"] == "server"
+    assert m["achieved_qps"] > 0
+    assert 0.0 <= m["slo_attainment"] <= 1.0
+
+
 def test_analysis_workflow_report(platform):
     report = platform.report(model="glm4-9b")
     assert "MLModelScope report" in report
