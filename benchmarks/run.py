@@ -17,6 +17,7 @@ BENCHES = [
     ("table3", "benchmarks.bench_table3_layers"),
     ("fig8", "benchmarks.bench_fig8_coldstart"),
     ("scheduler", "benchmarks.bench_scheduler"),
+    ("paged", "benchmarks.bench_paged"),
 ]
 
 

@@ -96,6 +96,48 @@ def scheduler_summary(spans: Iterable[Span]) -> Dict[str, float]:
     }
 
 
+def page_occupancy_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize the paged engine's KV-page occupancy trace series.
+
+    The paged slot pool publishes one ``pages:occupancy`` event per decode-
+    step boundary, tagged with ``pages_in_use`` / ``pages_free`` /
+    ``num_pages`` / ``active_slots``.  This aggregates them into the memory
+    block of the analysis workflow: utilization tells whether the HBM page
+    budget (not compute) caps concurrency."""
+    used: List[float] = []
+    active: List[float] = []
+    total = 0.0
+    for s in spans:
+        if s.name != "pages:occupancy":
+            continue
+        used.append(float(s.tags.get("pages_in_use", 0)))
+        active.append(float(s.tags.get("active_slots", 0)))
+        total = max(total, float(s.tags.get("num_pages", 0)))
+    if not used:
+        return {}
+    cap = max(total, 1.0)
+    return {
+        "samples": float(len(used)),
+        "num_pages": total,
+        "mean_pages_in_use": sum(used) / len(used),
+        "peak_pages_in_use": max(used),
+        "mean_page_utilization": sum(used) / len(used) / cap,
+        "peak_page_utilization": max(used) / cap,
+        "mean_active_slots": sum(active) / len(active),
+        "peak_active_slots": max(active),
+    }
+
+
+def page_occupancy_section(spans: Iterable[Span]) -> str:
+    """Render the page-occupancy block as a report section (markdown-safe
+    text table); empty string when no paged run was traced."""
+    summary = page_occupancy_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def throughput_scalability(
     per_batch: Dict[int, float]
 ) -> Dict[int, float]:

@@ -89,14 +89,21 @@ def decode_attention(
     window=None,
     scale: Optional[float] = None,
     block_s: int = 512,
+    kv_bound: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    """``kv_bound``: static upper bound on ``lengths`` (host-known).  The kv
+    grid covers only ``ceil(kv_bound/block_s)`` blocks instead of the padded
+    ``S``, so short-context decodes stop streaming fully-masked blocks."""
     b, _, h, d = q.shape
     S, kvh = k_cache.shape[1], k_cache.shape[2]
     rep = h // kvh
     scale = scale if scale is not None else d ** -0.5
-    block_s = min(block_s, S)
-    ns = pl.cdiv(S, block_s)
+    s_eff = S if kv_bound is None else max(min(S, int(kv_bound)), 1)
+    # shrink the block to the bound too: a 16-token live context must not
+    # stream a full 512-token block just because the grid has one step
+    block_s = min(block_s, s_eff)
+    ns = pl.cdiv(s_eff, block_s)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     wval = jnp.asarray([0], jnp.int32) if window is None else jnp.asarray(

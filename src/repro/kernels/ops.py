@@ -258,16 +258,64 @@ def decode_attention(
     window=None,
     scale: Optional[float] = None,
     backend: str = DEFAULT_BACKEND,
+    kv_bound: Optional[int] = None,
 ) -> jnp.ndarray:
+    """``kv_bound`` is a static host-known upper bound on ``lengths``: decode
+    only reads the first ``kv_bound`` cache slots instead of streaming all
+    ``S`` padded blocks (serving buckets it to a power of two so short
+    contexts stop paying the full-cache bandwidth tax).  Invalid for ring
+    caches, whose live tokens wrap the whole buffer."""
     if backend == "pallas":
         from . import decode_attention as da
 
+        # the kernel bounds its own kv grid: the cache operand stays whole
+        # (no slice copy), blocks past the bound are simply never streamed
         return da.decode_attention(
-            q, k_cache, v_cache, lengths, softcap=softcap, window=window, scale=scale
+            q, k_cache, v_cache, lengths, softcap=softcap, window=window,
+            scale=scale, kv_bound=kv_bound,
         )
+    if kv_bound is not None and kv_bound < k_cache.shape[1]:
+        k_cache = k_cache[:, :kv_bound]
+        v_cache = v_cache[:, :kv_bound]
     # ref and flash share the same (already memory-light) computation
     return ref.decode_attention(
         q, k_cache, v_cache, lengths, softcap=softcap, window=window, scale=scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (single new token vs a paged KV pool)
+# ---------------------------------------------------------------------------
+def paged_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+    pages_bound: Optional[int] = None,
+) -> jnp.ndarray:
+    """Decode attention over a paged KV cache (global page pool + per-request
+    page table).  ``pages_bound`` statically bounds the live pages per
+    request (host-known, bucketed), so neither path iterates the padded
+    page-table width."""
+    if pages_bound is not None and pages_bound < page_table.shape[1]:
+        page_table = page_table[:, :pages_bound]
+    if backend == "pallas":
+        from . import paged_attention as pa
+
+        return pa.paged_attention(
+            q, k_pages, v_pages, page_table, lengths,
+            softcap=softcap, window=window, scale=scale,
+        )
+    # ref and flash share the gather-based computation
+    return ref.paged_attention(
+        q, k_pages, v_pages, page_table, lengths,
+        softcap=softcap, window=window, scale=scale,
     )
 
 

@@ -1,0 +1,164 @@
+"""Pallas TPU paged decode attention: one new token vs a paged KV cache.
+
+The KV cache is a global pool of ``page_size``-token pages shared by every
+request; each request owns a list of pages recorded in a per-request page
+table.  Grid = (batch, q_heads, kv_pages) with the page dimension innermost
+and sequential so the flash-decode online-softmax state lives in VMEM
+scratch.  The page table and per-request ``lengths`` arrive as
+scalar-prefetch operands: the k/v BlockSpec index maps dereference the page
+table so only a request's *live* pages stream HBM->VMEM — pages beyond
+``ceil(len/page_size)`` are clamped to the request's last live page, which
+Pallas recognises as a revisit (no new DMA).  The caller additionally bounds
+the grid with ``pages_bound`` (host-known max live pages, bucketed), so the
+kernel never iterates the padded page-table width.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions; bridge both
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version compat
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    pt_ref,                    # scalar prefetch: (b, max_pages) int32 page table
+    lens_ref,                  # scalar prefetch: (b,) int32 valid lengths
+    w_ref,                     # scalar prefetch: (1,) int32 window (0 = none)
+    q_ref,                     # (1, 1, 1, d)
+    k_ref, v_ref,              # (1, page_size, 1, d) — one page
+    o_ref,                     # (1, 1, 1, d)
+    m_ref, l_ref, acc_ref,     # VMEM scratch (online-softmax state)
+    *,
+    softcap: float,
+    page_size: int,
+    scale: float,
+):
+    bi = pl.program_id(0)
+    pj = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0, :]                                   # (d,)
+    k = k_ref[0, :, 0, :]                                   # (page_size, d)
+    v = v_ref[0, :, 0, :]
+    length = lens_ref[bi]
+    # positions are *logical*: page pj of this request covers
+    # [pj*page_size, (pj+1)*page_size) regardless of which physical page
+    # the index map streamed in
+    k_pos = pj * page_size + jax.lax.iota(jnp.int32, page_size)
+    valid = k_pos < length
+    w = w_ref[0]
+    valid &= jnp.where(w > 0, k_pos >= length - w, True)
+    v = jnp.where(valid[:, None], v, 0.0)
+    s = jnp.sum(
+        q[None, :].astype(jnp.float32) * k.astype(jnp.float32), axis=-1
+    ) * scale                                               # (page_size,)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    m_ref[0] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.sum(
+        p[:, None].astype(jnp.float32) * v.astype(jnp.float32), axis=0
+    )[None]
+
+    @pl.when(pj == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-37)
+        o_ref[0, 0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jnp.ndarray,            # (b, 1, h, d)
+    k_pages: jnp.ndarray,      # (num_pages, page_size, kvh, d) global pool
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,   # (b, max_pages) int32 page ids per request
+    lengths: jnp.ndarray,      # (b,) int32 live tokens per request
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    pages_bound: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    page_size, kvh = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    ns = max_pages if pages_bound is None else min(pages_bound, max_pages)
+    ns = max(ns, 1)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    wval = jnp.asarray([0], jnp.int32) if window is None else jnp.asarray(
+        [window], jnp.int32
+    ).reshape((1,))
+
+    def _page(pj, pt, lens, bi):
+        # clamp dead trailing blocks to the request's last live page: the
+        # index map returns the same block as the previous step, so Pallas
+        # skips the DMA instead of streaming an arbitrary page
+        last = jnp.maximum((lens[bi] + page_size - 1) // page_size - 1, 0)
+        return pt[bi, jnp.minimum(pj, last)]
+
+    kernel = functools.partial(
+        _kernel, softcap=float(softcap), page_size=page_size, scale=float(scale)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, pj, pt, lens, w: (bi, 0, hi, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, d), lambda bi, hi, pj, pt, lens, w: (bi, 0, hi, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(page_table, jnp.int32),
+        jnp.asarray(lengths, jnp.int32),
+        wval,
+        q,
+        k_pages,
+        v_pages,
+    )

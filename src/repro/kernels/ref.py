@@ -98,6 +98,30 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_attention(
+    q: jnp.ndarray,           # (b, 1, h, d) — one new token
+    k_pages: jnp.ndarray,     # (num_pages, page_size, kvh, d) global page pool
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,  # (b, max_pages) int32 page ids per request
+    lengths: jnp.ndarray,     # (b,) valid lengths (incl. the new token)
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Paged decode-attention oracle: gather each request's pages back into a
+    contiguous cache, then run the dense decode oracle.  Memory-hungry (it
+    rematerializes ``max_pages * page_size`` per request) but obviously
+    equivalent to dense attention over the live tokens."""
+    _, page_size, kvh, d = k_pages.shape
+    b, max_pages = page_table.shape
+    k = k_pages[page_table].reshape(b, max_pages * page_size, kvh, d)
+    v = v_pages[page_table].reshape(b, max_pages * page_size, kvh, d)
+    return decode_attention(
+        q, k, v, lengths, softcap=softcap, window=window, scale=scale
+    )
+
+
 def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     """RMSNorm oracle: x * w / sqrt(mean(x^2) + eps), stats in fp32."""
     xf = x.astype(jnp.float32)

@@ -1,21 +1,28 @@
 """End-to-end serving driver (the e2e application for this paper's kind).
 
 Serves a model under a Poisson request load through the platform's request
-scheduler.  Two executor modes:
+scheduler.  Three executor modes (``--engine``):
 
 * ``static``      — the threaded RequestScheduler coalesces concurrent
                     requests into micro-batches (up to ``--engine-batch``
                     within ``--batch-timeout-ms``) executed by the static
                     prefill/decode engine.
 * ``continuous``  — slot-based continuous batching: prompts are admitted
-                    into free KV slots at decode-step boundaries; reports
-                    per-request TTFT and tokens/sec.
+                    into free dense KV slots at decode-step boundaries;
+                    reports per-request TTFT and tokens/sec.
+* ``paged``       — paged KV cache: a global ``--page-size``-token page pool
+                    (``--num-pages``) with per-request page tables, chunked
+                    prefill (``--prefill-chunk``) interleaved at decode-step
+                    boundaries, admission keyed on free pages, and youngest-
+                    first preemption when the pool is exhausted.  Emits
+                    ``pages:occupancy`` events and a page-occupancy report
+                    section.
 
 Latency/throughput metrics and the scheduler's queue/occupancy series flow
 into the evaluation database.
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
-        --requests 16 --rate-hz 20 --max-new-tokens 8 --mode continuous
+        --requests 16 --rate-hz 20 --max-new-tokens 8 --engine paged
 """
 from __future__ import annotations
 
@@ -26,8 +33,9 @@ import jax
 import numpy as np
 
 from ..configs import get_config
-from ..core.analysis import latency_summary
+from ..core.analysis import latency_summary, page_occupancy_section
 from ..core.evaldb import EvalDB, EvaluationRecord
+from ..core.tracing import Tracer, TracingServer
 from ..core.workload import PoissonLoad
 from ..models import build_model
 from ..serve.engine import ServeRequest, ServingEngine
@@ -110,12 +118,66 @@ def _serve_continuous(engine, cfg, args, load, prompts):
     return summary, stats.total_tokens, stats.wall_s
 
 
+def _serve_paged(engine, cfg, args, load, prompts):
+    """Offline paged-KV continuous batching with chunked prefill."""
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=args.max_new_tokens)
+        for i, p in enumerate(prompts)
+    ]
+    server = TracingServer()
+    tracer = Tracer("serve-paged", server)
+    stats = engine.serve_paged(
+        reqs,
+        num_slots=args.engine_batch,
+        page_size=args.page_size,
+        num_pages=args.num_pages or None,
+        prefill_chunk=args.prefill_chunk or None,
+        overcommit=args.overcommit,
+        tracer=tracer,
+    )
+    for r in stats.results:
+        print(
+            f"[serve] req {r.request_id}: slot {r.slot} "
+            f"(admitted step {r.admit_step}), ttft {r.ttft_s*1e3:.1f} ms, "
+            f"{r.tokens_per_s:,.1f} tok/s"
+        )
+    section = page_occupancy_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] page occupancy:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    latencies = [r.latency_s for r in stats.results]
+    summary = latency_summary(latencies) if latencies else {}
+    summary.update(
+        {
+            "tokens_per_s": stats.throughput_tps,
+            "ttft_mean_ms": float(
+                np.mean([r.ttft_s for r in stats.results]) * 1e3
+            ),
+            "mean_slot_occupancy": stats.mean_slot_occupancy,
+            "peak_slot_occupancy": float(stats.peak_slot_occupancy),
+            "decode_steps": stats.steps,
+            "page_size": float(stats.page_size),
+            "num_pages": float(stats.num_pages),
+            "mean_pages_in_use": stats.mean_pages_in_use,
+            "peak_pages_in_use": float(stats.peak_pages_in_use),
+            "preemptions": float(stats.preemptions),
+            "prefill_chunks": float(stats.prefill_chunks),
+            **{f"compiles_{k}": float(v) for k, v in stats.compile_stats.items()},
+        }
+    )
+    return summary, stats.total_tokens, stats.wall_s
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--backend", default="flash")
-    ap.add_argument("--mode", default="static", choices=["static", "continuous"])
+    ap.add_argument(
+        "--engine", "--mode", dest="engine", default="static",
+        choices=["static", "continuous", "paged"],
+    )
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate-hz", type=float, default=20.0)
     ap.add_argument("--engine-batch", type=int, default=4)
@@ -123,6 +185,15 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged engine)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="global KV page pool size (0 = num_slots * max_pages)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill tokens per decode boundary (0 = 4 pages)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="paged admission overcommit factor (>1 admits past "
+                         "worst-case page commitment; preemption is the valve)")
     ap.add_argument("--evaldb", default="")
     args = ap.parse_args(argv)
 
@@ -130,7 +201,8 @@ def main(argv=None) -> int:
     model = build_model(cfg, backend=args.backend)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(
-        model, params, max_batch=args.engine_batch, max_seq=args.max_seq
+        model, params, max_batch=args.engine_batch, max_seq=args.max_seq,
+        page_size=args.page_size,
     )
     rng = np.random.default_rng(0)
     load = list(PoissonLoad(args.requests, args.rate_hz, seed=0).requests())
@@ -139,8 +211,10 @@ def main(argv=None) -> int:
         for _ in load
     ]
 
-    if args.mode == "continuous":
+    if args.engine == "continuous":
         summary, generated, wall = _serve_continuous(engine, cfg, args, load, prompts)
+    elif args.engine == "paged":
+        summary, generated, wall = _serve_paged(engine, cfg, args, load, prompts)
     else:
         summary, generated, wall = _serve_static(engine, cfg, args, load, prompts)
 
@@ -152,7 +226,7 @@ def main(argv=None) -> int:
             EvaluationRecord(
                 model=cfg.name, model_version="1.0.0", backend=args.backend,
                 backend_version="1.0.0", system="local",
-                scenario=f"serve-{args.mode}",
+                scenario=f"serve-{args.engine}",
                 batch_size=args.engine_batch, trace_level="NONE",
                 agent_id="serve-driver", metrics=summary,
             )

@@ -26,8 +26,10 @@ from ..sharding.specs import opt_enabled, shard_act
 from .config import ArchConfig
 from .modules import (
     attn_decode,
+    attn_decode_paged,
     attn_defs,
     attn_full,
+    attn_prefill_paged,
     causal_conv1d,
     cross_attn_decode,
     mamba_defs,
@@ -119,6 +121,30 @@ class BaseModel:
         if cfg.logit_softcap > 0:
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         return shard_act(logits, ("batch", "seq", "act_vocab"))
+
+    def _prefill_logits(self, params, batch, x, new_cache, b, s):
+        """Last-token logits + per-row positions.  With ``batch["lengths"]``
+        prompts are RIGHT-padded to a common (bucketed) length: causal
+        attention never reads the trailing pads, so logits gathered at
+        ``lengths - 1`` are exactly the unpadded values — prefill shapes can
+        be bucketed without changing numerics.  SSM/hybrid state scans the
+        whole row (pads included), so only attention families may be ragged.
+        """
+        lengths = batch.get("lengths")
+        if lengths is None:
+            new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+            x_last = x[:, -1:, :]
+        else:
+            if self.cfg.family not in ("dense", "moe", "encdec"):
+                raise NotImplementedError(
+                    "ragged (right-padded) prefill requires a pure-attention "
+                    "cache; ssm/hybrid state would absorb the pad tokens"
+                )
+            lengths = jnp.asarray(lengths, jnp.int32)
+            new_cache["pos"] = lengths
+            x_last = x[jnp.arange(b), lengths - 1][:, None, :]
+        logits = self._logits(params, x_last)[:, 0]
+        return logits, new_cache
 
 
 
@@ -255,26 +281,32 @@ class DecoderLM(BaseModel):
         x = shard_act(x + m, ("batch", "seq", "act_embed"))
         return (x, aux, kv) if return_kv else (x, aux)
 
-    def _attn_block_decode(self, blk, x1, kc, vc, pos, window, ring=False,
-                           uniform_pos=True):
+    def _block_ffn(self, blk, x):
+        """ln2 + (MoE|MLP) + optional post-norm, residual-added.  ``blk`` is
+        already cast to the compute dtype."""
         cfg = self.cfg
-        blk = self._cast(blk)
-        h = self._norm(x1, blk["ln1"])
-        a, kc, vc = attn_decode(
-            blk["attn"], h, kc, vc, pos, cfg, backend=self.backend,
-            window=window, ring=ring, uniform_pos=uniform_pos,
-        )
-        if cfg.post_norms:
-            a = self._norm(a, blk["post_attn_norm"])
-        x1 = x1 + a
-        h2 = self._norm(x1, blk["ln2"])
+        h2 = self._norm(x, blk["ln2"])
         if "router" in blk["mlp"]:
             m, _ = moe_apply(blk["mlp"], h2, cfg)
         else:
             m = mlp_apply(blk["mlp"], h2)
         if cfg.post_norms:
             m = self._norm(m, blk["post_mlp_norm"])
-        return x1 + m, kc, vc
+        return x + m
+
+    def _attn_block_decode(self, blk, x1, kc, vc, pos, window, ring=False,
+                           uniform_pos=True, kv_bound=None):
+        cfg = self.cfg
+        blk = self._cast(blk)
+        h = self._norm(x1, blk["ln1"])
+        a, kc, vc = attn_decode(
+            blk["attn"], h, kc, vc, pos, cfg, backend=self.backend,
+            window=window, ring=ring, uniform_pos=uniform_pos, kv_bound=kv_bound,
+        )
+        if cfg.post_norms:
+            a = self._norm(a, blk["post_attn_norm"])
+        x1 = x1 + a
+        return self._block_ffn(blk, x1), kc, vc
 
     def _mamba_block_full(self, blk, x, state=None, conv=None, return_state=False):
         blk = self._cast_mamba(blk)
@@ -444,6 +476,31 @@ class DecoderLM(BaseModel):
     def cache_specs(self, batch: int, max_seq: int, dtype="bfloat16"):
         return param_specs(self.cache_defs(batch, max_seq, dtype))
 
+    def paged_cache_defs(self, num_pages: int, page_size: int,
+                         dtype="bfloat16") -> Dict[str, P]:
+        """Paged KV layout: one global pool of ``page_size``-token pages per
+        layer, indexed through per-request page tables — HBM scales with the
+        page pool (live tokens), not ``num_slots * max_seq``."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._interleaved:
+            raise NotImplementedError(
+                "paged KV cache supports dense/moe (non-interleaved) decoder "
+                "caches only; ssm/hybrid state is not paged"
+            )
+        kv, dh, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+        axes = ("layer", None, "kv_seq", "act_kv", "head_dim")
+        return {
+            "k_pages": P((L, num_pages, page_size, kv, dh), "zeros",
+                         dtype=dtype, axes=axes),
+            "v_pages": P((L, num_pages, page_size, kv, dh), "zeros",
+                         dtype=dtype, axes=axes),
+        }
+
+    def init_paged_cache(self, num_pages: int, page_size: int, dtype="bfloat16"):
+        return init_params(
+            jax.random.PRNGKey(0), self.paged_cache_defs(num_pages, page_size, dtype)
+        )
+
     # -- prefill -----------------------------------------------------------------------
     def prefill(self, params, batch, cache):
         cfg = self.cfg
@@ -511,9 +568,7 @@ class DecoderLM(BaseModel):
             new_cache.update(stacks)
         elif cfg.family == "hybrid":
             x, new_cache = self._hybrid_prefill(params, x, cache)
-        new_cache["pos"] = jnp.full((b,), s, jnp.int32)
-        logits = self._logits(params, x[:, -1:, :])[:, 0]
-        return logits, new_cache
+        return self._prefill_logits(params, batch, x, new_cache, b, s)
 
     def _hybrid_prefill(self, params, x, cache):
         cfg = self.cfg
@@ -558,11 +613,14 @@ class DecoderLM(BaseModel):
         return x, new_cache
 
     # -- decode ------------------------------------------------------------------------
-    def decode(self, params, tokens, cache, uniform_pos=True):
+    def decode(self, params, tokens, cache, uniform_pos=True, kv_bound=None):
         """One token step. tokens: (b,) int32. Returns (logits, new cache).
 
         ``uniform_pos=False`` selects the masked per-row cache-update path so
         slots may sit at different sequence positions (continuous batching).
+        ``kv_bound`` is a static host-known bound on the live cache lengths:
+        attention streams only that prefix of the cache instead of all of
+        padded ``max_seq`` (the serving engine buckets it to a power of two).
         """
         cfg = self.cfg
         pos = cache["pos"]
@@ -575,10 +633,12 @@ class DecoderLM(BaseModel):
                 def body(x1, blk, caches, li):
                     kc, vc = caches["k"], caches["v"]     # (2, b, S, kv, dh)
                     x1, k0, v0 = self._attn_block_decode(
-                        blk["a"], x1, kc[0], vc[0], pos, None, uniform_pos=uniform_pos
+                        blk["a"], x1, kc[0], vc[0], pos, None,
+                        uniform_pos=uniform_pos, kv_bound=kv_bound,
                     )
                     x1, k1, v1 = self._attn_block_decode(
-                        blk["b"], x1, kc[1], vc[1], pos, None, uniform_pos=uniform_pos
+                        blk["b"], x1, kc[1], vc[1], pos, None,
+                        uniform_pos=uniform_pos, kv_bound=kv_bound,
                     )
                     return x1, {"k": jnp.stack([k0, k1]), "v": jnp.stack([v0, v1])}
 
@@ -598,7 +658,7 @@ class DecoderLM(BaseModel):
                     window = xs_l[1] if len(xs_l) > 1 else None
                     x1, kc, vc = self._attn_block_decode(
                         blk, x1, caches["k"], caches["v"], pos, window,
-                        uniform_pos=uniform_pos,
+                        uniform_pos=uniform_pos, kv_bound=kv_bound,
                     )
                     return x1, {"k": kc, "v": vc}
 
@@ -623,6 +683,106 @@ class DecoderLM(BaseModel):
             x, new_cache = self._hybrid_decode(params, x, cache, uniform_pos=uniform_pos)
         new_cache["pos"] = pos + 1
         logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    # -- paged serving (global page pool + per-request page tables) --------------------
+    def decode_paged(self, params, tokens, cache, page_table, lengths,
+                     pages_bound=None):
+        """One paged decode step for a pool of slots.
+
+        ``tokens``: (b,) next-token ids; ``page_table``: (b, max_pages)
+        int32 physical page ids; ``lengths``: (b,) int32 tokens already held
+        per slot — the new token is appended at logical position ``lengths``
+        and attention covers ``lengths + 1`` tokens.  ``pages_bound``
+        statically bounds live pages per request (host-known, bucketed) so
+        the paged kernel's grid tracks actual context lengths.
+        Returns (logits, new cache)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._interleaved:
+            raise NotImplementedError(
+                "paged decode supports dense/moe (non-interleaved) only"
+            )
+        pos = jnp.asarray(lengths, jnp.int32)
+        x = self._embed_tokens(params, tokens)[:, None, :]       # (b, 1, D)
+        windows = self._layer_windows(0)
+        xs = (
+            (params["blocks"], windows)
+            if windows is not None
+            else (params["blocks"],)
+        )
+
+        def body(x1, xs_l, caches, li):
+            blk = self._cast(xs_l[0])
+            window = xs_l[1] if len(xs_l) > 1 else None
+            h = self._norm(x1, blk["ln1"])
+            a, kp, vp = attn_decode_paged(
+                blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                page_table, pos, cfg, backend=self.backend,
+                window=window, pages_bound=pages_bound,
+            )
+            if cfg.post_norms:
+                a = self._norm(a, blk["post_attn_norm"])
+            x1 = x1 + a
+            return self._block_ffn(blk, x1), {"k_pages": kp, "v_pages": vp}
+
+        x, stacks = _scan_cached(
+            body, x, xs,
+            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
+            cfg.num_layers,
+        )
+        new_cache = dict(cache)
+        new_cache.update(stacks)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    def prefill_paged_chunk(self, params, tokens, cache, page_row,
+                            last_index, pos0: int):
+        """One chunked-prefill step: process a (1, c) prompt chunk starting
+        at static page-aligned absolute position ``pos0``, attending to the
+        request's already-paged context and appending the chunk's K/V to its
+        pages (``page_row``: (max_pages,) int32).  The chunk may be right-
+        padded to a page multiple so chunk shapes stay bucketed;
+        ``last_index`` (dynamic scalar) is the final *real* token's offset
+        within the chunk.  Returns (logits (1, V) at ``last_index``, new
+        cache) — the logits only matter for the final chunk, whose argmax is
+        the request's first generated token."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._interleaved:
+            raise NotImplementedError(
+                "chunked paged prefill supports dense/moe (non-interleaved) only"
+            )
+        b, c = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        x = shard_act(x, ("batch", "seq", "act_embed"))
+        windows = self._layer_windows(c)
+        xs = (
+            (params["blocks"], windows)
+            if windows is not None
+            else (params["blocks"],)
+        )
+
+        def body(x, xs_l, caches, li):
+            blk = self._cast(xs_l[0])
+            window = xs_l[1] if len(xs_l) > 1 else None
+            h = self._norm(x, blk["ln1"])
+            a, kp, vp = attn_prefill_paged(
+                blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                page_row, pos0, cfg, backend=self.backend, window=window,
+            )
+            if cfg.post_norms:
+                a = self._norm(a, blk["post_attn_norm"])
+            x = x + a
+            return self._block_ffn(blk, x), {"k_pages": kp, "v_pages": vp}
+
+        x, stacks = _scan_cached(
+            body, x, xs,
+            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
+            cfg.num_layers,
+        )
+        new_cache = dict(cache)
+        new_cache.update(stacks)
+        last = jnp.asarray(last_index, jnp.int32)
+        logits = self._logits(params, x[:, last][:, None, :])[:, 0]
         return logits, new_cache
 
     def _hybrid_decode(self, params, x, cache, uniform_pos=True):
@@ -811,11 +971,9 @@ class EncDecLM(BaseModel):
         )
         new_cache = dict(cache)
         new_cache.update(stacks)
-        new_cache["pos"] = jnp.full((b,), s, jnp.int32)
-        logits = self._logits(params, x[:, -1:, :])[:, 0]
-        return logits, new_cache
+        return self._prefill_logits(params, batch, x, new_cache, b, s)
 
-    def decode(self, params, tokens, cache, uniform_pos=True):
+    def decode(self, params, tokens, cache, uniform_pos=True, kv_bound=None):
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_tokens(params, tokens)[:, None, :]
@@ -827,6 +985,7 @@ class EncDecLM(BaseModel):
             a, kc, vc = attn_decode(
                 blk["self_attn"], h, caches["k"], caches["v"], pos, cfg,
                 backend=self.backend, use_rope=False, uniform_pos=uniform_pos,
+                kv_bound=kv_bound,
             )
             x1 = x1 + a
             h2 = self._norm(x1, blk["ln2"])

@@ -176,6 +176,7 @@ def attn_decode(
     use_rope: bool = True,
     ring: bool = False,                   # ring-buffer cache (windowed long context)
     uniform_pos: bool = True,             # all rows share one decode position
+    kv_bound: Optional[int] = None,       # static bound on lengths (serving)
 ):
     """Single-token attention against a KV cache; returns (y, k_cache, v_cache)."""
     b = x1.shape[0]
@@ -205,9 +206,102 @@ def attn_decode(
         softcap=cfg.attn_softcap,
         window=window if not ring else None,   # ring cache is already windowed
         backend=backend,
+        # a ring cache's live tokens wrap the whole buffer: never bound it
+        kv_bound=None if ring else kv_bound,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, k_cache, v_cache
+
+
+def attn_decode_paged(
+    p: Dict[str, jnp.ndarray],
+    x1: jnp.ndarray,                      # (b, 1, D) — one new token per slot
+    k_pages: jnp.ndarray,                 # (num_pages, page_size, kv, dh)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,              # (b, max_pages) int32
+    pos: jnp.ndarray,                     # (b,) position of the new token
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    window=None,
+    use_rope: bool = True,
+    pages_bound: Optional[int] = None,
+):
+    """Single-token attention against a paged KV pool.
+
+    The new token's K/V are appended to the page holding logical position
+    ``pos`` (a per-row scatter through the page table); attention then runs
+    over only the request's live pages.  Returns (y, k_pages, v_pages).
+    """
+    b = x1.shape[0]
+    page_size = k_pages.shape[1]
+    positions = pos[:, None] if use_rope else None
+    q, k, v = _project_qkv(p, x1, cfg, positions, backend)
+    page_ids = page_table[jnp.arange(b), pos // page_size]    # (b,)
+    offsets = pos % page_size
+    k_pages = k_pages.at[page_ids, offsets].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offsets].set(v[:, 0].astype(v_pages.dtype))
+    out = ops.paged_attention(
+        q, k_pages, v_pages, page_table, pos + 1,
+        softcap=cfg.attn_softcap,
+        window=window,
+        backend=backend,
+        pages_bound=pages_bound,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, k_pages, v_pages
+
+
+def attn_prefill_paged(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                       # (1, c, D) — one prompt chunk
+    k_pages: jnp.ndarray,                 # (num_pages, page_size, kv, dh)
+    v_pages: jnp.ndarray,
+    page_row: jnp.ndarray,                # (max_pages,) int32 — this request's pages
+    pos0: int,                            # static absolute position of x[0]
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    window=None,
+):
+    """One chunked-prefill step: attend the chunk to the request's already-
+    paged context plus itself (causal), then append the chunk's K/V to the
+    pages.  ``pos0`` must be a multiple of ``page_size`` (chunk sizes are),
+    so the context occupies exactly the first ``pos0 // page_size`` pages.
+    The chunk may be right-padded to a page multiple: causal attention keeps
+    pad rows invisible to real rows, and pad K/V lands in positions the
+    decode path masks (by length) until it overwrites them.
+    Returns (y, k_pages, v_pages).
+    """
+    c = x.shape[1]
+    page_size = k_pages.shape[1]
+    if pos0 % page_size:
+        raise ValueError(f"chunk start {pos0} not page-aligned ({page_size})")
+    positions = pos0 + jnp.arange(c)
+    q, k, v = _project_qkv(p, x, cfg, positions, backend)
+    n_ctx = pos0 // page_size
+    if n_ctx:
+        kctx = k_pages[page_row[:n_ctx]].reshape(1, pos0, *k_pages.shape[2:])
+        vctx = v_pages[page_row[:n_ctx]].reshape(1, pos0, *v_pages.shape[2:])
+        k_all = jnp.concatenate([kctx.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([vctx.astype(v.dtype), v], axis=1)
+    else:
+        k_all, v_all = k, v
+    out = ops.attention(
+        q, k_all, v_all,
+        causal=True,
+        window=window,
+        softcap=cfg.attn_softcap,
+        q_offset=pos0,
+        backend=backend,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    tok_pos = pos0 + jnp.arange(c)
+    page_ids = page_row[tok_pos // page_size]
+    offsets = tok_pos % page_size
+    k_pages = k_pages.at[page_ids, offsets].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offsets].set(v[0].astype(v_pages.dtype))
+    return y, k_pages, v_pages
 
 
 def cross_attn_decode(

@@ -10,12 +10,16 @@ _EXPORTS = {
     "ServeRequest": ".engine",
     "RequestResult": ".engine",
     "ContinuousStats": ".engine",
+    "PagedStats": ".engine",
     "RequestScheduler": ".scheduler",
     "SchedulerConfig": ".scheduler",
     "SchedulerQueueFull": ".scheduler",
     "ScheduledRequest": ".scheduler",
     "CompletionFuture": ".scheduler",
     "SlotPool": ".scheduler",
+    "PagedSlotPool": ".scheduler",
+    "PagePool": ".page_table",
+    "PageTable": ".page_table",
 }
 
 __all__ = sorted(_EXPORTS)

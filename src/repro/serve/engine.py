@@ -1,19 +1,29 @@
-"""Batched + continuous-batching serving engine.
+"""Batched + continuous-batching + paged serving engine.
 
 This is the platform's "cloud scenario" executor (the paper deploys models
-either for cloud serving or edge inference). Two generate paths share the
+either for cloud serving or edge inference). Three generate paths share the
 prefill/decode jits:
 
 * ``generate``          — static fixed-batch: requests grouped into padded
   batches, prefilled once, decoded token-by-token with cache donation so
   decode is allocation-free at steady state.
 * ``serve_continuous``  — slot-based continuous batching: a fixed pool of
-  KV-cache slots; finished sequences free their slot and queued prompts are
-  admitted at decode-step boundaries (batch-1 prefill scattered into the
-  pooled cache), so long and short generations no longer convoy. Uses the
-  model's masked per-row cache-update path (``uniform_pos=False``) because
-  slots sit at different sequence positions. Reports per-request
-  time-to-first-token and tokens/sec.
+  dense KV-cache slots; finished sequences free their slot and queued
+  prompts are admitted at decode-step boundaries (batch-1 prefill scattered
+  into the pooled cache).  Uses the model's masked per-row cache-update path
+  (``uniform_pos=False``) because slots sit at different sequence positions.
+* ``serve_paged``       — paged KV cache: a global pool of ``page_size``-
+  token pages plus per-request page tables; admission is keyed on free
+  pages, prompts prefill in fixed-size chunks interleaved at decode-step
+  boundaries, and the pool preempts the youngest request when pages run
+  out.  HBM scales with live tokens instead of ``num_slots * max_seq``.
+
+Two shape disciplines keep XLA compile counts bounded (tracked in
+``compile_stats``): prompts are RIGHT-padded to power-of-two length buckets
+(floored at ``page_size``) — causal attention never reads trailing pads, so
+bucketing is numerically exact for attention families — and decode passes a
+bucketed static ``kv_bound`` so attention streams only the live prefix of
+the cache rather than all of padded ``max_seq``.
 """
 from __future__ import annotations
 
@@ -29,7 +39,18 @@ import numpy as np
 
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
-from .scheduler import SlotPool
+from .page_table import PagePool, PageTable, pages_needed
+from .scheduler import PagedSlotPool, SlotPool
+
+
+def bucket_pow2(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
+    """Smallest power-of-two multiple of ``floor`` that is >= ``n``, clipped
+    to ``cap``.  Callers guarantee ``n <= cap``; the clip keeps the top
+    bucket from overshooting the cache."""
+    b = max(floor, 1)
+    while b < n:
+        b *= 2
+    return min(b, cap) if cap is not None else b
 
 
 @dataclass
@@ -42,7 +63,7 @@ class GenerationResult:
 
 @dataclass
 class ServeRequest:
-    """One prompt for the continuous-batching loop."""
+    """One prompt for the continuous-batching / paged loops."""
 
     request_id: int
     prompt: np.ndarray
@@ -75,6 +96,26 @@ class ContinuousStats:
     mean_slot_occupancy: float  # active slots per decode step
 
 
+@dataclass
+class PagedStats:
+    """Aggregate output of one ``serve_paged`` run."""
+
+    results: List[RequestResult]
+    steps: int                  # decode steps executed
+    wall_s: float
+    total_tokens: int
+    throughput_tps: float
+    mean_slot_occupancy: float  # active slots per decode step
+    peak_slot_occupancy: int    # max concurrent requests observed
+    page_size: int
+    num_pages: int              # allocatable pages in the pool
+    mean_pages_in_use: float
+    peak_pages_in_use: int
+    preemptions: int
+    prefill_chunks: int         # chunked-prefill steps executed
+    compile_stats: Dict[str, int] = field(default_factory=dict)
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -83,34 +124,92 @@ class ServingEngine:
         max_batch: int,
         max_seq: int,
         cache_dtype: str = "float32",
+        page_size: int = 16,
     ) -> None:
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        # tokens per KV page (paged engine) — doubles as the prefill length-
+        # bucket floor so admission shapes snap to page boundaries
+        self.page_size = page_size
         self._prefill = jax.jit(model.prefill)
-        # donate the cache so steady-state decode does not reallocate it
-        self._decode = jax.jit(model.decode, donate_argnums=(2,))
-        # continuous batching: masked per-row cache updates (slots decode at
-        # different positions) + slot scatter of a batch-1 prefill cache
-        self._decode_ragged = jax.jit(
-            partial(model.decode, uniform_pos=False), donate_argnums=(2,)
-        )
+        # decode jits keyed by (uniform_pos, kv_bound): the kv bound is a
+        # static power-of-two bucket, so short contexts stop streaming the
+        # whole padded cache and compile count stays logarithmic
+        self._decode_fns: Dict[Tuple[bool, Optional[int]], Callable] = {}
+        self._paged_decode_fns: Dict[int, Callable] = {}
+        self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self._slot_writers: Dict[int, Callable] = {}
+        self._prefill_shapes: set = set()
+        fam = getattr(model.cfg, "family", "")
+        # right-padded ragged prefill (and kv-bounded decode) is exact only
+        # for pure-attention caches; ssm/hybrid state scans absorb pads and
+        # the hybrid ring cache wraps, so those keep exact-length shapes
+        self._ragged_ok = fam in ("dense", "moe", "encdec")
 
-    def _pad_prompts(self, prompts: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    # -- compile accounting --------------------------------------------------
+    def compile_stats(self) -> Dict[str, int]:
+        """Distinct jitted variants per path (the engine's compile budget)."""
+        return {
+            "prefill": len(self._prefill_shapes),
+            "decode": len(self._decode_fns),
+            "paged_prefill": len(self._paged_prefill_fns),
+            "paged_decode": len(self._paged_decode_fns),
+        }
+
+    def _decode_step_fn(self, uniform: bool, kv_bound: Optional[int]) -> Callable:
+        key = (uniform, kv_bound)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                partial(self.model.decode, uniform_pos=uniform, kv_bound=kv_bound),
+                donate_argnums=(2,),
+            )
+            self._decode_fns[key] = fn
+        return fn
+
+    def _kv_bucket(self, live_len: int) -> Optional[int]:
+        if not self._ragged_ok:
+            return None
+        return bucket_pow2(live_len, floor=min(self.page_size, self.max_seq),
+                           cap=self.max_seq)
+
+    # -- prompt padding ------------------------------------------------------
+    def _pad_prompts(
+        self, prompts: List[np.ndarray], max_new_tokens: int = 0
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pad a prompt batch to one prefill shape.
+
+        Attention families RIGHT-pad to a power-of-two bucket (floored at
+        ``page_size``): causal attention never reads trailing pads and the
+        model gathers logits at ``lengths - 1``, so every distinct prompt
+        length no longer costs a fresh XLA compile.  SSM/hybrid keep the
+        exact batch max (left-padded) since their state scans the full row.
+        """
         b = len(prompts)
         if b > self.max_batch:
             raise ValueError(f"batch {b} > max_batch {self.max_batch}")
-        max_len = max(len(p) for p in prompts)
+        lens = np.asarray([len(p) for p in prompts], np.int32)
+        max_len = int(lens.max())
+        if max_len + max_new_tokens > self.max_seq:
+            raise ValueError("prompt + generation exceeds max_seq")
+        if self._ragged_ok:
+            padded = bucket_pow2(
+                max_len,
+                floor=min(self.page_size, self.max_seq),
+                cap=max(self.max_seq - max_new_tokens, max_len),
+            )
+            out = np.zeros((b, padded), np.int32)
+            for i, p in enumerate(prompts):
+                out[i, : len(p)] = p
+            return out, lens
         out = np.zeros((b, max_len), np.int32)
-        lens = np.zeros((b,), np.int32)
         for i, p in enumerate(prompts):
             # left-pad so every prompt's last token sits at max_len-1; the
             # causal mask plus identical suffix alignment keeps decode simple
             out[i, max_len - len(p):] = p
-            lens[i] = len(p)
         return out, lens
 
     def generate(
@@ -120,22 +219,28 @@ class ServingEngine:
         extra_inputs: Optional[Dict[str, Any]] = None,
         greedy: bool = True,
     ) -> GenerationResult:
-        tokens, _ = self._pad_prompts(prompts)
+        tokens, lens = self._pad_prompts(prompts, max_new_tokens)
         b, s = tokens.shape
-        if s + max_new_tokens > self.max_seq:
-            raise ValueError("prompt + generation exceeds max_seq")
+        max_len = int(lens.max())
         cache = self.model.init_cache(b, self.max_seq, dtype=self.cache_dtype)
         batch = {"tokens": jnp.asarray(tokens)}
+        if self._ragged_ok:
+            batch["lengths"] = jnp.asarray(lens)
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
         t0 = time.perf_counter()
         logits, cache = jax.block_until_ready(self._prefill(self.params, batch, cache))
+        self._prefill_shapes.add((b, s))
         t1 = time.perf_counter()
         out = np.zeros((b, max_new_tokens), np.int32)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # left-padded families sit at one common position; right-padded ragged
+        # batches decode at per-row positions via the masked-update path
+        uniform = (not self._ragged_ok) or bool((lens == lens[0]).all())
         for i in range(max_new_tokens):
             out[:, i] = np.asarray(nxt)
-            logits, cache = self._decode(self.params, nxt, cache)
+            decode = self._decode_step_fn(uniform, self._kv_bucket(max_len + i + 1))
+            logits, cache = decode(self.params, nxt, cache)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(logits)
         t2 = time.perf_counter()
@@ -180,10 +285,11 @@ class ServingEngine:
     ) -> ContinuousStats:
         """Slot-based continuous-batching generate loop.
 
-        All prompts are left-padded to a common prefill length (one compile);
-        admission runs a batch-1 prefill and scatters its cache into the free
-        slot, then every decode step advances all active slots together.
-        ``clock`` is injectable so tests measure deterministic timings.
+        All prompts are padded to a common (bucketed) prefill length — one
+        compile; admission runs a batch-1 prefill and scatters its cache into
+        the free slot, then every decode step advances all active slots
+        together.  ``clock`` is injectable so tests measure deterministic
+        timings.
         """
         if not requests:
             return ContinuousStats([], 0, 0.0, 0, 0.0, 0.0)
@@ -193,9 +299,19 @@ class ServingEngine:
                 "admission prefill would need per-request encoder frames"
             )
         num_slots = num_slots or self.max_batch
-        prefill_len = max(len(r.prompt) for r in requests)
+        max_prompt = max(len(r.prompt) for r in requests)
+        if self._ragged_ok:
+            prefill_len = bucket_pow2(
+                max_prompt, floor=min(self.page_size, self.max_seq), cap=self.max_seq
+            )
+        else:
+            prefill_len = max_prompt
         for r in requests:
-            if prefill_len + r.max_new_tokens > self.max_seq:
+            # left-padded families start every slot at prefill_len, so their
+            # decode budget is measured from the padded length, not the
+            # prompt's own; right-padded ragged slots start at len(prompt)
+            start = len(r.prompt) if self._ragged_ok else prefill_len
+            if start + r.max_new_tokens > self.max_seq:
                 raise ValueError(
                     f"request {r.request_id}: prompt + generation exceeds max_seq"
                 )
@@ -207,8 +323,9 @@ class ServingEngine:
         cache1 = self.model.init_cache(1, self.max_seq, dtype=self.cache_dtype)
         queue = deque(requests)
         nxt = np.zeros((num_slots,), np.int32)
-        # slot -> [generated tokens]; request/submit times by id
+        # slot -> [generated tokens]; slot -> live length (prompt + generated)
         slot_tokens: Dict[int, List[int]] = {}
+        slot_len: Dict[int, int] = {}
         finished: Dict[int, RequestResult] = {}
         t_start = clock()
         submit_s = {r.request_id: t_start for r in requests}
@@ -235,19 +352,28 @@ class ServingEngine:
                         ),
                     )
                     pool.release(slot)
+                    slot_len.pop(slot, None)
             # admission at the decode-step boundary: fill every free slot
             while queue and pool.num_free:
                 req = queue.popleft()
                 slot = pool.admit(req, step=step)
                 padded = np.zeros((prefill_len,), np.int32)
-                padded[prefill_len - len(req.prompt):] = req.prompt
-                logits1, filled = self._prefill(
-                    self.params, {"tokens": jnp.asarray(padded[None])}, cache1
-                )
+                batch1 = {}
+                if self._ragged_ok:
+                    padded[: len(req.prompt)] = req.prompt
+                    batch1["lengths"] = jnp.asarray([len(req.prompt)], jnp.int32)
+                else:
+                    padded[prefill_len - len(req.prompt):] = req.prompt
+                batch1["tokens"] = jnp.asarray(padded[None])
+                logits1, filled = self._prefill(self.params, batch1, cache1)
+                self._prefill_shapes.add((1, prefill_len))
                 tok0 = int(jnp.argmax(logits1[0]))
                 cache = write(cache, filled, jnp.int32(slot))
                 nxt[slot] = tok0
                 slot_tokens[slot] = [tok0]
+                slot_len[slot] = (
+                    len(req.prompt) if self._ragged_ok else prefill_len
+                )
                 req._admit_step = step          # type: ignore[attr-defined]
                 req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
             if not pool.num_active:
@@ -259,8 +385,12 @@ class ServingEngine:
                 for s in pool.active
             ):
                 continue  # every active slot is at budget: retire, don't decode
-            # one decode step for the whole pool (inactive slots are ignored)
-            logits, cache = self._decode_ragged(self.params, jnp.asarray(nxt), cache)
+            # one decode step for the whole pool (inactive slots are ignored);
+            # the kv bound tracks the longest live slot, not padded max_seq
+            decode = self._decode_step_fn(
+                False, self._kv_bucket(max(slot_len.values()) + 1)
+            )
+            logits, cache = decode(self.params, jnp.asarray(nxt), cache)
             tokens_all = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             step += 1
             occupancy_sum += pool.num_active
@@ -268,6 +398,7 @@ class ServingEngine:
                 if len(slot_tokens[slot]) < pool.active[slot].max_new_tokens:
                     slot_tokens[slot].append(int(tokens_all[slot]))
                     nxt[slot] = tokens_all[slot]
+                    slot_len[slot] += 1
         jax.block_until_ready(cache["pos"])
         wall = clock() - t_start
         results = [finished[r.request_id] for r in requests]
@@ -279,4 +410,285 @@ class ServingEngine:
             total_tokens=total_tokens,
             throughput_tps=total_tokens / wall if wall > 0 else float("inf"),
             mean_slot_occupancy=occupancy_sum / step if step else float(num_slots),
+        )
+
+    # -- paged serving -------------------------------------------------------
+    def _paged_decode_fn(self, pages_bound: int) -> Callable:
+        fn = self._paged_decode_fns.get(pages_bound)
+        if fn is None:
+            fn = jax.jit(
+                partial(self.model.decode_paged, pages_bound=pages_bound),
+                donate_argnums=(2,),
+            )
+            self._paged_decode_fns[pages_bound] = fn
+        return fn
+
+    def _paged_prefill_fn(self, chunk_len: int, pos0: int) -> Callable:
+        """Chunk shapes are page-bucketed, so variants are keyed by
+        (chunk_len, pos0) with at most ``prefill_chunk / page_size`` chunk
+        lengths and ``max_seq / prefill_chunk`` offsets (the context-gather
+        shape is exactly ``pos0`` tokens — garbage-free, at the price of one
+        variant per chunk offset, shared across all requests)."""
+        key = (chunk_len, pos0)
+        fn = self._paged_prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                partial(self.model.prefill_paged_chunk, pos0=pos0),
+                donate_argnums=(2,),
+            )
+            self._paged_prefill_fns[key] = fn
+        return fn
+
+    def serve_paged(
+        self,
+        requests: List[ServeRequest],
+        num_slots: Optional[int] = None,
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+        overcommit: float = 1.0,
+        clock: Callable[[], float] = time.perf_counter,
+        tracer=None,
+    ) -> PagedStats:
+        """Paged-KV continuous batching.
+
+        The KV cache is a global pool of ``num_pages`` pages of ``page_size``
+        tokens; each slot owns only the pages its live tokens need, recorded
+        in a per-slot page table.  Admission is keyed on *free pages*: a
+        request enters when a slot and its prompt's pages are available AND
+        the pool's committed worst-case pages (every active request's
+        ``prompt + max_new_tokens``) stay within ``capacity * overcommit`` —
+        at the default 1.0 growth can never fail, so preemption never fires.
+        ``overcommit > 1`` admits more aggressively (live usage is usually
+        far below worst case); if the gamble loses and a decode step finds
+        the pool dry, the youngest request is preempted (pages freed,
+        request requeued for recompute-style restart).  Prompts prefill in
+        ``prefill_chunk``-token chunks, one chunk per decode-step boundary,
+        so a long prompt no longer stalls every decoding slot behind a
+        monolithic batch-1 prefill.  Greedy tokens are identical to
+        ``serve_continuous``.
+        """
+        if not requests:
+            return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
+                              0.0, 0, 0, 0, self.compile_stats())
+        if overcommit <= 0:
+            raise ValueError("overcommit must be > 0")
+        page_size = page_size or self.page_size
+        num_slots = num_slots or self.max_batch
+        prefill_chunk = prefill_chunk or 4 * page_size
+        prefill_chunk = max(
+            page_size, (prefill_chunk // page_size) * page_size
+        )  # chunk starts must stay page-aligned
+        max_pages_per_seq = pages_needed(self.max_seq, page_size)
+        if num_pages is None:
+            num_pages = num_slots * max_pages_per_seq + 1
+        pool = PagePool(num_pages, page_size, reserved=1)
+        # admission budget: worst-case commitment per the overcommit factor,
+        # but never above physical capacity (growth still needs real pages)
+        commit_budget = min(pool.capacity, pool.capacity * overcommit)
+        for r in requests:
+            if len(r.prompt) + r.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request {r.request_id}: prompt + generation exceeds max_seq"
+                )
+            if pool.pages_needed(len(r.prompt) + r.max_new_tokens) > commit_budget:
+                raise ValueError(
+                    f"request {r.request_id}: needs more pages than the pool "
+                    f"(or overcommit budget) admits"
+                )
+        slots = PagedSlotPool(num_slots, pool, tracer=tracer, clock=clock)
+        table = PageTable(num_slots, max_pages_per_seq, scratch_page=0)
+        cache = self.model.init_paged_cache(
+            num_pages, page_size, dtype=self.cache_dtype
+        )
+        queue = deque(requests)
+        nxt = np.zeros((num_slots,), np.int32)
+        lengths = np.zeros((num_slots,), np.int32)   # live tokens per slot
+        slot_tokens: Dict[int, List[int]] = {}
+        prefilling: Dict[int, int] = {}              # slot -> next chunk start
+        decoding: set = set()
+        admit_order: Dict[int, int] = {}             # slot -> admission sequence
+        admit_seq = 0
+        finished: Dict[int, RequestResult] = {}
+        t_start = clock()
+        submit_s = {r.request_id: t_start for r in requests}
+        step = 0
+        occupancy_sum = 0
+        peak_occupancy = 0
+        pages_sum = 0.0
+        samples = 0
+        chunks_done = 0
+
+        def release_slot(slot: int, preempted: bool = False):
+            req = slots.release_paged(slot, table.clear(slot), preempted=preempted)
+            lengths[slot] = 0
+            slot_tokens.pop(slot, None)
+            prefilling.pop(slot, None)
+            decoding.discard(slot)
+            admit_order.pop(slot, None)
+            return req
+
+        def preempt_one() -> Optional[int]:
+            """Evict the globally youngest request (recompute-style): free
+            its pages and push it back to the queue front.  The youngest may
+            be the very slot that asked to grow — self-preemption parks it
+            back in the queue rather than evicting older work for it."""
+            if not admit_order:
+                return None
+            victim = max(admit_order, key=lambda s: admit_order[s])
+            queue.appendleft(release_slot(victim, preempted=True))
+            return victim
+
+        while queue or slots.num_active:
+            progressed = False
+            # 1) retire finished sequences, returning their pages
+            for slot in list(decoding):
+                req = slots.active[slot]
+                if len(slot_tokens[slot]) >= req.max_new_tokens:
+                    now = clock()
+                    finished[req.request_id] = RequestResult(
+                        request_id=req.request_id,
+                        tokens=np.asarray(slot_tokens[slot], np.int32),
+                        slot=slot,
+                        admit_step=req._admit_step,  # type: ignore[attr-defined]
+                        finish_step=step,
+                        ttft_s=req._ttft_s,          # type: ignore[attr-defined]
+                        latency_s=now - submit_s[req.request_id],
+                        tokens_per_s=(
+                            req.max_new_tokens / (now - submit_s[req.request_id])
+                            if now > submit_s[req.request_id] else float("inf")
+                        ),
+                    )
+                    release_slot(slot)
+                    progressed = True
+            # 2) admission keyed on free pages: a request enters only when a
+            #    slot AND its prompt's pages are available AND its worst-case
+            #    page commitment fits the (possibly overcommitted) pool
+            while queue:
+                req0 = queue[0]
+                npages = pool.pages_needed(len(req0.prompt))
+                worst = pool.pages_needed(len(req0.prompt) + req0.max_new_tokens)
+                committed = sum(
+                    pool.pages_needed(len(r.prompt) + r.max_new_tokens)
+                    for r in slots.active.values()
+                )
+                if not slots.can_admit(npages):
+                    break
+                if committed + worst > pool.capacity * overcommit:
+                    break
+                req = queue.popleft()
+                slot, pages = slots.admit_paged(req, npages, step=step)
+                table.assign(slot, pages)
+                lengths[slot] = 0
+                slot_tokens[slot] = []
+                prefilling[slot] = 0
+                admit_order[slot] = admit_seq
+                admit_seq += 1
+                req._admit_step = step              # type: ignore[attr-defined]
+                progressed = True
+            # 3) chunked prefill: ONE chunk per admitting slot per boundary,
+            #    so prefill work interleaves with decode instead of stalling it
+            for slot in list(prefilling):
+                req = slots.active[slot]
+                start = prefilling[slot]
+                c = min(prefill_chunk, len(req.prompt) - start)
+                # bucket the chunk shape to a page multiple so ragged prompt
+                # tails don't compile one jit variant per distinct residual;
+                # pad K/V lands inside the prompt's already-allocated pages
+                # and stays length-masked until decode overwrites it
+                c_pad = min(prefill_chunk, pages_needed(c, page_size) * page_size)
+                chunk = np.zeros((1, c_pad), np.int32)
+                chunk[0, :c] = req.prompt[start : start + c]
+                fn = self._paged_prefill_fn(c_pad, start)
+                logits, cache = fn(
+                    self.params,
+                    jnp.asarray(chunk),
+                    cache,
+                    jnp.asarray(table.table[slot]),
+                    jnp.int32(c - 1),
+                )
+                chunks_done += 1
+                start += c
+                lengths[slot] = start
+                progressed = True
+                if start >= len(req.prompt):
+                    del prefilling[slot]
+                    tok0 = int(jnp.argmax(logits[0]))
+                    nxt[slot] = tok0
+                    slot_tokens[slot] = [tok0]
+                    decoding.add(slot)
+                    req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                else:
+                    prefilling[slot] = start
+            # 4) one decode step over the whole pool
+            active_dec = [
+                s for s in decoding
+                if len(slot_tokens[s]) < slots.active[s].max_new_tokens
+            ]
+            # grow page tables for rows whose next token opens a new page;
+            # preempt the youngest request when the pool is dry
+            for s in sorted(active_dec, key=lambda s: admit_order[s]):
+                while (
+                    s in decoding   # may have been evicted (even by itself)
+                    and table.num_pages_of(s) * page_size <= int(lengths[s])
+                ):
+                    grown = slots.grow(1)
+                    if grown is None:
+                        if preempt_one() is None:
+                            raise RuntimeError(
+                                "page pool exhausted with nothing to preempt"
+                            )
+                        continue
+                    table.append(s, grown[0])
+            active_dec = [s for s in active_dec if s in decoding]  # may be preempted
+            if active_dec:
+                mask = np.zeros((num_slots,), bool)
+                mask[active_dec] = True
+                step_table = table.rows_for(mask)
+                step_pos = np.where(mask, lengths, 0).astype(np.int32)
+                live_pages = pages_needed(int(step_pos.max()) + 1, page_size)
+                bound = bucket_pow2(live_pages, cap=max_pages_per_seq)
+                decode = self._paged_decode_fn(bound)
+                logits, cache = decode(
+                    self.params,
+                    jnp.asarray(nxt),
+                    cache,
+                    jnp.asarray(step_table),
+                    jnp.asarray(step_pos),
+                )
+                tokens_all = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                step += 1
+                occupancy_sum += slots.num_active
+                for s in active_dec:
+                    slot_tokens[s].append(int(tokens_all[s]))
+                    nxt[s] = tokens_all[s]
+                    lengths[s] += 1
+                progressed = True
+            # peak concurrency is a per-boundary property: prefill-only
+            # boundaries (no decode yet) still hold admitted requests
+            peak_occupancy = max(peak_occupancy, slots.num_active)
+            pages_sum += pool.num_in_use
+            samples += 1
+            slots.record_occupancy(step)
+            if not progressed and not prefilling and not decoding:
+                raise RuntimeError("paged serve loop stalled (admission deadlock)")
+        jax.block_until_ready(cache["k_pages"])
+        wall = clock() - t_start
+        results = [finished[r.request_id] for r in requests]
+        total_tokens = sum(len(r.tokens) for r in results)
+        return PagedStats(
+            results=results,
+            steps=step,
+            wall_s=wall,
+            total_tokens=total_tokens,
+            throughput_tps=total_tokens / wall if wall > 0 else float("inf"),
+            mean_slot_occupancy=occupancy_sum / step if step else 0.0,
+            peak_slot_occupancy=peak_occupancy,
+            page_size=page_size,
+            num_pages=pool.capacity,
+            mean_pages_in_use=pages_sum / samples if samples else 0.0,
+            peak_pages_in_use=pool.peak_in_use,
+            preemptions=slots.preemptions,
+            prefill_chunks=chunks_done,
+            compile_stats=self.compile_stats(),
         )

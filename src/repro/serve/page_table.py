@@ -1,0 +1,164 @@
+"""Paged KV-cache bookkeeping: global page pool + per-request page tables.
+
+The serving engine's paged mode replaces the dense per-slot ``max_seq``
+cache with a global pool of ``page_size``-token pages (the vLLM layout):
+HBM footprint scales with *live* tokens, not ``num_slots * max_seq``.  This
+module is the pure-Python side of that design — page ownership, allocation,
+and the (num_slots, max_pages) int32 indirection table the Pallas paged
+kernel dereferences — so admission control and preemption are testable
+without a model.  The engine owns the actual page tensors.
+
+Page 0 (more generally, the first ``reserved`` pages) is never allocated:
+idle batch rows point their table entries at it so their masked-out decode
+writes land in a scratch page instead of a live request's memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["PagePool", "PageTable", "pages_needed", "scatter_cache_to_pages"]
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Pages required to hold ``tokens`` tokens (ceil division)."""
+    if page_size < 1:
+        raise ValueError("page_size must be >= 1")
+    return max((tokens + page_size - 1) // page_size, 0)
+
+
+def scatter_cache_to_pages(k_cache, v_cache, page_size: int, rng=None):
+    """Scatter a contiguous (b, S, kvh, d) cache into a page pool with a
+    RANDOM physical page assignment (page 0 reserved as scratch).
+
+    The layout oracle shared by tests and benchmarks when validating paged
+    attention against the dense reference: any permutation of physical pages
+    must produce identical attention.  Returns numpy
+    ``(k_pages, v_pages, page_table)`` with pool shape
+    ``(b * ceil(S/page_size) + 1, page_size, kvh, d)``.
+    """
+    rng = rng or np.random.default_rng(0)
+    kc, vc = np.asarray(k_cache), np.asarray(v_cache)
+    b, S, kvh, d = kc.shape
+    npg = pages_needed(S, page_size)
+    total = b * npg + 1
+    k_pages = np.zeros((total, page_size, kvh, d), kc.dtype)
+    v_pages = np.zeros_like(k_pages)
+    table = np.zeros((b, npg), np.int32)
+    perm = rng.permutation(np.arange(1, total))
+    for i in range(b):
+        for j in range(npg):
+            pid = int(perm[i * npg + j])
+            blk = kc[i, j * page_size:(j + 1) * page_size]
+            k_pages[pid, : blk.shape[0]] = blk
+            v_pages[pid, : blk.shape[0]] = vc[i, j * page_size:(j + 1) * page_size]
+            table[i, j] = pid
+    return k_pages, v_pages, table
+
+
+class PagePool:
+    """Free-list allocator over the global KV page pool."""
+
+    def __init__(self, num_pages: int, page_size: int, reserved: int = 1) -> None:
+        if num_pages <= reserved:
+            raise ValueError(
+                f"num_pages {num_pages} must exceed reserved scratch pages {reserved}"
+            )
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.reserved = reserved
+        # pop() hands out low page ids first
+        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._allocated: set = set()
+        self.peak_in_use = 0
+        self.allocs = 0
+        self.frees = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the reserved scratch pages)."""
+        return self.num_pages - self.reserved
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return pages_needed(tokens, self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages atomically; None when the pool can't supply
+        all of them (the caller then queues or preempts)."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative page count")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        self.allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+            self._allocated.discard(p)
+            self._free.append(p)
+            self.frees += 1
+
+
+class PageTable:
+    """(num_slots, max_pages) indirection table mapping a slot's logical page
+    index to its physical page id.  Unassigned entries stay at the scratch
+    page (0) so every row is always safe to hand to the paged kernel."""
+
+    def __init__(self, num_slots: int, max_pages: int, scratch_page: int = 0) -> None:
+        if num_slots < 1 or max_pages < 1:
+            raise ValueError("num_slots and max_pages must be >= 1")
+        self.max_pages = max_pages
+        self.scratch_page = scratch_page
+        self.table = np.full((num_slots, max_pages), scratch_page, np.int32)
+        self._pages: Dict[int, List[int]] = {}
+
+    def pages_of(self, slot: int) -> List[int]:
+        return list(self._pages.get(slot, []))
+
+    def num_pages_of(self, slot: int) -> int:
+        return len(self._pages.get(slot, []))
+
+    def assign(self, slot: int, pages: List[int]) -> None:
+        """Give ``slot`` a fresh run of pages (admission)."""
+        if slot in self._pages:
+            raise ValueError(f"slot {slot} already holds pages")
+        if len(pages) > self.max_pages:
+            raise ValueError(f"{len(pages)} pages > max_pages {self.max_pages}")
+        self.table[slot, :] = self.scratch_page
+        self.table[slot, : len(pages)] = pages
+        self._pages[slot] = list(pages)
+
+    def append(self, slot: int, page: int) -> None:
+        """Grow ``slot`` by one page (decode crossing a page boundary)."""
+        held = self._pages.setdefault(slot, [])
+        if len(held) >= self.max_pages:
+            raise ValueError(f"slot {slot} already holds max_pages pages")
+        self.table[slot, len(held)] = page
+        held.append(page)
+
+    def clear(self, slot: int) -> List[int]:
+        """Drop the slot's mapping (completion/preemption); returns the pages
+        so the caller can return them to the pool."""
+        pages = self._pages.pop(slot, [])
+        self.table[slot, :] = self.scratch_page
+        return pages
+
+    def rows_for(self, mask: np.ndarray) -> np.ndarray:
+        """Table snapshot with non-``mask`` rows pointed at the scratch page
+        (idle/prefilling rows must not let the batched decode write into
+        their live pages)."""
+        return np.where(mask[:, None], self.table, np.int32(self.scratch_page))

@@ -36,6 +36,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 __all__ = [
     "CompletionFuture",
+    "PagedSlotPool",
     "RequestScheduler",
     "ScheduledRequest",
     "SchedulerConfig",
@@ -58,6 +59,9 @@ class SchedulerConfig:
     batch_timeout_ms: float = 2.0  # admission window for a non-full batch
     queue_depth: int = 1024        # bounded queue (admission control)
     num_slots: int = 8             # KV slots for continuous batching
+    page_size: int = 16            # tokens per KV page (paged engine)
+    num_pages: int = 0             # global KV page pool size (0 = engine default)
+    prefill_chunk: int = 0         # chunked-prefill tokens per step (0 = default)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -65,6 +69,9 @@ class SchedulerConfig:
             "batch_timeout_ms": self.batch_timeout_ms,
             "queue_depth": self.queue_depth,
             "num_slots": self.num_slots,
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "prefill_chunk": self.prefill_chunk,
         }
 
     @classmethod
@@ -430,3 +437,70 @@ class SlotPool:
         req = self.active.pop(slot)
         self._free.append(slot)
         return req
+
+
+class PagedSlotPool(SlotPool):
+    """Slot pool whose admission is keyed on *free KV pages*, not free slots.
+
+    A request is admitted only when a slot AND all the pages its prompt
+    needs are available; releasing a slot returns its pages to the pool.
+    The pool publishes ``pages:occupancy`` events (used/free/active) to the
+    tracer so page pressure shows up in the analysis workflow next to the
+    scheduler's queue-depth series.
+    """
+
+    def __init__(self, num_slots: int, pool, tracer=None,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        super().__init__(num_slots)
+        self.pool = pool
+        self.tracer = tracer
+        self.clock = clock
+        self.preemptions = 0
+        self.pages_in_use_series: List[tuple] = []  # (step, pages_in_use)
+
+    def can_admit(self, npages: int) -> bool:
+        return bool(self._free) and self.pool.num_free >= npages
+
+    def admit_paged(self, request: Any, npages: int, step: int = 0):
+        """Admit ``request`` with ``npages`` prompt pages; returns
+        ``(slot, pages)`` or ``None`` when either resource is exhausted."""
+        if not self.can_admit(npages):
+            return None
+        pages = self.pool.alloc(npages)
+        if pages is None:  # pragma: no cover - guarded by can_admit
+            return None
+        slot = self.admit(request, step=step)
+        return slot, pages
+
+    def grow(self, n: int = 1):
+        """Allocate ``n`` more pages for a decoding slot (page-boundary
+        crossing); None signals the caller to preempt."""
+        return self.pool.alloc(n)
+
+    def release_paged(self, slot: int, pages: List[int],
+                      preempted: bool = False) -> Any:
+        """Free a slot and return its pages to the pool."""
+        req = self.release(slot)
+        if pages:
+            self.pool.free(pages)
+        if preempted:
+            self.preemptions += 1
+        return req
+
+    def record_occupancy(self, step: int) -> None:
+        """Sample page occupancy at a decode-step boundary."""
+        self.pages_in_use_series.append((step, self.pool.num_in_use))
+        if self.tracer is not None:
+            now = self.clock()
+            self.tracer.event(
+                "pages:occupancy",
+                now,
+                now,
+                step=step,
+                pages_in_use=self.pool.num_in_use,
+                pages_free=self.pool.num_free,
+                # allocatable pages (reserved scratch excluded), so
+                # pages_in_use / num_pages reaches 1.0 at saturation
+                num_pages=self.pool.capacity,
+                active_slots=self.num_active,
+            )
