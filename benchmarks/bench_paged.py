@@ -34,7 +34,7 @@ from repro.kernels.paged_attention import paged_attention as pallas_paged
 from repro.models import build_model
 from repro.serve.engine import ServeRequest, ServingEngine
 
-from .common import emit
+from .common import bench_meta, emit
 
 
 def _kernel_max_err(rng) -> float:
@@ -52,7 +52,7 @@ def _kernel_max_err(rng) -> float:
     return float(jnp.max(jnp.abs(a.astype(jnp.float32) - f.astype(jnp.float32))))
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, seed: int = 0) -> dict:
     max_seq, page_size, dense_slots = 128, 8, 2
     prompt_lo, prompt_hi, prefill_chunk, paged_slots = 4, 12, 16, 12
     num_requests, gen_hi = (24, 24) if smoke else (32, 32)
@@ -71,7 +71,7 @@ def run(smoke: bool = False) -> dict:
         model, params, max_batch=paged_slots, max_seq=max_seq, page_size=page_size
     )
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     prompts = [
         rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
         for n in rng.integers(prompt_lo, prompt_hi + 1, num_requests)
@@ -103,7 +103,7 @@ def run(smoke: bool = False) -> dict:
 
     speedup = paged.throughput_tps / cont.throughput_tps
     concurrency_ratio = paged.peak_slot_occupancy / dense_slots
-    kernel_err = _kernel_max_err(np.random.default_rng(7))
+    kernel_err = _kernel_max_err(np.random.default_rng(seed + 7))
 
     emit("paged/dense_continuous", cont.wall_s / num_requests,
          f"tok_s={cont.throughput_tps:.1f};slots={dense_slots};"
@@ -123,6 +123,7 @@ def run(smoke: bool = False) -> dict:
     out = {
         "bench": "paged",
         "smoke": smoke,
+        **bench_meta(seed),
         "budget_tokens": budget_tokens,
         "max_seq": max_seq,
         "page_size": page_size,
@@ -160,8 +161,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (interpret-mode kernels, CPU)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (recorded in BENCH_paged.json)")
     args = ap.parse_args()
     emit_header()
     t0 = time.perf_counter()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, seed=args.seed)
     print(f"# bench_paged done in {time.perf_counter() - t0:.1f}s")

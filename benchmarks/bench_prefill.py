@@ -1,0 +1,207 @@
+"""Packed varlen prefill vs per-chunk pow2-bucketed prefill (ISSUE 3).
+
+Both serving runs share the SAME paged engine, page budget, admission policy
+and decode path; only the prefill pipeline differs:
+
+* ``chunked`` — the PR 2 path: one batch-1 ``prefill_chunk``-token chunk per
+  prefilling slot per decode boundary, page-bucketed shapes, one jit variant
+  per (chunk length, offset).  Queued ragged prompts serialize behind each
+  other and TTFT p99 blows up under bursty arrivals.
+* ``packed``  — one token-packed varlen launch per boundary holding chunks
+  from MANY requests at once (``prefill_budget`` tokens, no pow2 padding,
+  K/V scattered straight into the page pool, ONE compile for the fixed
+  packed-buffer size however lengths mix).
+
+Acceptance targets (ISSUE 3): packed prefill sustains >= 1.5x the prefill
+tokens/sec of the chunked path on ragged prompts at a fixed page budget,
+with materially lower TTFT p99, and greedy tokens bit-identical between the
+two modes.  Emits ``name,us_per_call,derived`` CSV rows plus a
+``BENCH_prefill.json`` artifact (seed + git rev recorded) uploaded by the CI
+smoke job.  ``--smoke`` shrinks everything for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.analysis import percentile
+from repro.kernels import ref
+from repro.kernels.varlen_prefill import varlen_prefill as pallas_varlen
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine
+
+from .common import bench_meta, emit
+
+
+def _kernel_max_err(rng) -> float:
+    """Pallas packed-varlen kernel vs the host-loop oracle (interpret, f32):
+    ragged chunks, committed context pages, a buffer-tail pad."""
+    ps, kvh, h, d, P, num_pages = 8, 2, 4, 16, 4, 12
+    chunks = [(5, 0), (11, 2), (3, 1)]          # (real_len, ctx_pages)
+    T = 40                                       # spans sum to 32 + tail pad
+    cu, lens, pos0 = [0], [], []
+    tables = np.zeros((len(chunks), P), np.int32)
+    nxt = 1
+    for c, (n, cp) in enumerate(chunks):
+        cu.append(cu[-1] + (n + ps - 1) // ps * ps)
+        lens.append(n)
+        pos0.append(cp * ps)
+        for j in range(cp):
+            tables[c, j] = nxt
+            nxt += 1
+    args = tuple(
+        jnp.asarray(x)
+        for x in (
+            rng.normal(size=(T, h, d)).astype(np.float32),
+            rng.normal(size=(T, kvh, d)).astype(np.float32),
+            rng.normal(size=(T, kvh, d)).astype(np.float32),
+            rng.normal(size=(num_pages, ps, kvh, d)).astype(np.float32),
+            rng.normal(size=(num_pages, ps, kvh, d)).astype(np.float32),
+            np.array(cu, np.int32),
+            np.array(lens, np.int32),
+            np.array(pos0, np.int32),
+            tables,
+        )
+    )
+    a = ref.varlen_prefill(*args)
+    b = pallas_varlen(*args)
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    max_seq, page_size, num_slots = 192, 8, 8
+    prefill_chunk, prefill_budget = 16, 128
+    prompt_lo, prompt_hi = 40, 96
+    gen_tokens = 4                       # short decode: prefill-bound regime
+    # the full workload already runs in CI time (~20 s): --smoke keeps the
+    # same request mix so the committed baseline and CI numbers are
+    # one-to-one comparable (the flag is still recorded in the artifact)
+    num_requests = 16
+    # fixed page budget shared by both modes (worst case fits: no preemption
+    # noise in the comparison)
+    num_pages = num_slots * ((max_seq + page_size - 1) // page_size) + 1
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        model, params, max_batch=num_slots, max_seq=max_seq, page_size=page_size
+    )
+
+    rng = np.random.default_rng(seed)
+    prompt_lens = rng.integers(prompt_lo, prompt_hi + 1, num_requests)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+        for n in prompt_lens
+    ]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=gen_tokens)
+        for i, p in enumerate(prompts)
+    ]
+    total_prompt_tokens = int(prompt_lens.sum())
+
+    def serve(mode):
+        return engine.serve_paged(
+            reqs(), num_slots=num_slots, page_size=page_size,
+            num_pages=num_pages, prefill_chunk=prefill_chunk,
+            prefill_mode=mode, prefill_budget=prefill_budget,
+        )
+
+    # warm every compile path the timed runs will hit
+    serve("chunked")
+    serve("packed")
+    chunked = serve("chunked")
+    packed = serve("packed")
+
+    by_id = {r.request_id: r for r in chunked.results}
+    for r in packed.results:
+        assert r.tokens.tolist() == by_id[r.request_id].tokens.tolist(), (
+            "packed prefill tokens diverged from the chunked path"
+        )
+
+    def prefill_tps(s):
+        return s.prefill_tokens / s.prefill_s if s.prefill_s > 0 else float("inf")
+
+    def ttft_p99(s):
+        return percentile([r.ttft_s for r in s.results], 99.0)
+
+    speedup = prefill_tps(packed) / prefill_tps(chunked)
+    ttft_ratio = ttft_p99(chunked) / max(ttft_p99(packed), 1e-12)
+    kernel_err = _kernel_max_err(np.random.default_rng(seed + 7))
+
+    emit("prefill/chunked", chunked.prefill_s / max(chunked.prefill_launches, 1),
+         f"prefill_tok_s={prefill_tps(chunked):.1f};"
+         f"launches={chunked.prefill_launches};"
+         f"ttft_p99_ms={ttft_p99(chunked)*1e3:.1f};"
+         f"compiles={sum(chunked.compile_stats.values())};speedup=1.00x")
+    emit("prefill/packed", packed.prefill_s / max(packed.prefill_launches, 1),
+         f"prefill_tok_s={prefill_tps(packed):.1f};"
+         f"launches={packed.prefill_launches};"
+         f"ttft_p99_ms={ttft_p99(packed)*1e3:.1f};"
+         f"budget={packed.prefill_budget};"
+         f"buffer_util={packed.prefill_tokens / max(packed.prefill_tokens + packed.prefill_padded_tokens, 1):.2f};"
+         f"compiles={sum(packed.compile_stats.values())};speedup={speedup:.2f}x")
+    emit("prefill/kernel_abs_err", kernel_err, "target=1e-3")
+    if speedup < 1.5:
+        print(f"# WARNING: packed prefill speedup {speedup:.2f}x below the "
+              f"1.5x target")
+    if kernel_err > 1e-3:
+        print(f"# WARNING: varlen kernel error {kernel_err:.2e} above 1e-3")
+
+    def block(s):
+        return {
+            "tokens_per_s": s.throughput_tps,
+            "wall_s": s.wall_s,
+            "prefill_s": s.prefill_s,
+            "prefill_tokens": s.prefill_tokens,
+            "prefill_padded_tokens": s.prefill_padded_tokens,
+            "prefill_tokens_per_s": prefill_tps(s),
+            "prefill_launches": s.prefill_launches,
+            "prefill_chunks": s.prefill_chunks,
+            "ttft_p99_ms": ttft_p99(s) * 1e3,
+            "ttft_mean_ms": float(np.mean([r.ttft_s for r in s.results]) * 1e3),
+            "compile_stats": s.compile_stats,
+        }
+
+    out = {
+        "bench": "prefill",
+        "smoke": smoke,
+        **bench_meta(seed),
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "num_slots": num_slots,
+        "num_pages": num_pages,
+        "prefill_chunk": prefill_chunk,
+        "prefill_budget": packed.prefill_budget,
+        "num_requests": num_requests,
+        "prompt_tokens": total_prompt_tokens,
+        "chunked": block(chunked),
+        "packed": block(packed),
+        "prefill_speedup": speedup,
+        "ttft_p99_ratio": ttft_ratio,
+        "kernel_abs_err_f32": kernel_err,
+    }
+    with open("BENCH_prefill.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (interpret-mode kernels, CPU)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (recorded in BENCH_prefill.json)")
+    args = ap.parse_args()
+    emit_header()
+    t0 = time.perf_counter()
+    run(smoke=args.smoke, seed=args.seed)
+    print(f"# bench_prefill done in {time.perf_counter() - t0:.1f}s")

@@ -1,0 +1,75 @@
+"""Compare a fresh ``BENCH_*.json`` against a committed baseline.
+
+The CI bench-smoke job runs the serving benchmarks and fails the build when
+a headline throughput metric regresses more than ``--max-regression``
+(default 25%) against the baseline committed under
+``benchmarks/baselines/`` — the perf trajectory is enforced, not just
+recorded.  Higher-is-better metrics only.
+
+    python -m benchmarks.check_regression BENCH_paged.json \
+        benchmarks/baselines/BENCH_paged_smoke.json \
+        --metric paged.tokens_per_s --max-regression 0.25
+
+Baselines are refreshed by re-running the benchmark with ``--smoke`` on the
+reference machine and committing the JSON (the recorded ``seed`` +
+``git_rev`` say exactly what produced them).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def lookup(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(f"metric {dotted!r} not found (missing {part!r})")
+        cur = cur[part]
+    return float(cur)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly emitted BENCH_*.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("--metric", action="append", required=True,
+                    help="dotted path of a higher-is-better metric "
+                         "(repeatable), e.g. paged.tokens_per_s")
+    ap.add_argument("--max-regression", type=float,
+                    default=float(os.environ.get("BENCH_MAX_REGRESSION", 0.25)),
+                    help="allowed fractional drop vs baseline (default 0.25)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    failed = False
+    for metric in args.metric:
+        c, b = lookup(cur, metric), lookup(base, metric)
+        if b <= 0:
+            print(f"[bench-check] {metric}: baseline {b} <= 0, skipping")
+            continue
+        ratio = c / b
+        status = "OK"
+        if ratio < 1.0 - args.max_regression:
+            status = "REGRESSION"
+            failed = True
+        print(f"[bench-check] {metric}: current={c:.2f} baseline={b:.2f} "
+              f"ratio={ratio:.2f} (floor {1.0 - args.max_regression:.2f}) "
+              f"[{status}]")
+    if failed:
+        print(f"[bench-check] FAILED: regression beyond "
+              f"{args.max_regression:.0%} vs {args.baseline} "
+              f"(baseline rev {base.get('git_rev', '?')}, "
+              f"seed {base.get('seed', '?')})")
+        return 1
+    print("[bench-check] all metrics within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,11 +5,26 @@ contract) and may emit extra derived columns in the third field.
 """
 from __future__ import annotations
 
+import subprocess
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import numpy as np
+
+
+def bench_meta(seed: int) -> Dict[str, object]:
+    """Reproducibility block for every ``BENCH_*.json`` artifact: the RNG
+    seed the run used plus the git revision it ran at, so perf trajectories
+    can be compared run-to-run (and regressions bisected)."""
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        rev = "unknown"
+    return {"seed": int(seed), "git_rev": rev}
 
 
 def time_call(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:

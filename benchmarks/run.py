@@ -18,6 +18,7 @@ BENCHES = [
     ("fig8", "benchmarks.bench_fig8_coldstart"),
     ("scheduler", "benchmarks.bench_scheduler"),
     ("paged", "benchmarks.bench_paged"),
+    ("prefill", "benchmarks.bench_prefill"),
 ]
 
 

@@ -138,6 +138,57 @@ def page_occupancy_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def prefill_saturation_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize the packed-prefill pipeline's saturation trace series.
+
+    The paged engine publishes one ``prefill:packed`` event per packed
+    varlen launch, tagged with ``tokens`` (real prompt tokens), ``padding``
+    (buffer slots spent on chunk/tail pad), ``chunks`` (coalesced spans),
+    ``buffer`` (packed-buffer size) and ``budget`` (the per-boundary token
+    knob).  This aggregates them into the prefill block of the analysis
+    workflow: buffer utilization tells whether prompt traffic saturates the
+    packed launches, chunks/launch how much cross-request coalescing the
+    mix allows."""
+    tokens: List[float] = []
+    chunks: List[float] = []
+    pad = 0.0
+    buffer = 0.0
+    total_s = 0.0
+    for s in spans:
+        if s.name != "prefill:packed":
+            continue
+        tokens.append(float(s.tags.get("tokens", 0)))
+        chunks.append(float(s.tags.get("chunks", 0)))
+        pad += float(s.tags.get("padding", 0))
+        buffer = max(buffer, float(s.tags.get("buffer", 0)))
+        total_s += s.duration
+    if not tokens:
+        return {}
+    cap = max(buffer, 1.0) * len(tokens)
+    total = sum(tokens)
+    return {
+        "launches": float(len(tokens)),
+        "buffer_tokens": buffer,
+        "prefill_tokens": total,
+        "padded_tokens": pad,
+        "mean_chunks_per_launch": sum(chunks) / len(chunks),
+        "mean_buffer_utilization": total / cap,
+        "peak_buffer_utilization": max(tokens) / max(buffer, 1.0),
+        "pad_fraction": pad / max(total + pad, 1.0),
+        "prefill_tokens_per_s": total / total_s if total_s > 0 else 0.0,
+    }
+
+
+def prefill_saturation_section(spans: Iterable[Span]) -> str:
+    """Render the prefill-saturation block as a report section; empty string
+    when no packed-prefill run was traced."""
+    summary = prefill_saturation_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def throughput_scalability(
     per_batch: Dict[int, float]
 ) -> Dict[int, float]:

@@ -284,6 +284,186 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Packed varlen prefill (many prompt chunks, one launch, paged context)
+# ---------------------------------------------------------------------------
+def varlen_prefill_jnp(
+    q: jnp.ndarray,            # (T, h, d)   packed queries
+    k: jnp.ndarray,            # (T, kvh, d) packed chunk K
+    v: jnp.ndarray,            # (T, kvh, d)
+    k_pages: jnp.ndarray,      # (num_pages, page_size, kvh, d)
+    v_pages: jnp.ndarray,
+    cu_seqlens: jnp.ndarray,   # (C+1,) int32
+    chunk_lens: jnp.ndarray,   # (C,) int32
+    chunk_pos0: jnp.ndarray,   # (C,) int32 (page-aligned)
+    page_tables: jnp.ndarray,  # (C, max_pages) int32
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    pages_bound: Optional[int] = None,
+) -> jnp.ndarray:
+    """Masked one-shot packed prefill (jit-friendly, any backend).
+
+    Scores are the concatenation of a per-token gathered context block
+    (``ctx_bound`` pages of the owning chunk's request) and the packed
+    buffer itself, masked so a token sees exactly its request's committed
+    positions plus the causal prefix of its own chunk.  Rows outside any
+    chunk's real tokens come back zero (a manual safe softmax — not
+    ``jax.nn.softmax``, which would go uniform on fully-masked rows).
+    """
+    T, h, d = q.shape
+    page_size, kvh = k_pages.shape[1], k_pages.shape[2]
+    C, max_pages = page_tables.shape
+    rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    ctx_pages = max_pages if pages_bound is None else min(pages_bound, max_pages)
+    ctx_pages = max(ctx_pages, 1)
+    Lc = ctx_pages * page_size
+
+    cu = jnp.asarray(cu_seqlens, jnp.int32)
+    lens = jnp.asarray(chunk_lens, jnp.int32)
+    pos0 = jnp.asarray(chunk_pos0, jnp.int32)
+    tok = jnp.arange(T, dtype=jnp.int32)
+    # token -> owning chunk (trailing buffer pad maps to the last chunk and
+    # is masked out by its real length)
+    tc = jnp.clip(
+        jnp.searchsorted(cu[:-1], tok, side="right").astype(jnp.int32) - 1,
+        0, C - 1,
+    )
+    off = tok - cu[tc]                       # chunk-local offset
+    q_valid = off < lens[tc]
+    q_pos = pos0[tc] + off                   # absolute positions
+
+    qg = q.reshape(T, kvh, rep, d)
+    # context score/value gathers: when chunk spans are page-aligned (the
+    # packed layout contract, enforced by the Pallas kernel) the gather runs
+    # per page-sized BLOCK — a ``page_size``× smaller index set than per
+    # token.  A block straddling two chunks would gather the wrong request's
+    # pages, so the fast path additionally requires page-aligned
+    # ``cu_seqlens``: checked when the boundaries are concrete (free-form
+    # test inputs fall back to the exact per-token gather); under jit the
+    # boundaries are traced and the engine's packing contract guarantees
+    # alignment.
+    blocked = T % page_size == 0
+    if blocked:
+        try:
+            import numpy as _np
+
+            blocked = bool((_np.asarray(cu_seqlens) % page_size == 0).all())
+        except Exception:  # traced under jit: trust the packing contract
+            pass
+    if blocked:
+        nqb = T // page_size
+        blk_chunk = jnp.clip(
+            jnp.searchsorted(
+                cu[:-1] // page_size, jnp.arange(nqb, dtype=jnp.int32),
+                side="right",
+            ).astype(jnp.int32) - 1,
+            0, C - 1,
+        )
+        kctx = k_pages[page_tables[blk_chunk][:, :ctx_pages]].reshape(
+            nqb, Lc, kvh, d
+        )
+        vctx = v_pages[page_tables[blk_chunk][:, :ctx_pages]].reshape(
+            nqb, Lc, kvh, d
+        )
+        qb = qg.reshape(nqb, page_size, kvh, rep, d)
+        s_ctx = (
+            jnp.einsum(
+                "nbgrd,nlgd->nbgrl", qb, kctx,
+                preferred_element_type=jnp.float32,
+            ) * scale
+        ).reshape(T, kvh, rep, Lc)
+    else:
+        kctx_c = k_pages[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh, d)
+        kctx = kctx_c[tc]
+        vctx = v_pages[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh, d)[tc]
+        s_ctx = jnp.einsum(
+            "tgrd,tlgd->tgrl", qg, kctx, preferred_element_type=jnp.float32
+        ) * scale                            # (T, kvh, rep, Lc)
+    s_in = jnp.einsum(
+        "tgrd,ugd->tgru", qg, k, preferred_element_type=jnp.float32
+    ) * scale                                # (T, kvh, rep, T)
+    s_all = _soft_cap(jnp.concatenate([s_ctx, s_in], axis=-1), softcap)
+
+    ctx_pos = jnp.arange(Lc, dtype=jnp.int32)
+    m_ctx = q_valid[:, None] & (ctx_pos[None, :] < pos0[tc][:, None])
+    if window is not None:
+        m_ctx &= (q_pos[:, None] - ctx_pos[None, :]) < window
+    m_in = (
+        q_valid[:, None]
+        & q_valid[None, :]                   # keys must be real tokens too
+        & (tc[:, None] == tc[None, :])       # no cross-request leakage
+        & (q_pos[:, None] >= q_pos[None, :])
+    )
+    if window is not None:
+        m_in &= (q_pos[:, None] - q_pos[None, :]) < window
+    mask = jnp.concatenate(
+        [m_ctx[:, None, None, :], m_in[:, None, None, :]], axis=-1
+    )                                         # (T, 1, 1, Lc+T)
+    s_all = jnp.where(mask, s_all, NEG_INF)
+    m = jnp.max(s_all, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s_all - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
+    p = p / l
+    p_ctx = p[..., :Lc].astype(vctx.dtype)
+    if blocked:
+        out_ctx = jnp.einsum(
+            "nbgrl,nlgd->nbgrd",
+            p_ctx.reshape(nqb, page_size, kvh, rep, Lc), vctx,
+            preferred_element_type=jnp.float32,
+        ).reshape(T, kvh, rep, d)
+    else:
+        out_ctx = jnp.einsum(
+            "tgrl,tlgd->tgrd", p_ctx, vctx,
+            preferred_element_type=jnp.float32,
+        )
+    out = out_ctx + jnp.einsum(
+        "tgru,ugd->tgrd", p[..., Lc:].astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(T, h, d).astype(q.dtype)
+
+
+def varlen_prefill(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    cu_seqlens: jnp.ndarray,
+    chunk_lens: jnp.ndarray,
+    chunk_pos0: jnp.ndarray,
+    page_tables: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+    pages_bound: Optional[int] = None,
+) -> jnp.ndarray:
+    """Packed ragged-prefill attention: chunks from many requests share one
+    token-packed buffer; each chunk attends its request's committed pages
+    plus the causal prefix of its own tokens.  ``pages_bound`` statically
+    bounds context pages per chunk (host-known, bucketed)."""
+    if backend == "pallas":
+        from . import varlen_prefill as vp  # lazy: pallas import cost
+
+        return vp.varlen_prefill(
+            q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
+            page_tables, softcap=softcap, window=window, scale=scale,
+            pages_bound=pages_bound,
+        )
+    # ref and flash share the masked one-shot computation (jit-friendly;
+    # ref.varlen_prefill is the host-loop oracle used by tests)
+    return varlen_prefill_jnp(
+        q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
+        page_tables, softcap=softcap, window=window, scale=scale,
+        pages_bound=pages_bound,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Paged decode attention (single new token vs a paged KV pool)
 # ---------------------------------------------------------------------------
 def paged_attention(

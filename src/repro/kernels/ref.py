@@ -122,6 +122,63 @@ def paged_attention(
     )
 
 
+def varlen_prefill(
+    q: jnp.ndarray,           # (T, h, d)   token-packed queries (many chunks)
+    k: jnp.ndarray,           # (T, kvh, d) packed K for the chunks' own tokens
+    v: jnp.ndarray,           # (T, kvh, d)
+    k_pages: jnp.ndarray,     # (num_pages, page_size, kvh, d) global page pool
+    v_pages: jnp.ndarray,
+    cu_seqlens,               # (C+1,) int: chunk c occupies packed rows
+                              #   [cu_seqlens[c], cu_seqlens[c+1])
+    chunk_lens,               # (C,) int: real (unpadded) tokens per chunk
+    chunk_pos0,               # (C,) int: absolute position of each chunk's
+                              #   first token (page-aligned)
+    page_tables,              # (C, max_pages) int32: the owning request's pages
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Packed ragged-prefill oracle: per chunk, gather the request's
+    committed context pages back into a contiguous cache and run the dense
+    causal attention oracle over ``context + chunk``.  Rows outside any
+    chunk's real tokens (chunk pad and buffer tail pad) come back zero.
+    Host-side loop over chunks — obviously correct, test/benchmark only.
+    """
+    import numpy as np
+
+    page_size = int(k_pages.shape[1])
+    cu = np.asarray(cu_seqlens, np.int64)
+    lens = np.asarray(chunk_lens, np.int64)
+    pos0 = np.asarray(chunk_pos0, np.int64)
+    tables = np.asarray(page_tables, np.int64)
+    out = jnp.zeros_like(q)
+    for c in range(len(lens)):
+        n = int(lens[c])
+        if n == 0:
+            continue
+        s0 = int(cu[c])
+        ctx = int(pos0[c])
+        qc, kc, vc = q[s0 : s0 + n], k[s0 : s0 + n], v[s0 : s0 + n]
+        if ctx:
+            n_ctx = (ctx + page_size - 1) // page_size
+            kctx = k_pages[tables[c, :n_ctx]].reshape(
+                n_ctx * page_size, *k_pages.shape[2:]
+            )[:ctx]
+            vctx = v_pages[tables[c, :n_ctx]].reshape(
+                n_ctx * page_size, *v_pages.shape[2:]
+            )[:ctx]
+            kc = jnp.concatenate([kctx.astype(kc.dtype), kc], axis=0)
+            vc = jnp.concatenate([vctx.astype(vc.dtype), vc], axis=0)
+        o = attention(
+            qc[None], kc[None], vc[None],
+            causal=True, window=window, softcap=softcap, q_offset=ctx,
+            scale=scale,
+        )[0]
+        out = out.at[s0 : s0 + n].set(o)
+    return out
+
+
 def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     """RMSNorm oracle: x * w / sqrt(mean(x^2) + eps), stats in fp32."""
     xf = x.astype(jnp.float32)

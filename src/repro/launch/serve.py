@@ -11,12 +11,15 @@ scheduler.  Three executor modes (``--engine``):
                     into free dense KV slots at decode-step boundaries;
                     reports per-request TTFT and tokens/sec.
 * ``paged``       — paged KV cache: a global ``--page-size``-token page pool
-                    (``--num-pages``) with per-request page tables, chunked
-                    prefill (``--prefill-chunk``) interleaved at decode-step
-                    boundaries, admission keyed on free pages, and youngest-
+                    (``--num-pages``) with per-request page tables, prefill
+                    interleaved at decode-step boundaries (``--prefill-mode
+                    packed`` coalesces every admissible chunk into one
+                    token-packed varlen launch of ``--prefill-budget``
+                    tokens; ``chunked`` is the legacy one-chunk-per-slot
+                    path), admission keyed on free pages, and youngest-
                     first preemption when the pool is exhausted.  Emits
-                    ``pages:occupancy`` events and a page-occupancy report
-                    section.
+                    ``pages:occupancy`` + ``prefill:packed`` events and
+                    page-occupancy / prefill-saturation report sections.
 
 Latency/throughput metrics and the scheduler's queue/occupancy series flow
 into the evaluation database.
@@ -33,7 +36,11 @@ import jax
 import numpy as np
 
 from ..configs import get_config
-from ..core.analysis import latency_summary, page_occupancy_section
+from ..core.analysis import (
+    latency_summary,
+    page_occupancy_section,
+    prefill_saturation_section,
+)
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.tracing import Tracer, TracingServer
 from ..core.workload import PoissonLoad
@@ -133,6 +140,8 @@ def _serve_paged(engine, cfg, args, load, prompts):
         num_pages=args.num_pages or None,
         prefill_chunk=args.prefill_chunk or None,
         overcommit=args.overcommit,
+        prefill_mode=args.prefill_mode,
+        prefill_budget=args.prefill_budget or None,
         tracer=tracer,
     )
     for r in stats.results:
@@ -144,6 +153,11 @@ def _serve_paged(engine, cfg, args, load, prompts):
     section = page_occupancy_section(server.timeline("serve-paged"))
     if section:
         print("[serve] page occupancy:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    section = prefill_saturation_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] prefill saturation:")
         for line in section.splitlines():
             print(f"[serve]   {line}")
     latencies = [r.latency_s for r in stats.results]
@@ -163,7 +177,12 @@ def _serve_paged(engine, cfg, args, load, prompts):
             "peak_pages_in_use": float(stats.peak_pages_in_use),
             "preemptions": float(stats.preemptions),
             "prefill_chunks": float(stats.prefill_chunks),
+            "prefill_launches": float(stats.prefill_launches),
+            "prefill_s": stats.prefill_s,
+            "prefill_tokens": float(stats.prefill_tokens),
+            "prefill_padded_tokens": float(stats.prefill_padded_tokens),
             **{f"compiles_{k}": float(v) for k, v in stats.compile_stats.items()},
+            **{f"budget_{k}": v for k, v in stats.prefill_budget_stats.items()},
         }
     )
     return summary, stats.total_tokens, stats.wall_s
@@ -191,6 +210,13 @@ def main(argv=None) -> int:
                     help="global KV page pool size (0 = num_slots * max_pages)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill tokens per decode boundary (0 = 4 pages)")
+    ap.add_argument("--prefill-mode", default="packed",
+                    choices=["packed", "chunked"],
+                    help="packed: one token-packed varlen launch per boundary "
+                         "(one compile); chunked: legacy per-slot chunks")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="packed-prefill tokens per decode boundary "
+                         "(0 = 4x prefill chunk); bounds decode latency")
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission overcommit factor (>1 admits past "
                          "worst-case page commitment; preemption is the valve)")

@@ -29,6 +29,7 @@ from .modules import (
     attn_decode_paged,
     attn_defs,
     attn_full,
+    attn_prefill_packed,
     attn_prefill_paged,
     causal_conv1d,
     cross_attn_decode,
@@ -783,6 +784,66 @@ class DecoderLM(BaseModel):
         new_cache.update(stacks)
         last = jnp.asarray(last_index, jnp.int32)
         logits = self._logits(params, x[:, last][:, None, :])[:, 0]
+        return logits, new_cache
+
+    def prefill_packed(self, params, batch, cache, pages_bound=None):
+        """One packed varlen-prefill launch: process prompt chunks from MANY
+        requests in a single token-packed ``(1, T)`` buffer, each chunk
+        attending its request's already-committed pages (via the per-chunk
+        page-table rows) plus the causal prefix of its own tokens, with the
+        packed K/V scattered straight into the paged pool.
+
+        ``batch`` holds the packed tokens plus the packing metadata of
+        :func:`repro.models.modules.attn_prefill_packed`, and ``last_idx``
+        (C,) — the packed row of each chunk's last real token.  Returns
+        (logits (C, V) gathered at ``last_idx``, new cache); only rows of
+        chunks that complete their prompt this launch are meaningful (their
+        argmax is the request's first generated token).
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._interleaved:
+            raise NotImplementedError(
+                "packed paged prefill supports dense/moe (non-interleaved) only"
+            )
+        tokens = batch["tokens"]
+        b, T = tokens.shape
+        meta = {
+            k: batch[k]
+            for k in ("tok_pos", "dst_page", "dst_off", "cu_seqlens",
+                      "chunk_lens", "chunk_pos0", "page_tables")
+        }
+        x = self._embed_tokens(params, tokens)
+        x = shard_act(x, ("batch", "seq", "act_embed"))
+        windows = self._layer_windows(T)
+        xs = (
+            (params["blocks"], windows)
+            if windows is not None
+            else (params["blocks"],)
+        )
+
+        def body(x, xs_l, caches, li):
+            blk = self._cast(xs_l[0])
+            window = xs_l[1] if len(xs_l) > 1 else None
+            h = self._norm(x, blk["ln1"])
+            a, kp, vp = attn_prefill_packed(
+                blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                meta, cfg, backend=self.backend, window=window,
+                pages_bound=pages_bound,
+            )
+            if cfg.post_norms:
+                a = self._norm(a, blk["post_attn_norm"])
+            x = x + a
+            return self._block_ffn(blk, x), {"k_pages": kp, "v_pages": vp}
+
+        x, stacks = _scan_cached(
+            body, x, xs,
+            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
+            cfg.num_layers,
+        )
+        new_cache = dict(cache)
+        new_cache.update(stacks)
+        last = jnp.asarray(batch["last_idx"], jnp.int32)
+        logits = self._logits(params, x[0, last][:, None, :])[:, 0]
         return logits, new_cache
 
     def _hybrid_decode(self, params, x, cache, uniform_pos=True):

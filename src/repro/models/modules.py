@@ -304,6 +304,55 @@ def attn_prefill_paged(
     return y, k_pages, v_pages
 
 
+def attn_prefill_packed(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                       # (1, T, D) — token-packed chunks
+    k_pages: jnp.ndarray,                 # (num_pages, page_size, kv, dh)
+    v_pages: jnp.ndarray,
+    meta: Dict[str, jnp.ndarray],         # packing metadata (see below)
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    window=None,
+    pages_bound: Optional[int] = None,
+):
+    """One packed varlen-prefill step: chunks from many requests share the
+    packed buffer; each attends its request's committed pages plus the
+    causal prefix of its own tokens, and the packed K/V are scattered
+    straight into the paged pool (the per-row append path, fused over every
+    chunk at once).  ``meta`` carries the packing layout:
+
+    * ``tok_pos``     (T,)   absolute position per packed token
+    * ``dst_page``/``dst_off`` (T,) physical K/V destination per token
+      (buffer-tail pads point at the scratch page)
+    * ``cu_seqlens``  (C+1,) packed chunk boundaries (page-aligned spans)
+    * ``chunk_lens``  (C,)   real tokens per chunk
+    * ``chunk_pos0``  (C,)   absolute chunk starts (page-aligned)
+    * ``page_tables`` (C, max_pages) the owning requests' pages
+
+    Returns (y, k_pages, v_pages).
+    """
+    positions = meta["tok_pos"][None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, backend)
+    out = ops.varlen_prefill(
+        q[0], k[0], v[0], k_pages, v_pages,
+        meta["cu_seqlens"], meta["chunk_lens"], meta["chunk_pos0"],
+        meta["page_tables"],
+        softcap=cfg.attn_softcap,
+        window=window,
+        backend=backend,
+        pages_bound=pages_bound,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out[None], p["wo"])
+    k_pages = k_pages.at[meta["dst_page"], meta["dst_off"]].set(
+        k[0].astype(k_pages.dtype)
+    )
+    v_pages = v_pages.at[meta["dst_page"], meta["dst_off"]].set(
+        v[0].astype(v_pages.dtype)
+    )
+    return y, k_pages, v_pages
+
+
 def cross_attn_decode(
     p: Dict[str, jnp.ndarray],
     x1: jnp.ndarray,                      # (b, 1, D)

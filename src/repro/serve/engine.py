@@ -14,12 +14,20 @@ prefill/decode jits:
   (``uniform_pos=False``) because slots sit at different sequence positions.
 * ``serve_paged``       — paged KV cache: a global pool of ``page_size``-
   token pages plus per-request page tables; admission is keyed on free
-  pages, prompts prefill in fixed-size chunks interleaved at decode-step
-  boundaries, and the pool preempts the youngest request when pages run
-  out.  HBM scales with live tokens instead of ``num_slots * max_seq``.
+  pages, prompts prefill interleaved at decode-step boundaries, and the
+  pool preempts the youngest request when pages run out.  HBM scales with
+  live tokens instead of ``num_slots * max_seq``.  Two prefill pipelines
+  (``prefill_mode``): ``packed`` (default) coalesces every admissible
+  prompt chunk into ONE token-packed varlen launch per boundary — a fixed
+  packed-buffer size (``prefill_budget`` tokens, the knob that bounds
+  decode latency) writing straight into the page pool, one compile
+  regardless of how prompt lengths mix; ``chunked`` is the legacy
+  one-chunk-per-slot-per-boundary path (one jit variant per chunk
+  length × offset).
 
-Two shape disciplines keep XLA compile counts bounded (tracked in
-``compile_stats``): prompts are RIGHT-padded to power-of-two length buckets
+Two shape disciplines keep XLA compile counts bounded (tracked per engine
+instance in ``compile_stats``; each ``serve_paged`` run reports only its
+own delta): prompts are RIGHT-padded to power-of-two length buckets
 (floored at ``page_size``) — causal attention never reads trailing pads, so
 bucketing is numerically exact for attention families — and decode passes a
 bucketed static ``kv_bound`` so attention streams only the live prefix of
@@ -40,7 +48,7 @@ import numpy as np
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
 from .page_table import PagePool, PageTable, pages_needed
-from .scheduler import PagedSlotPool, SlotPool
+from .scheduler import PagedSlotPool, PrefillBudget, SlotPool
 
 
 def bucket_pow2(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
@@ -112,8 +120,16 @@ class PagedStats:
     mean_pages_in_use: float
     peak_pages_in_use: int
     preemptions: int
-    prefill_chunks: int         # chunked-prefill steps executed
+    prefill_chunks: int         # prompt chunks prefilled (spans in packed mode)
     compile_stats: Dict[str, int] = field(default_factory=dict)
+    # -- prefill pipeline (packed varlen launches) --------------------------
+    prefill_mode: str = "packed"
+    prefill_launches: int = 0   # packed launches (== prefill_chunks if chunked)
+    prefill_s: float = 0.0      # wall time spent inside prefill calls
+    prefill_tokens: int = 0     # real prompt tokens prefilled
+    prefill_padded_tokens: int = 0  # packed-buffer slots spent on padding
+    prefill_budget: int = 0     # packed-buffer tokens per boundary (0 = chunked)
+    prefill_budget_stats: Dict[str, float] = field(default_factory=dict)
 
 
 class ServingEngine:
@@ -141,6 +157,7 @@ class ServingEngine:
         self._decode_fns: Dict[Tuple[bool, Optional[int]], Callable] = {}
         self._paged_decode_fns: Dict[int, Callable] = {}
         self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
+        self._packed_prefill_fns: Dict[Tuple[int, int, int, int], Callable] = {}
         self._slot_writers: Dict[int, Callable] = {}
         self._prefill_shapes: set = set()
         fam = getattr(model.cfg, "family", "")
@@ -151,13 +168,26 @@ class ServingEngine:
 
     # -- compile accounting --------------------------------------------------
     def compile_stats(self) -> Dict[str, int]:
-        """Distinct jitted variants per path (the engine's compile budget)."""
+        """Distinct jitted variants per path (the engine's compile budget).
+
+        Counts are per-ENGINE-INSTANCE (every variant cache lives on
+        ``self``), cumulative over the instance's lifetime; engines built in
+        the same process never see each other's counts.  Per-run reporting
+        (``PagedStats.compile_stats``) uses :meth:`_compile_delta` so a run's
+        numbers aren't inflated by warmups or other serve modes that shared
+        the instance.
+        """
         return {
             "prefill": len(self._prefill_shapes),
             "decode": len(self._decode_fns),
             "paged_prefill": len(self._paged_prefill_fns),
+            "packed_prefill": len(self._packed_prefill_fns),
             "paged_decode": len(self._paged_decode_fns),
         }
+
+    def _compile_delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        """Jit variants added since a ``compile_stats()`` snapshot."""
+        return {k: v - before.get(k, 0) for k, v in self.compile_stats().items()}
 
     def _decode_step_fn(self, uniform: bool, kv_bound: Optional[int]) -> Callable:
         key = (uniform, kv_bound)
@@ -439,6 +469,24 @@ class ServingEngine:
             self._paged_prefill_fns[key] = fn
         return fn
 
+    def _packed_prefill_fn(self, t_pack: int, num_chunks: int,
+                           max_pages: int, pages_bound: int) -> Callable:
+        """One jit variant per (packed length, chunk rows, table width,
+        context-pages bound) — i.e. ONE compile per serve configuration for
+        every way prompt lengths mix inside the buffer, times a logarithmic
+        handful of pow2 ``pages_bound`` buckets (the bound keeps a launch
+        whose chunks have little committed context from paying the
+        full-table context gather)."""
+        key = (t_pack, num_chunks, max_pages, pages_bound)
+        fn = self._packed_prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                partial(self.model.prefill_packed, pages_bound=pages_bound),
+                donate_argnums=(2,),
+            )
+            self._packed_prefill_fns[key] = fn
+        return fn
+
     def serve_paged(
         self,
         requests: List[ServeRequest],
@@ -447,6 +495,8 @@ class ServingEngine:
         num_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         overcommit: float = 1.0,
+        prefill_mode: str = "packed",
+        prefill_budget: Optional[int] = None,
         clock: Callable[[], float] = time.perf_counter,
         tracer=None,
     ) -> PagedStats:
@@ -462,23 +512,42 @@ class ServingEngine:
         ``overcommit > 1`` admits more aggressively (live usage is usually
         far below worst case); if the gamble loses and a decode step finds
         the pool dry, the youngest request is preempted (pages freed,
-        request requeued for recompute-style restart).  Prompts prefill in
-        ``prefill_chunk``-token chunks, one chunk per decode-step boundary,
-        so a long prompt no longer stalls every decoding slot behind a
-        monolithic batch-1 prefill.  Greedy tokens are identical to
-        ``serve_continuous``.
+        request requeued for recompute-style restart).
+
+        Prefill interleaves with decode at step boundaries in one of two
+        pipelines.  ``prefill_mode="packed"`` (default) coalesces every
+        prefilling slot's next span into ONE token-packed varlen launch of
+        ``prefill_budget`` tokens per boundary (oldest request first): no
+        pow2 padding, the kernel writes K/V straight into the page pool,
+        and one jit variant serves every length mix — ``prefill_budget`` is
+        the knob bounding how much prefill work may delay the decode step.
+        ``prefill_mode="chunked"`` is the legacy path: one
+        ``prefill_chunk``-token batch-1 chunk per slot per boundary, one
+        jit variant per chunk length × offset.  Greedy tokens are identical
+        to ``serve_continuous`` in both modes.
         """
+        if prefill_mode not in ("packed", "chunked"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if not requests:
             return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
-                              0.0, 0, 0, 0, self.compile_stats())
+                              0.0, 0, 0, 0, {}, prefill_mode=prefill_mode)
         if overcommit <= 0:
             raise ValueError("overcommit must be > 0")
+        compiles_before = self.compile_stats()
         page_size = page_size or self.page_size
         num_slots = num_slots or self.max_batch
         prefill_chunk = prefill_chunk or 4 * page_size
         prefill_chunk = max(
             page_size, (prefill_chunk // page_size) * page_size
         )  # chunk starts must stay page-aligned
+        packed = prefill_mode == "packed"
+        # packed-buffer size: the per-boundary prefill token budget, snapped
+        # to a page multiple (chunk spans inside the buffer are page-aligned)
+        t_pack = max(
+            page_size,
+            ((prefill_budget or 4 * prefill_chunk) // page_size) * page_size,
+        )
+        ledger = PrefillBudget(t_pack) if packed else None
         max_pages_per_seq = pages_needed(self.max_seq, page_size)
         if num_pages is None:
             num_pages = num_slots * max_pages_per_seq + 1
@@ -518,6 +587,10 @@ class ServingEngine:
         pages_sum = 0.0
         samples = 0
         chunks_done = 0
+        prefill_launches = 0
+        prefill_s = 0.0
+        prefill_tokens = 0
+        prefill_padded = 0
 
         def release_slot(slot: int, preempted: bool = False):
             req = slots.release_paged(slot, table.clear(slot), preempted=preempted)
@@ -586,40 +659,162 @@ class ServingEngine:
                 admit_seq += 1
                 req._admit_step = step              # type: ignore[attr-defined]
                 progressed = True
-            # 3) chunked prefill: ONE chunk per admitting slot per boundary,
-            #    so prefill work interleaves with decode instead of stalling it
-            for slot in list(prefilling):
-                req = slots.active[slot]
-                start = prefilling[slot]
-                c = min(prefill_chunk, len(req.prompt) - start)
-                # bucket the chunk shape to a page multiple so ragged prompt
-                # tails don't compile one jit variant per distinct residual;
-                # pad K/V lands inside the prompt's already-allocated pages
-                # and stays length-masked until decode overwrites it
-                c_pad = min(prefill_chunk, pages_needed(c, page_size) * page_size)
-                chunk = np.zeros((1, c_pad), np.int32)
-                chunk[0, :c] = req.prompt[start : start + c]
-                fn = self._paged_prefill_fn(c_pad, start)
-                logits, cache = fn(
-                    self.params,
-                    jnp.asarray(chunk),
-                    cache,
-                    jnp.asarray(table.table[slot]),
-                    jnp.int32(c - 1),
-                )
-                chunks_done += 1
-                start += c
-                lengths[slot] = start
-                progressed = True
-                if start >= len(req.prompt):
-                    del prefilling[slot]
-                    tok0 = int(jnp.argmax(logits[0]))
-                    nxt[slot] = tok0
-                    slot_tokens[slot] = [tok0]
-                    decoding.add(slot)
-                    req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
-                else:
-                    prefilling[slot] = start
+            # 3) prefill at the boundary, interleaved with decode.
+            #    packed: coalesce every prefilling slot's next span into ONE
+            #    token-packed varlen launch (oldest first, capped by the
+            #    per-boundary token budget); chunked: one batch-1 chunk per
+            #    slot (legacy path, one jit variant per length × offset)
+            if prefilling and packed:
+                t0p = clock()
+                ledger.begin_step()
+                spans: List[Tuple[int, int, int, int]] = []
+                used = 0
+                for slot in sorted(prefilling, key=lambda s: admit_order[s]):
+                    req = slots.active[slot]
+                    rem = len(req.prompt) - prefilling[slot]
+                    if used >= t_pack:
+                        ledger.defer(rem)   # left waiting: starvation signal
+                        continue
+                    # the buffer cap (padded spans) is never looser than the
+                    # ledger (real tokens), so grants keep spans page-aligned
+                    take = ledger.grant(min(rem, t_pack - used))
+                    if take <= 0:
+                        ledger.defer(rem)
+                        continue
+                    if take < rem:
+                        ledger.defer(rem - take)
+                    span = pages_needed(take, page_size) * page_size
+                    spans.append((slot, prefilling[slot], take, span))
+                    used += span
+                if spans:
+                    num_chunks = num_slots
+                    tokens_p = np.zeros((1, t_pack), np.int32)
+                    tok_pos = np.zeros((t_pack,), np.int32)
+                    # buffer-tail pads scatter their K/V into the scratch
+                    # page; offsets cycle so writes spread over its rows
+                    dst_page = np.zeros((t_pack,), np.int32)
+                    dst_off = (np.arange(t_pack) % page_size).astype(np.int32)
+                    cu = np.zeros((num_chunks + 1,), np.int32)
+                    lens_c = np.zeros((num_chunks,), np.int32)
+                    pos0_c = np.zeros((num_chunks,), np.int32)
+                    last_idx = np.zeros((num_chunks,), np.int32)
+                    tables_c = np.zeros((num_chunks, max_pages_per_seq), np.int32)
+                    off = 0
+                    for ci, (slot, start, take, span) in enumerate(spans):
+                        req = slots.active[slot]
+                        tokens_p[0, off : off + take] = req.prompt[
+                            start : start + take
+                        ]
+                        pos = start + np.arange(span, dtype=np.int32)
+                        tok_pos[off : off + span] = pos
+                        row = table.table[slot]
+                        # chunk-pad K/V lands inside the prompt's already-
+                        # allocated pages (length-masked until overwritten),
+                        # exactly like the chunked path's padded tail
+                        dst_page[off : off + span] = row[pos // page_size]
+                        dst_off[off : off + span] = pos % page_size
+                        cu[ci + 1] = off + span
+                        lens_c[ci] = take
+                        pos0_c[ci] = start
+                        last_idx[ci] = off + take - 1
+                        tables_c[ci] = row
+                        off += span
+                    cu[len(spans) + 1 :] = off
+                    # static bound on committed-context pages this launch,
+                    # pow2-bucketed so early (low-context) launches don't
+                    # stream/gather the full page-table width
+                    ctx_pages = max(
+                        pages_needed(start, page_size)
+                        for _, start, _, _ in spans
+                    )
+                    bound = bucket_pow2(max(ctx_pages, 1),
+                                        cap=max_pages_per_seq)
+                    fn = self._packed_prefill_fn(
+                        t_pack, num_chunks, max_pages_per_seq, bound
+                    )
+                    batch_p = {
+                        "tokens": jnp.asarray(tokens_p),
+                        "tok_pos": jnp.asarray(tok_pos),
+                        "dst_page": jnp.asarray(dst_page),
+                        "dst_off": jnp.asarray(dst_off),
+                        "cu_seqlens": jnp.asarray(cu),
+                        "chunk_lens": jnp.asarray(lens_c),
+                        "chunk_pos0": jnp.asarray(pos0_c),
+                        "page_tables": jnp.asarray(tables_c),
+                        "last_idx": jnp.asarray(last_idx),
+                    }
+                    logits, cache = fn(self.params, batch_p, cache)
+                    jax.block_until_ready(logits)
+                    for ci, (slot, start, take, span) in enumerate(spans):
+                        req = slots.active[slot]
+                        new_start = start + take
+                        lengths[slot] = new_start
+                        chunks_done += 1
+                        if new_start >= len(req.prompt):
+                            del prefilling[slot]
+                            tok0 = int(jnp.argmax(logits[ci]))
+                            nxt[slot] = tok0
+                            slot_tokens[slot] = [tok0]
+                            decoding.add(slot)
+                            req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                        else:
+                            prefilling[slot] = new_start
+                    real = sum(s[2] for s in spans)
+                    prefill_launches += 1
+                    prefill_tokens += real
+                    prefill_padded += t_pack - real
+                    now = clock()
+                    prefill_s += now - t0p
+                    if tracer is not None:
+                        tracer.event(
+                            "prefill:packed", t0p, now,
+                            tokens=real, padding=t_pack - real,
+                            chunks=len(spans), buffer=t_pack,
+                            budget=ledger.tokens_per_step,
+                        )
+                    progressed = True
+            elif prefilling:
+                t0p = clock()
+                for slot in list(prefilling):
+                    req = slots.active[slot]
+                    start = prefilling[slot]
+                    c = min(prefill_chunk, len(req.prompt) - start)
+                    # bucket the chunk shape to a page multiple so ragged
+                    # prompt tails don't compile one jit variant per distinct
+                    # residual; pad K/V lands inside the prompt's already-
+                    # allocated pages and stays length-masked until decode
+                    # overwrites it
+                    c_pad = min(
+                        prefill_chunk, pages_needed(c, page_size) * page_size
+                    )
+                    chunk = np.zeros((1, c_pad), np.int32)
+                    chunk[0, :c] = req.prompt[start : start + c]
+                    fn = self._paged_prefill_fn(c_pad, start)
+                    logits, cache = fn(
+                        self.params,
+                        jnp.asarray(chunk),
+                        cache,
+                        jnp.asarray(table.table[slot]),
+                        jnp.int32(c - 1),
+                    )
+                    jax.block_until_ready(logits)
+                    chunks_done += 1
+                    prefill_launches += 1
+                    prefill_tokens += c
+                    prefill_padded += c_pad - c
+                    start += c
+                    lengths[slot] = start
+                    progressed = True
+                    if start >= len(req.prompt):
+                        del prefilling[slot]
+                        tok0 = int(jnp.argmax(logits[0]))
+                        nxt[slot] = tok0
+                        slot_tokens[slot] = [tok0]
+                        decoding.add(slot)
+                        req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                    else:
+                        prefilling[slot] = start
+                prefill_s += clock() - t0p
             # 4) one decode step over the whole pool
             active_dec = [
                 s for s in decoding
@@ -690,5 +885,12 @@ class ServingEngine:
             peak_pages_in_use=pool.peak_in_use,
             preemptions=slots.preemptions,
             prefill_chunks=chunks_done,
-            compile_stats=self.compile_stats(),
+            compile_stats=self._compile_delta(compiles_before),
+            prefill_mode=prefill_mode,
+            prefill_launches=prefill_launches,
+            prefill_s=prefill_s,
+            prefill_tokens=prefill_tokens,
+            prefill_padded_tokens=prefill_padded,
+            prefill_budget=t_pack if packed else 0,
+            prefill_budget_stats=ledger.stats() if ledger else {},
         )

@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 __all__ = [
     "CompletionFuture",
     "PagedSlotPool",
+    "PrefillBudget",
     "RequestScheduler",
     "ScheduledRequest",
     "SchedulerConfig",
@@ -62,6 +63,7 @@ class SchedulerConfig:
     page_size: int = 16            # tokens per KV page (paged engine)
     num_pages: int = 0             # global KV page pool size (0 = engine default)
     prefill_chunk: int = 0         # chunked-prefill tokens per step (0 = default)
+    prefill_budget: int = 0        # packed-prefill tokens per boundary (0 = default)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -72,6 +74,7 @@ class SchedulerConfig:
             "page_size": self.page_size,
             "num_pages": self.num_pages,
             "prefill_chunk": self.prefill_chunk,
+            "prefill_budget": self.prefill_budget,
         }
 
     @classmethod
@@ -437,6 +440,72 @@ class SlotPool:
         req = self.active.pop(slot)
         self._free.append(slot)
         return req
+
+
+class PrefillBudget:
+    """Per-boundary prefill-token ledger for the packed-prefill pipeline.
+
+    The paged engine coalesces every admissible prompt chunk into one packed
+    varlen launch per decode-step boundary; this ledger caps the *real*
+    prompt tokens granted per boundary (``tokens_per_step``) so a burst of
+    queued prompts cannot starve decoding slots — the knob that bounds
+    decode latency under the server scenario.  Pure bookkeeping (testable
+    without a model); the engine owns the packed buffer itself.
+    """
+
+    def __init__(self, tokens_per_step: int) -> None:
+        if tokens_per_step < 1:
+            raise ValueError("tokens_per_step must be >= 1")
+        self.tokens_per_step = tokens_per_step
+        self.steps = 0
+        self.requested_total = 0
+        self.granted_total = 0
+        self._remaining = 0
+        # (step_index, granted_this_step) samples, one per begin_step window
+        self.granted_series: List[tuple] = []
+
+    @property
+    def remaining(self) -> int:
+        return self._remaining
+
+    def begin_step(self) -> None:
+        """Open a fresh per-boundary budget window."""
+        self.steps += 1
+        self._remaining = self.tokens_per_step
+        self.granted_series.append((self.steps - 1, 0))
+
+    def grant(self, tokens: int) -> int:
+        """Grant up to ``tokens`` from this boundary's remaining budget."""
+        if tokens < 0:
+            raise ValueError("cannot request a negative token count")
+        self.requested_total += tokens
+        g = min(tokens, self._remaining)
+        self._remaining -= g
+        self.granted_total += g
+        if self.granted_series:
+            step, sofar = self.granted_series[-1]
+            self.granted_series[-1] = (step, sofar + g)
+        return g
+
+    def defer(self, tokens: int) -> None:
+        """Record demand that could NOT be served this boundary (prompt
+        tokens left waiting once the budget/buffer filled) — the starvation
+        signal ``stats()`` reports as ``starved_tokens``."""
+        if tokens < 0:
+            raise ValueError("cannot defer a negative token count")
+        self.requested_total += tokens
+
+    def stats(self) -> Dict[str, float]:
+        """Scalar summary: how saturated the per-boundary budget ran."""
+        cap = self.steps * self.tokens_per_step
+        return {
+            "steps": float(self.steps),
+            "tokens_per_step": float(self.tokens_per_step),
+            "granted_tokens": float(self.granted_total),
+            "requested_tokens": float(self.requested_total),
+            "budget_utilization": self.granted_total / cap if cap else 0.0,
+            "starved_tokens": float(self.requested_total - self.granted_total),
+        }
 
 
 class PagedSlotPool(SlotPool):
