@@ -1,0 +1,294 @@
+"""Speculative decoding vs plain paged decode (ISSUE 4).
+
+Both serving runs share the SAME paged engine, page budget, packed-prefill
+pipeline and admission policy; only the decode loop differs:
+
+* ``spec_k=0``  — one fused decode launch per boundary, one token per slot.
+* ``spec_k>=3`` — a host-side prompt-lookup drafter proposes up to k tokens
+  per slot (n-gram match against the request's prompt + committed output),
+  and ONE paged multi-token verification launch scores every slot's
+  ``[next_token, draft_1..draft_k]`` window — the KV working set streams
+  once for up to k+1 tokens.  Acceptance is greedy exact-match, so tokens
+  are bit-identical to the non-speculative engine (asserted below).
+
+Two workloads bracket the drafter:
+
+* ``lookup``      — repetitive, summarization/extraction-style prompts with
+  long continuations (greedy continuations of the reduced model settle into
+  repeating phrases, exactly the structure prompt-lookup exploits): high
+  acceptance, decode tokens/sec should gain >= 1.3x at spec_k >= 3.
+* ``adversarial`` — i.i.d.-random prompts with short continuations: n-grams
+  (almost) never match, every boundary falls back to the plain one-token
+  step, and the run must stay within 1.05x of the non-spec decode time
+  (the drafter's host-side scan is the only overhead).
+
+The benchmark runs at low concurrency (``num_slots=2``) — the latency-bound
+regime speculation targets in practice; at large batch the accelerator is
+compute-saturated and extra verify FLOPs stop being free.
+
+Emits ``name,us_per_call,derived`` CSV rows plus a ``BENCH_spec.json``
+artifact (seed + git rev recorded) uploaded by the CI smoke job; the
+deterministic decode-step speedup (greedy acceptance doesn't depend on
+timing), the spec decode tokens/sec and the adversarial wall ratio are
+gated against ``benchmarks/baselines/BENCH_spec_smoke.json``.  ``--smoke``
+keeps the same request mix so baseline and CI numbers are one-to-one
+comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels import ref
+from repro.kernels.spec_verify import spec_verify as pallas_spec
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine
+
+from .common import bench_meta, emit
+
+
+def _kernel_max_err(rng) -> float:
+    """Pallas spec-verify kernel vs the host-loop oracle (interpret, f32):
+    ragged window lengths, page-boundary-straddling windows, an idle row."""
+    ps, kvh, h, d, P, num_pages = 8, 2, 4, 16, 5, 24
+    rows = [(13, 4), (7, 2), (16, 3), (0, 0)]   # (committed, window_len)
+    W = 4
+    lens = np.array([r[0] for r in rows], np.int32)
+    wlens = np.array([r[1] for r in rows], np.int32)
+    tables = np.zeros((len(rows), P), np.int32)
+    nxt = 1
+    for i, (L, wl) in enumerate(rows):
+        for j in range((L + wl + ps - 1) // ps):
+            tables[i, j] = nxt
+            nxt += 1
+    args = (
+        jnp.asarray(rng.normal(size=(len(rows), W, h, d)), jnp.float32),
+        jnp.asarray(rng.normal(size=(num_pages, ps, kvh, d)), jnp.float32),
+        jnp.asarray(rng.normal(size=(num_pages, ps, kvh, d)), jnp.float32),
+        jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(wlens),
+    )
+    a = ref.spec_verify(*args)
+    b = pallas_spec(*args)
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+def _tiled_prompts(cfg, rng, n, lo, hi):
+    """Repetitive prompts: a short phrase tiled — the document-grounded
+    structure (summaries, extraction, code edits) that prompt-lookup
+    drafting exploits."""
+    prompts = []
+    for _ in range(n):
+        phrase = rng.integers(0, cfg.vocab_size, (rng.integers(3, 6),))
+        length = int(rng.integers(lo, hi + 1))
+        tiled = np.tile(phrase, length // len(phrase) + 1)[:length]
+        prompts.append(tiled.astype(np.int32))
+    return prompts
+
+
+def _predictability(prompt, cont, ngram, k) -> float:
+    """Fraction of a greedy continuation the prompt-lookup drafter would
+    have produced for free: replay the draft/accept loop against the known
+    token stream (greedy tokens are engine-independent, so scoring with the
+    dense ``generate`` path transfers exactly to the paged engine)."""
+    from repro.serve.engine import ngram_propose
+
+    ctx = list(int(t) for t in prompt) + [int(cont[0])]
+    i, accepted = 1, 0
+    while i < len(cont):
+        d = ngram_propose(np.asarray(ctx, np.int32), ngram, k)
+        a = 0
+        while a < len(d) and i + a < len(cont) and d[a] == int(cont[i + a]):
+            a += 1
+        accepted += a
+        adv = min(a + 1, len(cont) - i)
+        ctx.extend(int(t) for t in cont[i : i + adv])
+        i += adv
+    return accepted / max(len(cont) - 1, 1)
+
+
+def _select_prompts(engine, cfg, candidates, gen, ngram, k, n, friendly):
+    """Score candidate prompts by drafter-predictability of their greedy
+    continuations and keep the ``n`` most (lookup workload) or least
+    (adversarial workload) predictable — the two ends of the bracket the
+    benchmark gates."""
+    scored = []
+    bs = engine.max_batch
+    for i in range(0, len(candidates), bs):
+        group = candidates[i : i + bs]
+        res = engine.generate(group, gen)
+        for p, cont in zip(group, res.tokens):
+            scored.append((_predictability(p, cont, ngram, k), p))
+    scored.sort(key=lambda t: t[0], reverse=friendly)
+    picked = scored[:n]
+    return [p for _, p in picked], float(np.mean([s for s, _ in picked]))
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    max_seq, page_size, num_slots = 128, 8, 2
+    prefill_budget = 64
+    spec_k, spec_ngram = 4, 3
+    # the full workload already runs in CI time: --smoke keeps the same
+    # request mix so the committed baseline and CI numbers are comparable.
+    # lookup generations are long enough that the repetitive continuation
+    # regime (where drafting pays) dominates the measured decode time
+    lookup_requests, lookup_gen = 6, 96
+    adv_requests, adv_gen = 20, 12
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        model, params, max_batch=num_slots, max_seq=max_seq, page_size=page_size
+    )
+
+    rng = np.random.default_rng(seed)
+    lookup, lookup_score = _select_prompts(
+        engine, cfg, _tiled_prompts(cfg, rng, 3 * lookup_requests, 12, 24),
+        lookup_gen, spec_ngram, spec_k, lookup_requests, friendly=True,
+    )
+    adversarial, adv_score = _select_prompts(
+        engine, cfg,
+        [rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+         for n in rng.integers(24, 48, 2 * adv_requests)],
+        adv_gen, spec_ngram, spec_k, adv_requests, friendly=False,
+    )
+
+    def serve(prompts, gen, k):
+        reqs = [
+            ServeRequest(request_id=i, prompt=p, max_new_tokens=gen)
+            for i, p in enumerate(prompts)
+        ]
+        return engine.serve_paged(
+            reqs, num_slots=num_slots, page_size=page_size,
+            prefill_budget=prefill_budget, spec_k=k, spec_ngram=spec_ngram,
+        )
+
+    def decode_tps(s, n_req):
+        # the prefill launch emits each request's first token; everything
+        # else comes out of the decode/verify loop being compared here
+        return (s.total_tokens - n_req) / s.decode_s if s.decode_s > 0 else 0.0
+
+    def timed(prompts, gen, repeats=4):
+        # INTERLEAVED best-of-N decode times: single-run jitter on shared CI
+        # machines is larger than the effect being gated, and a load spike
+        # during one mode's timing phase would skew the ratio — alternating
+        # base/spec runs exposes both modes to the same conditions
+        base = spec = None
+        for _ in range(repeats):
+            b = serve(prompts, gen, 0)
+            s = serve(prompts, gen, spec_k)
+            if base is None or b.decode_s < base.decode_s:
+                base = b
+            if spec is None or s.decode_s < spec.decode_s:
+                spec = s
+        return base, spec
+
+    results = {}
+    for name, prompts, gen in (
+        ("lookup", lookup, lookup_gen),
+        ("adversarial", adversarial, adv_gen),
+    ):
+        n_req = len(prompts)
+        serve(prompts, gen, 0)            # warm every compile path
+        serve(prompts, gen, spec_k)
+        base, spec = timed(prompts, gen)
+        by_id = {r.request_id: r for r in base.results}
+        for r in spec.results:
+            assert r.tokens.tolist() == by_id[r.request_id].tokens.tolist(), (
+                f"{name}: speculative tokens diverged from the non-spec path"
+            )
+        ratio = decode_tps(spec, n_req) / max(decode_tps(base, n_req), 1e-12)
+        # decode-boundary count is deterministic for a fixed seed (greedy
+        # tokens and the acceptance pattern don't depend on timing), so the
+        # step speedup is the noise-free CI gate; the wall-clock ratio is
+        # reported (and warned on) but swings with shared-machine load
+        step_ratio = base.steps / max(spec.steps, 1)
+        results[name] = {
+            "base": {
+                "tokens_per_s": base.throughput_tps,
+                "decode_tokens_per_s": decode_tps(base, n_req),
+                "decode_s": base.decode_s,
+                "decode_steps": base.steps,
+                "itl_p99_ms": base.itl_p99_ms,
+            },
+            "spec": {
+                "tokens_per_s": spec.throughput_tps,
+                "decode_tokens_per_s": decode_tps(spec, n_req),
+                "decode_s": spec.decode_s,
+                "decode_steps": spec.steps,
+                "itl_p99_ms": spec.itl_p99_ms,
+                "acceptance_rate": spec.spec_stats["acceptance_rate"],
+                "spec_launches": spec.spec_stats["spec_launches"],
+                "fallback_steps": spec.spec_stats["fallback_steps"],
+                "rollback_pages": spec.spec_stats["rollback_pages"],
+                "compile_stats": spec.compile_stats,
+            },
+            "decode_speedup": ratio,
+            "step_speedup": step_ratio,
+        }
+        emit(
+            f"spec/{name}", spec.decode_s / max(spec.steps, 1),
+            f"decode_tok_s={decode_tps(spec, n_req):.1f};"
+            f"base_tok_s={decode_tps(base, n_req):.1f};"
+            f"accept={spec.spec_stats['acceptance_rate']:.2f};"
+            f"steps={spec.steps}v{base.steps};"
+            f"itl_p99_ms={spec.itl_p99_ms:.1f};"
+            f"speedup={ratio:.2f}x",
+        )
+
+    kernel_err = _kernel_max_err(np.random.default_rng(seed + 7))
+    emit("spec/kernel_abs_err", kernel_err, "target=1e-3")
+    speedup = results["lookup"]["decode_speedup"]
+    adv_ratio = results["adversarial"]["decode_speedup"]
+    if speedup < 1.3:
+        print(f"# WARNING: lookup-workload decode speedup {speedup:.2f}x "
+              f"below the 1.3x target")
+    if adv_ratio < 1 / 1.05:
+        print(f"# WARNING: adversarial decode ratio {adv_ratio:.2f} worse "
+              f"than the 1.05x slowdown budget")
+    if kernel_err > 1e-3:
+        print(f"# WARNING: spec-verify kernel error {kernel_err:.2e} above 1e-3")
+
+    out = {
+        "bench": "spec",
+        "smoke": smoke,
+        **bench_meta(seed),
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "num_slots": num_slots,
+        "prefill_budget": prefill_budget,
+        "spec_k": spec_k,
+        "spec_ngram": spec_ngram,
+        "lookup_requests": lookup_requests,
+        "lookup_gen_tokens": lookup_gen,
+        "lookup_predictability": lookup_score,
+        "adversarial_requests": adv_requests,
+        "adversarial_gen_tokens": adv_gen,
+        "adversarial_predictability": adv_score,
+        **results,
+        "kernel_abs_err_f32": kernel_err,
+    }
+    with open("BENCH_spec.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (interpret-mode kernels, CPU)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (recorded in BENCH_spec.json)")
+    args = ap.parse_args()
+    emit_header()
+    t0 = time.perf_counter()
+    run(smoke=args.smoke, seed=args.seed)
+    print(f"# bench_spec done in {time.perf_counter() - t0:.1f}s")

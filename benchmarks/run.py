@@ -19,6 +19,7 @@ BENCHES = [
     ("scheduler", "benchmarks.bench_scheduler"),
     ("paged", "benchmarks.bench_paged"),
     ("prefill", "benchmarks.bench_prefill"),
+    ("spec", "benchmarks.bench_spec"),
 ]
 
 

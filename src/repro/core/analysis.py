@@ -189,6 +189,73 @@ def prefill_saturation_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def spec_decode_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize the speculative-decoding verify trace series.
+
+    The paged engine publishes one ``spec:verify`` event per multi-token
+    verification launch, tagged with ``window`` (the k+1 launch width),
+    ``slots`` (decoding slots scored), ``proposed`` / ``accepted`` (draft
+    tokens in/out of the greedy exact-match acceptance test) and ``emitted``
+    (tokens committed by the launch: one per slot plus every accepted
+    draft).  This aggregates them into the decode block of the analysis
+    workflow: the acceptance rate is whether prompt-lookup drafting pays,
+    and ``mean_tokens_per_launch`` vs 1.0 is the decode-step amplification
+    the verification kernel bought."""
+    proposed = 0.0
+    accepted = 0.0
+    emitted = 0.0
+    slots = 0.0
+    launches = 0
+    window = 0.0
+    total_s = 0.0
+    for s in spans:
+        if s.name != "spec:verify":
+            continue
+        launches += 1
+        proposed += float(s.tags.get("proposed", 0))
+        accepted += float(s.tags.get("accepted", 0))
+        emitted += float(s.tags.get("emitted", 0))
+        slots += float(s.tags.get("slots", 0))
+        window = max(window, float(s.tags.get("window", 0)))
+        total_s += s.duration
+    if not launches:
+        return {}
+    return {
+        "spec_launches": float(launches),
+        "window": window,
+        "draft_proposed": proposed,
+        "draft_accepted": accepted,
+        "acceptance_rate": accepted / proposed if proposed else 0.0,
+        "emitted_tokens": emitted,
+        "mean_tokens_per_launch": emitted / max(slots, 1.0),
+        "emitted_tokens_per_s": emitted / total_s if total_s > 0 else 0.0,
+    }
+
+
+def spec_decode_section(spans: Iterable[Span]) -> str:
+    """Render the speculative-decoding block as a report section; empty
+    string when no speculative run was traced."""
+    summary = spec_decode_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
+def itl_summary(itls_s: Sequence[float]) -> Dict[str, float]:
+    """Inter-token latency block: the serving-quality metric the paged
+    decode loop optimizes (speculative boundaries emit several tokens at
+    one instant, so accepted drafts surface as near-zero gaps)."""
+    if not itls_s:
+        return {}
+    return {
+        "samples": float(len(itls_s)),
+        "itl_mean_ms": sum(itls_s) / len(itls_s) * 1e3,
+        "itl_p50_ms": percentile(itls_s, 50.0) * 1e3,
+        "itl_p99_ms": percentile(itls_s, 99.0) * 1e3,
+    }
+
+
 def throughput_scalability(
     per_batch: Dict[int, float]
 ) -> Dict[int, float]:

@@ -500,6 +500,104 @@ def paged_attention(
 
 
 # ---------------------------------------------------------------------------
+# Speculative-decoding verification (k+1-token windows vs a paged KV pool)
+# ---------------------------------------------------------------------------
+def spec_verify_jnp(
+    q: jnp.ndarray,            # (b, W, h, d) in-flight windows
+    k_pages: jnp.ndarray,      # (num_pages, page_size, kvh, d)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,   # (b, max_pages) int32
+    lengths: jnp.ndarray,      # (b,) committed tokens BEFORE the window
+    window_lens: jnp.ndarray,  # (b,) real window tokens per row (0..W)
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Masked one-shot verification (jit-friendly, any backend).
+
+    Gathers each row's pages back into a contiguous cache (the caller slices
+    ``page_table`` to ``pages_bound`` first) and scores all ``W`` window
+    positions at once: query ``w`` at absolute position ``lengths[b] + w``
+    attends every position ``<= lengths[b] + w`` — the window's own K/V are
+    already in the pages, so per-query causal masking on absolute positions
+    is the whole story.  Rows past ``window_lens[b]`` come back exactly zero
+    (manual safe softmax, not ``jax.nn.softmax``, which would go uniform on
+    fully-masked rows).
+    """
+    b, W, h, d = q.shape
+    page_size, kvh = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    Lk = max_pages * page_size
+    k = k_pages[page_table].reshape(b, Lk, kvh, d)
+    v = v_pages[page_table].reshape(b, Lk, kvh, d)
+    qg = q.reshape(b, W, kvh, rep, d)
+    s = jnp.einsum(
+        "bwgrd,bkgd->bgrwk", qg, k, preferred_element_type=jnp.float32
+    ) * scale                                  # (b, kvh, rep, W, Lk)
+    s = _soft_cap(s, softcap)
+    lens = jnp.asarray(lengths, jnp.int32)
+    wlens = jnp.asarray(window_lens, jnp.int32)
+    k_pos = jnp.arange(Lk, dtype=jnp.int32)[None, None, :]
+    q_pos = lens[:, None, None] + jnp.arange(W, dtype=jnp.int32)[None, :, None]
+    valid = (k_pos <= q_pos) & (
+        jnp.arange(W, dtype=jnp.int32)[None, :, None] < wlens[:, None, None]
+    )
+    if window is not None:
+        valid &= (q_pos - k_pos) < window
+    mask = valid[:, None, None]                # (b, 1, 1, W, Lk)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
+    p = p / l
+    out = jnp.einsum(
+        "bgrwk,bkgd->bwgrd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, W, h, d).astype(q.dtype)
+
+
+def spec_verify(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    window_lens: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+    pages_bound: Optional[int] = None,
+) -> jnp.ndarray:
+    """Speculative multi-token verification over a paged KV cache: one
+    ``(b, W)`` launch scores each slot's ``[next_token, draft_1..draft_k]``
+    window against its committed pages plus the window's own causal prefix
+    (the window K/V are scattered into the pages first).  ``pages_bound``
+    statically bounds live+in-flight pages per request (host-known,
+    bucketed) so neither path iterates the padded page-table width."""
+    if pages_bound is not None and pages_bound < page_table.shape[1]:
+        page_table = page_table[:, :pages_bound]
+    if backend == "pallas":
+        from . import spec_verify as sv  # lazy: pallas import cost
+
+        return sv.spec_verify(
+            q, k_pages, v_pages, page_table, lengths, window_lens,
+            softcap=softcap, window=window, scale=scale,
+        )
+    # ref and flash share the gather-based one-shot computation (jit-
+    # friendly; ref.spec_verify is the host-loop oracle used by tests)
+    return spec_verify_jnp(
+        q, k_pages, v_pages, page_table, lengths, window_lens,
+        softcap=softcap, window=window, scale=scale,
+    )
+
+
+# ---------------------------------------------------------------------------
 # RMSNorm
 # ---------------------------------------------------------------------------
 def rmsnorm(

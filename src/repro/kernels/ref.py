@@ -179,6 +179,61 @@ def varlen_prefill(
     return out
 
 
+def spec_verify(
+    q: jnp.ndarray,           # (b, W, h, d) — one in-flight window per slot
+    k_pages: jnp.ndarray,     # (num_pages, page_size, kvh, d) global page pool
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,  # (b, max_pages) int32 page ids per request
+    lengths: jnp.ndarray,     # (b,) committed tokens BEFORE the window
+    window_lens: jnp.ndarray, # (b,) real tokens in each row's window (0..W)
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Speculative multi-token verification oracle.
+
+    Row ``b`` holds a window of ``window_lens[b]`` in-flight tokens
+    (``[next_token, draft_1..draft_k]``) whose K/V the caller has ALREADY
+    scattered into the request's pages at positions
+    ``[lengths[b], lengths[b] + window_lens[b])`` — window starts are NOT
+    page-aligned.  Query ``w`` sits at absolute position ``lengths[b] + w``
+    and attends every position ``<= lengths[b] + w`` (committed context plus
+    the causal prefix of its own window).  Host-side loop over rows: gather
+    the request's pages back into a contiguous cache and run the dense
+    causal attention oracle with ``q_offset = lengths[b]``.  Rows past
+    ``window_lens[b]`` (window pad) come back zero.  Test/benchmark only.
+    """
+    import numpy as np
+
+    b, W, h, d = q.shape
+    page_size = int(k_pages.shape[1])
+    lens = np.asarray(lengths, np.int64)
+    wlens = np.asarray(window_lens, np.int64)
+    tables = np.asarray(page_table, np.int64)
+    out = jnp.zeros_like(q)
+    for i in range(b):
+        n = int(wlens[i])
+        if n == 0:
+            continue
+        L = int(lens[i])
+        total = L + n
+        n_pg = (total + page_size - 1) // page_size
+        kc = k_pages[tables[i, :n_pg]].reshape(
+            n_pg * page_size, *k_pages.shape[2:]
+        )[:total]
+        vc = v_pages[tables[i, :n_pg]].reshape(
+            n_pg * page_size, *v_pages.shape[2:]
+        )[:total]
+        o = attention(
+            q[i, :n][None], kc[None].astype(q.dtype), vc[None].astype(q.dtype),
+            causal=True, window=window, softcap=softcap, q_offset=L,
+            scale=scale,
+        )[0]
+        out = out.at[i, :n].set(o)
+    return out
+
+
 def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     """RMSNorm oracle: x * w / sqrt(mean(x^2) + eps), stats in fp32."""
     xf = x.astype(jnp.float32)

@@ -1,0 +1,206 @@
+"""Pallas TPU speculative-decoding verification: score a whole in-flight
+window of ``[next_token, draft_1..draft_k]`` tokens per decoding slot against
+the paged KV pool in ONE launch.
+
+Decode is memory-bound: a one-token step streams the request's entire live
+KV working set to emit a single token.  Scoring ``k + 1`` positions per
+request in one launch costs nearly the same HBM traffic (the pages stream
+once; only the tiny q block grows), which is the classic speculative-
+decoding win.  The caller has ALREADY scattered the window's K/V into the
+request's pages at positions ``[lengths[b], lengths[b] + window_lens[b])``
+— window starts are NOT page-aligned (they sit wherever decode left off),
+so per-query causal masking is on *absolute* positions: query ``w`` of row
+``b`` sits at ``lengths[b] + w`` and attends every position ``<= lengths[b]
++ w`` (committed context plus the causal prefix of its own window).
+
+Grid = (batch, q_heads, kv_pages) with the page dimension innermost and
+sequential so the online-softmax state (one row per window position) lives
+in VMEM scratch — the same flash-decode layout as
+:mod:`.paged_attention`, with a (W, d) q block instead of (1, d).  The page
+table, committed ``lengths`` and per-row ``window_lens`` arrive as scalar
+prefetch: the k/v BlockSpec index maps dereference the page table so only
+pages holding live-or-in-flight tokens stream HBM->VMEM; trailing dead
+blocks clamp to the last live page (a revisit — no new DMA).  ``W`` is
+static (one jit variant per draft depth k), rows with fewer real drafts
+mask the tail and emit exact zeros there.  Pallas wants block minor dims at
+8x128 multiples on real TPUs; the engine's small test/CI window and head
+sizes rely on interpret mode exactly like the paged decode kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions; bridge both
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version compat
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    pt_ref,                    # scalar prefetch: (b, max_pages) int32 page table
+    lens_ref,                  # scalar prefetch: (b,) committed tokens
+    wlens_ref,                 # scalar prefetch: (b,) real window tokens
+    w_ref,                     # scalar prefetch: (1,) int32 window (0 = none)
+    q_ref,                     # (1, W, 1, d)
+    k_ref, v_ref,              # (1, page_size, 1, d) — one page
+    o_ref,                     # (1, W, 1, d)
+    m_ref, l_ref, acc_ref,     # VMEM scratch (online-softmax state per q row)
+    *,
+    softcap: float,
+    page_size: int,
+    win: int,                  # static window rows W
+    scale: float,
+):
+    bi = pl.program_id(0)
+    pj = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]                                   # (W, d)
+    k = k_ref[0, :, 0, :]                                   # (page_size, d)
+    v = v_ref[0, :, 0, :]
+    L = lens_ref[bi]
+    wl = wlens_ref[bi]
+    # positions are *logical*: page pj of this request covers
+    # [pj*page_size, (pj+1)*page_size) regardless of the physical page the
+    # index map streamed in.  Query w sits at absolute position L + w.
+    k_pos = pj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (win, page_size), 1
+    )
+    w_idx = jax.lax.broadcasted_iota(jnp.int32, (win, page_size), 0)
+    q_pos = L + w_idx
+    valid = (k_pos <= q_pos) & (w_idx < wl)
+    w = w_ref[0]
+    valid &= jnp.where(w > 0, (q_pos - k_pos) < w, True)
+    # zero invalid V rows: dead pages hold undefined memory and fully-masked
+    # q rows accumulate p=1 over dead stages — 0-valued V keeps them inert
+    row_valid = jnp.max(valid, axis=0)
+    v = jnp.where(row_valid[:, None], v, 0.0)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                               # (W, page_size)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit p mask: a fully-masked q row (window pad / idle slot) has
+    # every score at NEG_INF, so exp(s - m) would be 1 everywhere; masked p
+    # keeps l at 0 -> output exactly 0 for those rows
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pj == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def spec_verify(
+    q: jnp.ndarray,            # (b, W, h, d) in-flight windows
+    k_pages: jnp.ndarray,      # (num_pages, page_size, kvh, d) global pool
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,   # (b, max_pages) int32 page ids per request
+    lengths: jnp.ndarray,      # (b,) committed tokens BEFORE the window
+    window_lens: jnp.ndarray,  # (b,) real window tokens per row (0..W)
+    *,
+    softcap: float = 0.0,
+    window=None,
+    scale: Optional[float] = None,
+    pages_bound: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    b, W, h, d = q.shape
+    page_size, kvh = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    # static bound on pages per request INCLUDING the in-flight window (the
+    # window may straddle into a freshly-opened page)
+    ns = max_pages if pages_bound is None else min(pages_bound, max_pages)
+    ns = max(ns, 1)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    wval = jnp.asarray([0], jnp.int32) if window is None else jnp.asarray(
+        [window], jnp.int32
+    ).reshape((1,))
+
+    def _page(pj, pt, lens, wlens, bi):
+        # clamp dead trailing blocks to the row's last live-or-in-flight
+        # page: the index map returns the same block as the previous step,
+        # so Pallas skips the DMA instead of streaming an arbitrary page
+        total = lens[bi] + wlens[bi]
+        last = jnp.maximum((total + page_size - 1) // page_size - 1, 0)
+        return pt[bi, jnp.minimum(pj, last)]
+
+    kernel = functools.partial(
+        _kernel, softcap=float(softcap), page_size=page_size, win=W,
+        scale=float(scale),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec(
+                (1, W, 1, d),
+                lambda bi, hi, pj, pt, lens, wlens, w: (bi, 0, hi, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, pj, pt, lens, wlens, w: (
+                    _page(pj, pt, lens, wlens, bi), 0, hi // rep, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, pj, pt, lens, wlens, w: (
+                    _page(pj, pt, lens, wlens, bi), 0, hi // rep, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, W, 1, d),
+            lambda bi, hi, pj, pt, lens, wlens, w: (bi, 0, hi, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((W,), jnp.float32),
+            pltpu.VMEM((W,), jnp.float32),
+            pltpu.VMEM((W, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, W, h, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(page_table, jnp.int32),
+        jnp.asarray(lengths, jnp.int32),
+        jnp.asarray(window_lens, jnp.int32),
+        wval,
+        q,
+        k_pages,
+        v_pages,
+    )

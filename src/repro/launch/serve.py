@@ -17,9 +17,14 @@ scheduler.  Three executor modes (``--engine``):
                     token-packed varlen launch of ``--prefill-budget``
                     tokens; ``chunked`` is the legacy one-chunk-per-slot
                     path), admission keyed on free pages, and youngest-
-                    first preemption when the pool is exhausted.  Emits
-                    ``pages:occupancy`` + ``prefill:packed`` events and
-                    page-occupancy / prefill-saturation report sections.
+                    first preemption when the pool is exhausted.
+                    ``--spec-k k`` adds self-speculative decoding
+                    (prompt-lookup drafting + one paged multi-token
+                    verification launch per boundary; greedy tokens stay
+                    bit-identical).  Emits ``pages:occupancy`` +
+                    ``prefill:packed`` + ``spec:verify`` events and
+                    page-occupancy / prefill-saturation / acceptance-rate
+                    report sections plus per-request ITL p50/p99.
 
 Latency/throughput metrics and the scheduler's queue/occupancy series flow
 into the evaluation database.
@@ -40,6 +45,7 @@ from ..core.analysis import (
     latency_summary,
     page_occupancy_section,
     prefill_saturation_section,
+    spec_decode_section,
 )
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.tracing import Tracer, TracingServer
@@ -142,6 +148,8 @@ def _serve_paged(engine, cfg, args, load, prompts):
         overcommit=args.overcommit,
         prefill_mode=args.prefill_mode,
         prefill_budget=args.prefill_budget or None,
+        spec_k=args.spec_k,
+        spec_ngram=args.spec_ngram,
         tracer=tracer,
     )
     for r in stats.results:
@@ -158,6 +166,11 @@ def _serve_paged(engine, cfg, args, load, prompts):
     section = prefill_saturation_section(server.timeline("serve-paged"))
     if section:
         print("[serve] prefill saturation:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    section = spec_decode_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] speculative decoding:")
         for line in section.splitlines():
             print(f"[serve]   {line}")
     latencies = [r.latency_s for r in stats.results]
@@ -181,8 +194,13 @@ def _serve_paged(engine, cfg, args, load, prompts):
             "prefill_s": stats.prefill_s,
             "prefill_tokens": float(stats.prefill_tokens),
             "prefill_padded_tokens": float(stats.prefill_padded_tokens),
+            "decode_s": stats.decode_s,
+            "itl_p50_ms": stats.itl_p50_ms,
+            "itl_p99_ms": stats.itl_p99_ms,
+            "spec_k": float(stats.spec_k),
             **{f"compiles_{k}": float(v) for k, v in stats.compile_stats.items()},
             **{f"budget_{k}": v for k, v in stats.prefill_budget_stats.items()},
+            **{k: v for k, v in stats.spec_stats.items()},
         }
     )
     return summary, stats.total_tokens, stats.wall_s
@@ -217,6 +235,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-budget", type=int, default=0,
                     help="packed-prefill tokens per decode boundary "
                          "(0 = 4x prefill chunk); bounds decode latency")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft depth: prompt-lookup proposes up "
+                         "to k tokens per slot per boundary, one paged "
+                         "verify launch scores all k+1 (0 = disabled)")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="prompt-lookup n-gram match length for drafting")
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission overcommit factor (>1 admits past "
                          "worst-case page commitment; preemption is the valve)")

@@ -27,6 +27,7 @@ from .config import ArchConfig
 from .modules import (
     attn_decode,
     attn_decode_paged,
+    attn_decode_spec,
     attn_defs,
     attn_full,
     attn_prefill_packed,
@@ -734,6 +735,66 @@ class DecoderLM(BaseModel):
         new_cache = dict(cache)
         new_cache.update(stacks)
         logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    def decode_spec(self, params, tokens, cache, page_table, lengths,
+                    window_lens, pages_bound=None):
+        """Speculative-decoding verification step for a pool of slots.
+
+        ``tokens``: (b, W) int32 in-flight windows — per slot the pending
+        ``next_token`` followed by up to ``W - 1`` prompt-lookup draft
+        tokens, right-padded; ``window_lens``: (b,) real tokens per window
+        (0 for idle slots).  ``lengths``: (b,) tokens already committed —
+        the window occupies logical positions ``[lengths, lengths +
+        window_lens)``.  Every layer scatters the window's K/V into the
+        request's pages, then attends the committed context plus the
+        window's own causal prefix (one varlen-style launch per layer
+        instead of ``W`` sequential decode steps — the KV pool streams
+        once).  ``pages_bound`` statically bounds live+in-flight pages.
+
+        Returns (logits (b, W, V), new cache): row ``w`` holds the
+        next-token distribution after consuming ``tokens[:, :w + 1]``, so
+        greedy acceptance compares ``argmax(logits[:, w - 1])`` against
+        ``tokens[:, w]`` — accepted tokens are bit-identical to running the
+        one-token decode path sequentially."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or self._interleaved:
+            raise NotImplementedError(
+                "speculative paged decode supports dense/moe "
+                "(non-interleaved) only"
+            )
+        pos = jnp.asarray(lengths, jnp.int32)
+        wlens = jnp.asarray(window_lens, jnp.int32)
+        x = self._embed_tokens(params, tokens)                   # (b, W, D)
+        windows = self._layer_windows(0)
+        xs = (
+            (params["blocks"], windows)
+            if windows is not None
+            else (params["blocks"],)
+        )
+
+        def body(x1, xs_l, caches, li):
+            blk = self._cast(xs_l[0])
+            window = xs_l[1] if len(xs_l) > 1 else None
+            h = self._norm(x1, blk["ln1"])
+            a, kp, vp = attn_decode_spec(
+                blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                page_table, pos, wlens, cfg, backend=self.backend,
+                window=window, pages_bound=pages_bound,
+            )
+            if cfg.post_norms:
+                a = self._norm(a, blk["post_attn_norm"])
+            x1 = x1 + a
+            return self._block_ffn(blk, x1), {"k_pages": kp, "v_pages": vp}
+
+        x, stacks = _scan_cached(
+            body, x, xs,
+            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
+            cfg.num_layers,
+        )
+        new_cache = dict(cache)
+        new_cache.update(stacks)
+        logits = self._logits(params, x)                         # (b, W, V)
         return logits, new_cache
 
     def prefill_paged_chunk(self, params, tokens, cache, page_row,

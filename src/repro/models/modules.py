@@ -252,6 +252,57 @@ def attn_decode_paged(
     return y, k_pages, v_pages
 
 
+def attn_decode_spec(
+    p: Dict[str, jnp.ndarray],
+    xw: jnp.ndarray,                      # (b, W, D) — one in-flight window/slot
+    k_pages: jnp.ndarray,                 # (num_pages, page_size, kv, dh)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,              # (b, max_pages) int32
+    lengths: jnp.ndarray,                 # (b,) committed tokens before window
+    window_lens: jnp.ndarray,             # (b,) real window tokens (0..W)
+    cfg: ArchConfig,
+    *,
+    backend: str,
+    window=None,
+    use_rope: bool = True,
+    pages_bound: Optional[int] = None,
+):
+    """Speculative-verification attention: score a whole ``[next_token,
+    draft_1..draft_k]`` window per slot against the paged pool in one launch.
+
+    The window's K/V are scattered into the request's pages FIRST (positions
+    ``lengths[b] + w`` through the page table — the multi-token form of the
+    decode append), then every query attends its absolute-position causal
+    prefix, so the window's own tokens are visible exactly like a sequence
+    of one-token decode steps.  Rows past ``window_lens[b]`` (window pad /
+    idle slots) scatter into positions the length mask never reads — pages
+    are append-only, so a rejected suffix rolls back by just rewinding
+    ``lengths``.  Returns (y, k_pages, v_pages).
+    """
+    b, W, _ = xw.shape
+    page_size = k_pages.shape[1]
+    max_pages = page_table.shape[1]
+    tok_pos = lengths[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    positions = tok_pos if use_rope else None
+    q, k, v = _project_qkv(p, xw, cfg, positions, backend)
+    # clamp pad positions that overhang the table width; real window tokens
+    # always have a page (the engine grows tables before the launch)
+    pidx = jnp.minimum(tok_pos // page_size, max_pages - 1)
+    page_ids = jnp.take_along_axis(page_table, pidx, axis=1)   # (b, W)
+    offsets = tok_pos % page_size
+    k_pages = k_pages.at[page_ids, offsets].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, offsets].set(v.astype(v_pages.dtype))
+    out = ops.spec_verify(
+        q, k_pages, v_pages, page_table, lengths, window_lens,
+        softcap=cfg.attn_softcap,
+        window=window,
+        backend=backend,
+        pages_bound=pages_bound,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, k_pages, v_pages
+
+
 def attn_prefill_paged(
     p: Dict[str, jnp.ndarray],
     x: jnp.ndarray,                       # (1, c, D) — one prompt chunk

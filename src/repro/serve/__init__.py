@@ -18,6 +18,8 @@ _EXPORTS = {
     "CompletionFuture": ".scheduler",
     "SlotPool": ".scheduler",
     "PagedSlotPool": ".scheduler",
+    "PrefillBudget": ".scheduler",
+    "SpecLedger": ".scheduler",
     "PagePool": ".page_table",
     "PageTable": ".page_table",
 }

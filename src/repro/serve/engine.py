@@ -23,7 +23,15 @@ prefill/decode jits:
   decode latency) writing straight into the page pool, one compile
   regardless of how prompt lengths mix; ``chunked`` is the legacy
   one-chunk-per-slot-per-boundary path (one jit variant per chunk
-  length × offset).
+  length × offset).  ``spec_k > 0`` adds self-speculative decoding: a
+  host-side prompt-lookup drafter (n-gram match against the request's
+  prompt + output) proposes up to ``spec_k`` tokens per slot and one
+  paged multi-token verification launch scores every slot's window —
+  greedy exact-match acceptance keeps tokens bit-identical, rejected
+  suffixes roll back by rewinding lengths (append-only pages).  The
+  decode loop keeps page tables / positions device-resident (patched only
+  for slots that changed) and fuses argmax + acceptance into the launch,
+  so a steady-state boundary costs one small int32 fetch.
 
 Two shape disciplines keep XLA compile counts bounded (tracked per engine
 instance in ``compile_stats``; each ``serve_paged`` run reports only its
@@ -45,10 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.analysis import percentile
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
 from .page_table import PagePool, PageTable, pages_needed
-from .scheduler import PagedSlotPool, PrefillBudget, SlotPool
+from .scheduler import PagedSlotPool, PrefillBudget, SlotPool, SpecLedger
 
 
 def bucket_pow2(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
@@ -59,6 +68,37 @@ def bucket_pow2(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
     while b < n:
         b *= 2
     return min(b, cap) if cap is not None else b
+
+
+def ngram_propose(context: np.ndarray, ngram: int, max_tokens: int) -> List[int]:
+    """Prompt-lookup drafting: match the last ``ngram`` tokens of ``context``
+    (prompt + everything committed so far, ending at the pending next token)
+    against earlier context; the tokens that FOLLOWED the match become the
+    draft.  No second model — summarization/extraction-style continuations
+    repeat their source, so the continuation of an earlier occurrence is a
+    cheap, often-right guess.  Scanning from the most recent match backwards,
+    the first one with a FULL ``max_tokens`` continuation wins (a short
+    repetition period would otherwise cap every draft at the period length:
+    the most recent occurrence sits so close to the end that only a couple
+    of continuation tokens exist); if none has a full continuation the most
+    recent match is used.  Returns up to ``max_tokens`` draft ids (empty
+    when nothing matches — the engine then falls back to a plain decode
+    step, so adversarial text pays only this O(len * ngram) host scan)."""
+    n = len(context)
+    if max_tokens <= 0 or ngram < 1 or n < ngram + 1:
+        return []
+    pat = context[-ngram:]
+    # vectorized sliding-window match (the scan runs per slot per decode
+    # boundary, so the no-match case must stay cheap)
+    windows = np.lib.stride_tricks.sliding_window_view(context, ngram)
+    hits = np.nonzero((windows == pat).all(axis=1))[0]
+    hits = hits[hits < n - ngram]          # drop the suffix occurrence itself
+    if hits.size == 0:
+        return []
+    full = hits[hits + ngram + max_tokens <= n]
+    best = int(full[-1]) if full.size else int(hits[-1])
+    cont = context[best + ngram : best + ngram + max_tokens]
+    return [int(t) for t in cont]
 
 
 @dataclass
@@ -90,6 +130,14 @@ class RequestResult:
     ttft_s: float               # submit -> first token (prefill argmax)
     latency_s: float            # submit -> last token
     tokens_per_s: float
+    # -- inter-token latency (paged engine): gaps between consecutive token
+    # emissions; a speculative boundary emits several tokens at one instant,
+    # so accepted drafts show up as (near-)zero gaps pulling p50 down -------
+    itl_p50_s: float = 0.0
+    itl_p99_s: float = 0.0
+    # -- speculative-decoding ledger (0s when spec_k == 0) ------------------
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
 
 @dataclass
@@ -130,6 +178,12 @@ class PagedStats:
     prefill_padded_tokens: int = 0  # packed-buffer slots spent on padding
     prefill_budget: int = 0     # packed-buffer tokens per boundary (0 = chunked)
     prefill_budget_stats: Dict[str, float] = field(default_factory=dict)
+    # -- decode loop / speculative decoding ---------------------------------
+    decode_s: float = 0.0       # wall time spent inside decode/verify launches
+    spec_k: int = 0             # draft depth (0 = speculation disabled)
+    spec_stats: Dict[str, float] = field(default_factory=dict)  # SpecLedger
+    itl_p50_ms: float = 0.0     # inter-token latency over every gap in the run
+    itl_p99_ms: float = 0.0
 
 
 class ServingEngine:
@@ -156,6 +210,24 @@ class ServingEngine:
         # whole padded cache and compile count stays logarithmic
         self._decode_fns: Dict[Tuple[bool, Optional[int]], Callable] = {}
         self._paged_decode_fns: Dict[int, Callable] = {}
+        self._spec_decode_fns: Dict[Tuple[int, int], Callable] = {}
+        # jitted slot-level patch of the device-resident decode mirrors
+        # (page-table rows / positions / next tokens / active mask): one
+        # donated scatter call per dirty boundary instead of eager .at[]
+        # updates, whose per-call dispatch cost dwarfs the transfer itself.
+        # Dirty counts are pow2-bucketed (padded with repeats of the last
+        # dirty slot) so the scatter compiles log2(num_slots) variants, not
+        # one per distinct count; the bucket set is compile-accounted
+        self._mirror_patch = jax.jit(
+            lambda table, pos, nxt, mask, idx, rows, p, n, m: (
+                table.at[idx].set(rows),
+                pos.at[idx].set(p),
+                nxt.at[idx].set(n),
+                mask.at[idx].set(m),
+            ),
+            donate_argnums=(0, 1, 2, 3),
+        )
+        self._mirror_patch_shapes: set = set()
         self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self._packed_prefill_fns: Dict[Tuple[int, int, int, int], Callable] = {}
         self._slot_writers: Dict[int, Callable] = {}
@@ -183,6 +255,8 @@ class ServingEngine:
             "paged_prefill": len(self._paged_prefill_fns),
             "packed_prefill": len(self._packed_prefill_fns),
             "paged_decode": len(self._paged_decode_fns),
+            "spec_decode": len(self._spec_decode_fns),
+            "mirror_patch": len(self._mirror_patch_shapes),
         }
 
     def _compile_delta(self, before: Dict[str, int]) -> Dict[str, int]:
@@ -444,13 +518,75 @@ class ServingEngine:
 
     # -- paged serving -------------------------------------------------------
     def _paged_decode_fn(self, pages_bound: int) -> Callable:
+        """One fused paged decode step: attention + on-device argmax + the
+        device-resident next-token/position bump for masked rows.  Fetching
+        the returned ``tok`` array is the boundary's only host sync — no
+        separate argmax dispatch, no per-step table/position re-upload."""
         fn = self._paged_decode_fns.get(pages_bound)
         if fn is None:
-            fn = jax.jit(
-                partial(self.model.decode_paged, pages_bound=pages_bound),
-                donate_argnums=(2,),
-            )
+
+            def step(params, nxt, cache, table, pos, mask):
+                logits, cache = self.model.decode_paged(
+                    params, nxt, cache, table, pos, pages_bound=pages_bound
+                )
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                new_nxt = jnp.where(mask, tok, nxt)
+                new_pos = jnp.where(mask, pos + 1, pos)
+                return tok, new_nxt, new_pos, cache
+
+            fn = jax.jit(step, donate_argnums=(1, 2, 4))
             self._paged_decode_fns[pages_bound] = fn
+        return fn
+
+    def _spec_decode_fn(self, pages_bound: int, W: int) -> Callable:
+        """One fused verify step: multi-token paged attention over each
+        slot's ``[next_token, draft_1..draft_k]`` window + on-device greedy
+        argmax + exact-match draft acceptance + the position bump by
+        ``accepted + 1``.  One jit variant per (pages bucket, window size)
+        — draft depth is a config knob, not a per-step shape.  Returns
+        ``(greedy (b, W), n_accept (b,), new_pos, new_nxt, cache)``; greedy
+        row ``w`` is the model's next token after consuming the window's
+        first ``w + 1`` tokens, so the emitted tokens
+        ``greedy[:, :n_accept + 1]`` are bit-identical to the
+        non-speculative decode sequence.  Positions and the next-token
+        mirror advance on device, so a verify boundary leaves nothing to
+        re-upload before the next launch."""
+        key = (pages_bound, W)
+        fn = self._spec_decode_fns.get(key)
+        if fn is None:
+
+            def step(params, win, cache, table, pos, wlens, nxt):
+                logits, cache = self.model.decode_spec(
+                    params, win, cache, table, pos, wlens,
+                    pages_bound=pages_bound,
+                )
+                greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if W > 1:
+                    # draft j survives iff it equals the model's own greedy
+                    # choice at the previous position AND every earlier
+                    # draft survived (cumprod); pad columns never match
+                    m = (win[:, 1:] == greedy[:, :-1]) & (
+                        jnp.arange(1, W, dtype=jnp.int32)[None, :]
+                        < wlens[:, None]
+                    )
+                    n_accept = (
+                        jnp.cumprod(m.astype(jnp.int32), axis=1)
+                        .sum(axis=1)
+                        .astype(jnp.int32)
+                    )
+                else:
+                    n_accept = jnp.zeros(win.shape[:1], jnp.int32)
+                active = wlens > 0
+                new_pos = jnp.where(active, pos + n_accept + 1, pos)
+                # last emitted token = greedy at the last accepted position:
+                # advancing the next-token mirror on device leaves a verify
+                # boundary with nothing to re-upload before the next launch
+                last = jnp.take_along_axis(greedy, n_accept[:, None], axis=1)
+                new_nxt = jnp.where(active, last[:, 0], nxt)
+                return greedy, n_accept, new_pos, new_nxt, cache
+
+            fn = jax.jit(step, donate_argnums=(2, 4, 6))
+            self._spec_decode_fns[key] = fn
         return fn
 
     def _paged_prefill_fn(self, chunk_len: int, pos0: int) -> Callable:
@@ -497,6 +633,8 @@ class ServingEngine:
         overcommit: float = 1.0,
         prefill_mode: str = "packed",
         prefill_budget: Optional[int] = None,
+        spec_k: int = 0,
+        spec_ngram: int = 3,
         clock: Callable[[], float] = time.perf_counter,
         tracer=None,
     ) -> PagedStats:
@@ -525,9 +663,27 @@ class ServingEngine:
         ``prefill_chunk``-token batch-1 chunk per slot per boundary, one
         jit variant per chunk length × offset.  Greedy tokens are identical
         to ``serve_continuous`` in both modes.
+
+        ``spec_k > 0`` turns on self-speculative decoding: at each boundary
+        a host-side prompt-lookup drafter (n-gram match of the last
+        ``spec_ngram`` committed tokens against the request's prompt +
+        output) proposes up to ``spec_k`` draft tokens per slot, and ONE
+        multi-token verification launch scores every slot's ``[next_token,
+        draft_1..draft_k]`` window against the paged pool — the KV working
+        set streams once for up to ``spec_k + 1`` tokens.  Acceptance is
+        greedy exact-match, so emitted tokens stay bit-identical to the
+        non-speculative path; rejected suffixes roll back by rewinding
+        ``lengths`` (pages are append-only) plus a page-table truncation
+        when a rejected draft had opened a fresh page.  Boundaries where no
+        slot has a draft fall back to a plain fused decode step, so
+        lookup-hostile text pays only the host-side scan.
         """
         if prefill_mode not in ("packed", "chunked"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
+        if spec_ngram < 1:
+            raise ValueError("spec_ngram must be >= 1")
         if not requests:
             return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
                               0.0, 0, 0, 0, {}, prefill_mode=prefill_mode)
@@ -547,7 +703,7 @@ class ServingEngine:
             page_size,
             ((prefill_budget or 4 * prefill_chunk) // page_size) * page_size,
         )
-        ledger = PrefillBudget(t_pack) if packed else None
+        budget = PrefillBudget(t_pack) if packed else None
         max_pages_per_seq = pages_needed(self.max_seq, page_size)
         if num_pages is None:
             num_pages = num_slots * max_pages_per_seq + 1
@@ -574,6 +730,7 @@ class ServingEngine:
         nxt = np.zeros((num_slots,), np.int32)
         lengths = np.zeros((num_slots,), np.int32)   # live tokens per slot
         slot_tokens: Dict[int, List[int]] = {}
+        slot_times: Dict[int, List[float]] = {}      # token-emission clocks
         prefilling: Dict[int, int] = {}              # slot -> next chunk start
         decoding: set = set()
         admit_order: Dict[int, int] = {}             # slot -> admission sequence
@@ -591,14 +748,62 @@ class ServingEngine:
         prefill_s = 0.0
         prefill_tokens = 0
         prefill_padded = 0
+        decode_s = 0.0
+        spec = spec_k > 0
+        ledger = SpecLedger() if spec else None
+        itl_all: List[float] = []                    # every inter-token gap
+        # -- device-resident decode state: the page table, per-slot positions
+        # and (non-spec) next tokens / active mask live on device and are
+        # patched only for slots that changed (admission, page growth,
+        # release, rollback) — steady-state boundaries upload nothing and
+        # fetch one small int32 array (the fused argmax / acceptance result)
+        dev_table = jnp.zeros((num_slots, max_pages_per_seq), jnp.int32)
+        dev_pos = jnp.zeros((num_slots,), jnp.int32)
+        dev_nxt = jnp.zeros((num_slots,), jnp.int32)
+        dev_mask = jnp.zeros((num_slots,), bool)
+        cur_mask = np.zeros((num_slots,), bool)
+        dirty: set = set()                           # slots needing a patch
+
+        def sync_device(active: List[int]) -> None:
+            """Patch the device mirrors for slots whose table row, position,
+            next token or active-mask bit changed since the last launch —
+            one jitted donated scatter over exactly the dirty slots."""
+            nonlocal dev_table, dev_pos, dev_nxt, dev_mask, cur_mask
+            new_mask = np.zeros((num_slots,), bool)
+            new_mask[active] = True
+            stale = dirty | set(np.nonzero(new_mask != cur_mask)[0].tolist())
+            if stale:
+                # pad the dirty set to a pow2 bucket with repeats of the
+                # last dirty slot (duplicate scatter indices write the same
+                # values, so the patch is idempotent): log2(num_slots)
+                # variants instead of one per distinct dirty count
+                cnt = bucket_pow2(len(stale), cap=num_slots)
+                self._mirror_patch_shapes.add(cnt)
+                idx = np.fromiter(sorted(stale), np.int32, len(stale))
+                idx = np.concatenate(
+                    [idx, np.full((cnt - len(idx),), idx[-1], np.int32)]
+                )
+                rows = np.where(
+                    new_mask[idx, None], table.table[idx], np.int32(0)
+                )
+                dev_table, dev_pos, dev_nxt, dev_mask = self._mirror_patch(
+                    dev_table, dev_pos, dev_nxt, dev_mask, idx, rows,
+                    np.where(new_mask[idx], lengths[idx], 0).astype(np.int32),
+                    np.where(new_mask[idx], nxt[idx], 0).astype(np.int32),
+                    new_mask[idx],
+                )
+                cur_mask = new_mask
+                dirty.clear()
 
         def release_slot(slot: int, preempted: bool = False):
             req = slots.release_paged(slot, table.clear(slot), preempted=preempted)
             lengths[slot] = 0
             slot_tokens.pop(slot, None)
+            slot_times.pop(slot, None)
             prefilling.pop(slot, None)
             decoding.discard(slot)
             admit_order.pop(slot, None)
+            dirty.add(slot)
             return req
 
         def preempt_one() -> Optional[int]:
@@ -619,6 +824,13 @@ class ServingEngine:
                 req = slots.active[slot]
                 if len(slot_tokens[slot]) >= req.max_new_tokens:
                     now = clock()
+                    itls = [
+                        b - a for a, b in zip(
+                            slot_times.get(slot, []), slot_times.get(slot, [])[1:]
+                        )
+                    ]
+                    itl_all.extend(itls)
+                    prop, acc = ledger.of(req.request_id) if ledger else (0, 0)
                     finished[req.request_id] = RequestResult(
                         request_id=req.request_id,
                         tokens=np.asarray(slot_tokens[slot], np.int32),
@@ -631,6 +843,10 @@ class ServingEngine:
                             req.max_new_tokens / (now - submit_s[req.request_id])
                             if now > submit_s[req.request_id] else float("inf")
                         ),
+                        itl_p50_s=percentile(itls, 50.0) if itls else 0.0,
+                        itl_p99_s=percentile(itls, 99.0) if itls else 0.0,
+                        draft_proposed=prop,
+                        draft_accepted=acc,
                     )
                     release_slot(slot)
                     progressed = True
@@ -666,23 +882,23 @@ class ServingEngine:
             #    slot (legacy path, one jit variant per length × offset)
             if prefilling and packed:
                 t0p = clock()
-                ledger.begin_step()
+                budget.begin_step()
                 spans: List[Tuple[int, int, int, int]] = []
                 used = 0
                 for slot in sorted(prefilling, key=lambda s: admit_order[s]):
                     req = slots.active[slot]
                     rem = len(req.prompt) - prefilling[slot]
                     if used >= t_pack:
-                        ledger.defer(rem)   # left waiting: starvation signal
+                        budget.defer(rem)   # left waiting: starvation signal
                         continue
                     # the buffer cap (padded spans) is never looser than the
                     # ledger (real tokens), so grants keep spans page-aligned
-                    take = ledger.grant(min(rem, t_pack - used))
+                    take = budget.grant(min(rem, t_pack - used))
                     if take <= 0:
-                        ledger.defer(rem)
+                        budget.defer(rem)
                         continue
                     if take < rem:
-                        ledger.defer(rem - take)
+                        budget.defer(rem - take)
                     span = pages_needed(take, page_size) * page_size
                     spans.append((slot, prefilling[slot], take, span))
                     used += span
@@ -756,7 +972,10 @@ class ServingEngine:
                             nxt[slot] = tok0
                             slot_tokens[slot] = [tok0]
                             decoding.add(slot)
-                            req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                            dirty.add(slot)
+                            tnow = clock()
+                            slot_times[slot] = [tnow]
+                            req._ttft_s = tnow - submit_s[req.request_id]  # type: ignore
                         else:
                             prefilling[slot] = new_start
                     real = sum(s[2] for s in spans)
@@ -770,7 +989,7 @@ class ServingEngine:
                             "prefill:packed", t0p, now,
                             tokens=real, padding=t_pack - real,
                             chunks=len(spans), buffer=t_pack,
-                            budget=ledger.tokens_per_step,
+                            budget=budget.tokens_per_step,
                         )
                     progressed = True
             elif prefilling:
@@ -811,53 +1030,139 @@ class ServingEngine:
                         nxt[slot] = tok0
                         slot_tokens[slot] = [tok0]
                         decoding.add(slot)
-                        req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                        dirty.add(slot)
+                        tnow = clock()
+                        slot_times[slot] = [tnow]
+                        req._ttft_s = tnow - submit_s[req.request_id]  # type: ignore
                     else:
                         prefilling[slot] = start
                 prefill_s += clock() - t0p
-            # 4) one decode step over the whole pool
+            # 4) one decode step over the whole pool.  With ``spec_k > 0``
+            #    the prompt-lookup drafter proposes up to ``spec_k`` tokens
+            #    per slot and ONE verify launch scores every slot's window;
+            #    boundaries with no drafts anywhere fall back to a W=1
+            #    launch (numerically the plain decode step)
             active_dec = [
                 s for s in decoding
                 if len(slot_tokens[s]) < slots.active[s].max_new_tokens
             ]
-            # grow page tables for rows whose next token opens a new page;
-            # preempt the youngest request when the pool is dry
+            drafts: Dict[int, List[int]] = {}
+            if spec and active_dec:
+                for s in active_dec:
+                    req = slots.active[s]
+                    rem = req.max_new_tokens - len(slot_tokens[s])
+                    # a boundary emits accepted+1 tokens: never draft past
+                    # the request's token budget or the cache's max_seq
+                    cap = min(spec_k, rem - 1,
+                              self.max_seq - int(lengths[s]) - 1)
+                    if cap > 0:
+                        ctx = np.concatenate(
+                            [req.prompt, np.asarray(slot_tokens[s], np.int32)]
+                        )
+                        drafts[s] = ngram_propose(ctx, spec_ngram, cap)
+                    else:
+                        drafts[s] = []
+            # grow page tables for rows whose next token (plus any draft
+            # tokens — the verify scatter writes them too) opens a new page;
+            # preempt the youngest request when the pool is dry.  Speculative
+            # demand must never evict live work (or self-preempt into a
+            # recompute loop): when growth fails, first trim the slot's
+            # draft to the pages it already holds — only the REAL next
+            # token's page may preempt, exactly like the non-spec path
             for s in sorted(active_dec, key=lambda s: admit_order[s]):
                 while (
                     s in decoding   # may have been evicted (even by itself)
-                    and table.num_pages_of(s) * page_size <= int(lengths[s])
+                    and table.num_pages_of(s) * page_size
+                    <= int(lengths[s]) + len(drafts.get(s, ()))
                 ):
                     grown = slots.grow(1)
                     if grown is None:
+                        d = drafts.get(s)
+                        if d:
+                            fit = (table.num_pages_of(s) * page_size
+                                   - int(lengths[s]) - 1)
+                            del d[max(fit, 0):]
+                            continue
                         if preempt_one() is None:
                             raise RuntimeError(
                                 "page pool exhausted with nothing to preempt"
                             )
                         continue
                     table.append(s, grown[0])
+                    dirty.add(s)
             active_dec = [s for s in active_dec if s in decoding]  # may be preempted
             if active_dec:
-                mask = np.zeros((num_slots,), bool)
-                mask[active_dec] = True
-                step_table = table.rows_for(mask)
-                step_pos = np.where(mask, lengths, 0).astype(np.int32)
-                live_pages = pages_needed(int(step_pos.max()) + 1, page_size)
-                bound = bucket_pow2(live_pages, cap=max_pages_per_seq)
-                decode = self._paged_decode_fn(bound)
-                logits, cache = decode(
-                    self.params,
-                    jnp.asarray(nxt),
-                    cache,
-                    jnp.asarray(step_table),
-                    jnp.asarray(step_pos),
+                t0d = clock()
+                use_spec = spec and any(drafts.get(s) for s in active_dec)
+                W = spec_k + 1 if use_spec else 1
+                sync_device(active_dec)
+                live = max(
+                    int(lengths[s]) + 1 + len(drafts.get(s, ()))
+                    for s in active_dec
                 )
-                tokens_all = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                bound = bucket_pow2(
+                    pages_needed(live, page_size), cap=max_pages_per_seq
+                )
+                if use_spec:
+                    win = np.zeros((num_slots, W), np.int32)
+                    wlens_h = np.zeros((num_slots,), np.int32)
+                    for s in active_dec:
+                        d = drafts.get(s, [])
+                        win[s, 0] = nxt[s]
+                        win[s, 1 : 1 + len(d)] = d
+                        wlens_h[s] = 1 + len(d)
+                    fn = self._spec_decode_fn(bound, W)
+                    greedy, n_acc, dev_pos, dev_nxt, cache = fn(
+                        self.params, win, cache, dev_table,
+                        dev_pos, wlens_h, dev_nxt,
+                    )
+                    g, na = jax.device_get((greedy, n_acc))
+                else:
+                    fn = self._paged_decode_fn(bound)
+                    tok, dev_nxt, dev_pos, cache = fn(
+                        self.params, dev_nxt, cache, dev_table, dev_pos,
+                        dev_mask,
+                    )
+                    g = np.asarray(tok)[:, None]
+                    na = np.zeros((num_slots,), np.int32)
+                now = clock()
+                decode_s += now - t0d
                 step += 1
                 occupancy_sum += slots.num_active
+                prop_total = acc_total = 0
                 for s in active_dec:
-                    slot_tokens[s].append(int(tokens_all[s]))
-                    nxt[s] = tokens_all[s]
-                    lengths[s] += 1
+                    a = int(na[s])
+                    emitted = g[s, : a + 1]
+                    req = slots.active[s]
+                    slot_tokens[s].extend(int(t) for t in emitted)
+                    nxt[s] = int(emitted[-1])
+                    lengths[s] += a + 1
+                    slot_times[s].extend([now] * (a + 1))
+                    if spec:
+                        prop = len(drafts.get(s, ()))
+                        ledger.record(req.request_id, prop, a)
+                        prop_total += prop
+                        acc_total += a
+                        # rollback: lengths already rewound to the committed
+                        # prefix (the device bump is accepted+1, not the full
+                        # window); a rejected suffix that opened a fresh page
+                        # hands it straight back to the pool
+                        freed = table.truncate(
+                            s, pages_needed(int(lengths[s]), page_size)
+                        )
+                        if freed:
+                            pool.free(freed)
+                            ledger.record_rollback(len(freed))
+                            dirty.add(s)
+                if spec:
+                    ledger.record_launch(use_spec)
+                    if use_spec and tracer is not None:
+                        tracer.event(
+                            "spec:verify", t0d, now,
+                            window=W, slots=len(active_dec),
+                            proposed=prop_total, accepted=acc_total,
+                            emitted=len(active_dec) + acc_total,
+                        )
                 progressed = True
             # peak concurrency is a per-boundary property: prefill-only
             # boundaries (no decode yet) still hold admitted requests
@@ -892,5 +1197,10 @@ class ServingEngine:
             prefill_tokens=prefill_tokens,
             prefill_padded_tokens=prefill_padded,
             prefill_budget=t_pack if packed else 0,
-            prefill_budget_stats=ledger.stats() if ledger else {},
+            prefill_budget_stats=budget.stats() if budget else {},
+            decode_s=decode_s,
+            spec_k=spec_k,
+            spec_stats=ledger.stats() if ledger else {},
+            itl_p50_ms=percentile(itl_all, 50.0) * 1e3 if itl_all else 0.0,
+            itl_p99_ms=percentile(itl_all, 99.0) * 1e3 if itl_all else 0.0,
         )

@@ -150,6 +150,21 @@ class PageTable:
         self.table[slot, len(held)] = page
         held.append(page)
 
+    def truncate(self, slot: int, keep: int) -> List[int]:
+        """Drop every page past the first ``keep`` (speculative-decoding
+        rollback: a rejected draft suffix may have opened a fresh page past
+        the committed length).  Returns the freed pages so the caller can
+        hand them back to the pool."""
+        if keep < 0:
+            raise ValueError("cannot keep a negative page count")
+        held = self._pages.get(slot, [])
+        if keep >= len(held):
+            return []
+        freed = held[keep:]
+        del held[keep:]
+        self.table[slot, keep:] = self.scratch_page
+        return freed
+
     def clear(self, slot: int) -> List[int]:
         """Drop the slot's mapping (completion/preemption); returns the pages
         so the caller can return them to the pool."""

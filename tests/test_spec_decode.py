@@ -1,0 +1,456 @@
+"""Speculative decoding: verify-kernel sweeps vs the ``ref.spec_verify``
+oracle, greedy bit-identity of the spec serving path vs the non-speculative
+engines (incl. preemption and mid-draft rejection rollback), the draft
+acceptance ledger, ITL recording, and per-(config, k) compile accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analysis import (
+    itl_summary,
+    spec_decode_section,
+    spec_decode_summary,
+)
+from repro.core.tracing import Span, TraceLevel
+from repro.kernels import ops, ref
+from repro.kernels.spec_verify import spec_verify as pallas_spec
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine, ngram_propose
+from repro.serve.page_table import PageTable
+from repro.serve.scheduler import SpecLedger
+
+_RNG = np.random.default_rng(42)
+
+PAGE = 8
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=5e-5, atol=5e-5)
+
+
+def _windows(rows, W, kvh=2, h=4, d=16, max_pages=6, num_pages=32,
+             dtype=jnp.float32):
+    """Build a spec-verify workload: ``rows`` is a list of (committed_len,
+    window_len); each row's pages cover committed + in-flight tokens (the
+    engine scatters the window's K/V before attending), window starts are
+    NOT page-aligned."""
+    b = len(rows)
+    lens = np.array([r[0] for r in rows], np.int32)
+    wlens = np.array([r[1] for r in rows], np.int32)
+    tables = np.zeros((b, max_pages), np.int32)
+    nxt = 1
+    for i, (L, wl) in enumerate(rows):
+        npg = (L + wl + PAGE - 1) // PAGE
+        for j in range(npg):
+            tables[i, j] = nxt
+            nxt += 1
+    assert nxt <= num_pages and wlens.max(initial=0) <= W
+    mk = lambda shape: jnp.asarray(_RNG.normal(size=shape), dtype)
+    return (
+        mk((b, W, h, d)),
+        mk((num_pages, PAGE, kvh, d)), mk((num_pages, PAGE, kvh, d)),
+        jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(wlens),
+    )
+
+
+CASES = [
+    # (rows [(committed, window_len)], W): ragged window lens, page-boundary
+    # straddles (committed % PAGE != 0), fresh-page windows, idle rows
+    ([(13, 4), (7, 2), (0, 0)], 4),
+    ([(15, 3), (8, 1)], 3),            # window opens a brand-new page
+    ([(5, 5), (22, 1), (11, 3)], 5),
+    ([(0, 2)], 2),                     # no committed context at all
+]
+
+
+@pytest.mark.parametrize("rows,W", CASES)
+@pytest.mark.parametrize("window", [None, 5])
+def test_spec_jnp_vs_oracle(rows, W, window):
+    args = _windows(rows, W)
+    a = ref.spec_verify(*args, window=window)
+    f = ops.spec_verify_jnp(*args, window=window)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(f, np.float32), **_tol(jnp.float32)
+    )
+
+
+@pytest.mark.parametrize("rows,W", CASES)
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_spec_vs_oracle(rows, W, window, dtype):
+    args = _windows(rows, W, dtype=dtype)
+    a = ref.spec_verify(*args, window=window)
+    p = pallas_spec(*args, window=window)
+    assert p.dtype == args[0].dtype
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(p, np.float32), **_tol(dtype)
+    )
+
+
+def test_spec_softcap_and_dispatch():
+    args = _windows([(9, 3), (4, 2)], 3)
+    a = ref.spec_verify(*args, softcap=11.0)
+    f = ops.spec_verify(*args, softcap=11.0, backend="flash")
+    p = ops.spec_verify(*args, softcap=11.0, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(f, np.float32), **_tol(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(p, np.float32), **_tol(jnp.float32)
+    )
+
+
+def test_spec_pages_bound_exact():
+    """A pages_bound covering committed + in-flight pages is exact."""
+    args = _windows([(13, 3), (6, 2)], 3)
+    full = pallas_spec(*args)
+    bounded = pallas_spec(*args, pages_bound=2)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(bounded), atol=1e-6)
+    via_ops = ops.spec_verify(*args, backend="flash", pages_bound=2)
+    oracle = ref.spec_verify(*args)
+    np.testing.assert_allclose(
+        np.asarray(oracle, np.float32), np.asarray(via_ops, np.float32),
+        **_tol(jnp.float32),
+    )
+
+
+def test_spec_pad_rows_are_zero():
+    """Window-pad rows and idle slots must come back exactly zero (their
+    logits feed the rest of the packed forward)."""
+    args = _windows([(13, 2), (0, 0)], 4)
+    for out in (ops.spec_verify_jnp(*args), pallas_spec(*args)):
+        o = np.asarray(out)
+        assert np.all(o[0, 2:] == 0.0)      # window pad
+        assert np.all(o[1] == 0.0)          # idle slot
+
+
+def test_spec_matches_sequential_paged_decode():
+    """Verifying a W-token window in one launch must score every position
+    exactly like W sequential one-token paged-decode attention calls."""
+    rows, W = [(13, 4), (7, 3)], 4
+    q, kp, vp, tables, lens, wlens = _windows(rows, W)
+    full = np.asarray(ref.spec_verify(q, kp, vp, tables, lens, wlens))
+    for i, (L, wl) in enumerate(rows):
+        for w in range(wl):
+            one = ref.paged_attention(
+                q[i : i + 1, w : w + 1], kp, vp, tables[i : i + 1],
+                jnp.asarray([L + w + 1], jnp.int32),
+            )
+            np.testing.assert_allclose(
+                full[i, w], np.asarray(one)[0, 0], rtol=2e-6, atol=2e-6
+            )
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup drafter
+# ---------------------------------------------------------------------------
+def test_ngram_propose():
+    ctx = np.array([1, 2, 3, 9, 1, 2, 3, 5, 7, 1, 2, 3], np.int32)
+    # most recent match with a FULL continuation wins: (1,2,3) recurs at
+    # 4..6 (5 continuation tokens) and 0..2 (8); for short drafts the later
+    # match is preferred, longer drafts walk back to the earlier one
+    assert ngram_propose(ctx, 3, 2) == [5, 7]
+    assert ngram_propose(ctx, 3, 5) == [5, 7, 1, 2, 3]
+    assert ngram_propose(ctx, 3, 8) == [9, 1, 2, 3, 5, 7, 1, 2]
+    assert ngram_propose(ctx, 4, 4) == []               # (7,1,2,3) never recurs
+    assert ngram_propose(ctx, 3, 0) == []               # no draft budget
+    assert ngram_propose(ctx[:3], 3, 4) == []           # context too short
+    ctx2 = np.array([2, 3, 8, 2, 3, 6, 2, 3], np.int32)
+    assert ngram_propose(ctx2, 2, 1) == [6]
+    # a short repetition period must not cap the draft: every (4,5) match
+    # near the end has < 4 continuation tokens, the early one has plenty
+    ctx3 = np.array([9, 4, 5, 4, 5, 4, 5, 4, 5], np.int32)
+    assert ngram_propose(ctx3, 2, 4) == [4, 5, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Speculative serving pipeline
+# ---------------------------------------------------------------------------
+def _engine(max_seq=128, num_slots=3):
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(model, params, max_batch=num_slots, max_seq=max_seq)
+
+
+def test_serve_paged_spec_bit_identical():
+    """Greedy tokens with spec_k > 0 are bit-identical to the non-spec paged
+    engine and to serve_continuous — random-init greedy continuations cycle,
+    so prompt-lookup genuinely accepts drafts here (asserted)."""
+    cfg, engine = _engine()
+    rng = np.random.default_rng(7)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32) for n in (5, 9, 7, 4)
+    ]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+        for i, (p, m) in enumerate(zip(prompts, (24, 16, 30, 12)))
+    ]
+    cont = engine.serve_continuous(reqs(), num_slots=2)
+    nonspec = engine.serve_paged(reqs(), num_slots=3, page_size=4,
+                                 prefill_budget=16)
+    spec = engine.serve_paged(reqs(), num_slots=3, page_size=4,
+                              prefill_budget=16, spec_k=3)
+    by_id = {r.request_id: r for r in cont.results}
+    for r in nonspec.results + spec.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    assert spec.spec_k == 3
+    assert spec.spec_stats["draft_accepted"] > 0      # speculation really fired
+    assert spec.steps < nonspec.steps                 # accepted drafts save steps
+    assert nonspec.spec_stats == {}
+    # total emitted tokens are conserved whatever the acceptance pattern
+    assert spec.total_tokens == nonspec.total_tokens
+
+
+def test_serve_paged_spec_rejection_rollback():
+    """Lookup-hostile prompts (tiny alphabet: n-grams always match but
+    continuations disagree) force mid-draft rejections; with page_size=2
+    rejected suffixes straddle page boundaries, so rollback must hand fresh
+    pages back — and tokens still match the non-spec path exactly."""
+    cfg, engine = _engine(max_seq=64)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 4, (12,)).astype(np.int32) for _ in range(3)]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=14)
+        for i, p in enumerate(prompts)
+    ]
+    nonspec = engine.serve_paged(reqs(), num_slots=3, page_size=2,
+                                 prefill_budget=8)
+    spec = engine.serve_paged(reqs(), num_slots=3, page_size=2,
+                              prefill_budget=8, spec_k=3, spec_ngram=1)
+    by_id = {r.request_id: r for r in nonspec.results}
+    for r in spec.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    s = spec.spec_stats
+    assert s["draft_proposed"] > s["draft_accepted"]  # rejections happened
+    assert s["rollback_pages"] > 0                    # a draft opened a page
+    # the page pool is fully reconciled: every request retired cleanly
+    assert spec.peak_pages_in_use <= spec.num_pages
+
+
+def test_serve_paged_spec_preemption_identical_tokens():
+    """Speculation under page pressure (overcommit + preemption + rollback)
+    still produces the continuous engine's exact greedy tokens."""
+    cfg, engine = _engine(max_seq=32)
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32) for n in (9, 8, 7, 5)
+    ]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+        for i, (p, m) in enumerate(zip(prompts, (10, 8, 12, 6)))
+    ]
+    cont = engine.serve_continuous(reqs(), num_slots=2)
+    spec = engine.serve_paged(
+        reqs(), num_slots=3, page_size=4, num_pages=7, prefill_chunk=4,
+        overcommit=10.0, prefill_budget=8, spec_k=3,
+    )
+    assert spec.preemptions > 0
+    by_id = {r.request_id: r for r in cont.results}
+    for r in spec.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+
+
+def test_serve_paged_spec_drafts_never_preempt():
+    """Speculative demand must never evict live work: when the pool can't
+    grow a page for draft tokens, the draft is trimmed to the pages the
+    slot already holds (a draft-driven self-preemption of the only request
+    would otherwise recompute-loop forever).  Exactly-sized pool: the
+    non-spec run never preempts, so the spec run must not either."""
+    cfg, engine = _engine(max_seq=64)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    # pool sized exactly for prompt + generation: num_pages = pages + scratch
+    req = lambda: [ServeRequest(request_id=0, prompt=prompt, max_new_tokens=24)]
+    num_pages = (8 + 24) // 4 + 1
+    base = engine.serve_paged(req(), num_slots=1, page_size=4,
+                              num_pages=num_pages, prefill_budget=8,
+                              overcommit=4.0)
+    assert base.preemptions == 0
+    spec = engine.serve_paged(req(), num_slots=1, page_size=4,
+                              num_pages=num_pages, prefill_budget=8,
+                              overcommit=4.0, spec_k=4)
+    assert spec.preemptions == 0
+    np.testing.assert_array_equal(spec.results[0].tokens, base.results[0].tokens)
+
+
+def test_serve_paged_spec_ledger_accounting():
+    """Per-request counters and the run ledger agree; accepted <= proposed;
+    drafting never overruns a request's token budget."""
+    cfg, engine = _engine()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    budgets = (20, 3, 1)
+    spec = engine.serve_paged(
+        [ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+         for i, (p, m) in enumerate(zip(prompts, budgets))],
+        num_slots=3, page_size=4, prefill_budget=16, spec_k=4,
+    )
+    s = spec.spec_stats
+    assert s["draft_accepted"] <= s["draft_proposed"]
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+    assert s["draft_proposed"] == sum(r.draft_proposed for r in spec.results)
+    assert s["draft_accepted"] == sum(r.draft_accepted for r in spec.results)
+    for r, m in zip(spec.results, budgets):
+        assert len(r.tokens) == m              # acceptance never overshoots
+    # max_new_tokens=1 finishes at prefill: nothing may ever be drafted
+    assert spec.results[2].draft_proposed == 0
+
+
+def test_serve_paged_spec_compile_cap():
+    """One verify variant per (ctx-pages bucket, window) — however ragged
+    the prompts and whatever the acceptance pattern, k is a config knob, not
+    a per-step shape; a warmed second run adds zero variants."""
+    cfg, engine = _engine(max_seq=64, num_slots=4)
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        for n in (3, 11, 17, 6, 9, 14)
+    ]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=24)
+        for i, p in enumerate(prompts)
+    ]
+    first = engine.serve_paged(reqs(), num_slots=4, page_size=4,
+                               prefill_budget=16, spec_k=3)
+    # verify launches are always spec_k+1 wide; draft-free boundaries reuse
+    # the plain fused decode variants; ctx buckets are pow2 (log)
+    max_buckets = 1 + max(64 // 4, 1).bit_length()
+    assert 0 < first.compile_stats["spec_decode"] <= max_buckets
+    assert first.compile_stats["paged_decode"] <= max_buckets
+    second = engine.serve_paged(reqs(), num_slots=4, page_size=4,
+                                prefill_budget=16, spec_k=3)
+    assert second.compile_stats["spec_decode"] == 0
+    assert sum(second.compile_stats.values()) == 0
+
+
+def test_serve_paged_itl_recorded():
+    cfg, engine = _engine()
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+               for _ in range(2)]
+    stats = engine.serve_paged(
+        [ServeRequest(request_id=i, prompt=p, max_new_tokens=6)
+         for i, p in enumerate(prompts)],
+        num_slots=2, page_size=4, prefill_budget=8, spec_k=2,
+    )
+    for r in stats.results:
+        assert r.itl_p99_s >= r.itl_p50_s >= 0.0
+        assert r.itl_p99_s > 0.0               # 6 tokens -> real gaps exist
+    assert stats.itl_p99_ms >= stats.itl_p50_ms > 0.0
+    assert stats.decode_s > 0.0
+
+
+def test_spec_knob_validation():
+    cfg, engine = _engine()
+    req = [ServeRequest(request_id=0,
+                        prompt=np.zeros((4,), np.int32), max_new_tokens=2)]
+    with pytest.raises(ValueError):
+        engine.serve_paged(req, spec_k=-1)
+    with pytest.raises(ValueError):
+        engine.serve_paged(req, spec_k=2, spec_ngram=0)
+
+
+# ---------------------------------------------------------------------------
+# SpecLedger / PageTable.truncate
+# ---------------------------------------------------------------------------
+def test_spec_ledger():
+    l = SpecLedger()
+    l.record(0, 3, 2)
+    l.record(0, 2, 2)
+    l.record(1, 4, 0)
+    l.record_launch(True)
+    l.record_launch(False)
+    l.record_rollback(2)
+    assert l.of(0) == (5, 4)
+    assert l.of(7) == (0, 0)
+    s = l.stats()
+    assert s["draft_proposed"] == 9.0
+    assert s["draft_accepted"] == 4.0
+    assert s["acceptance_rate"] == pytest.approx(4 / 9)
+    assert s["spec_launches"] == 1.0
+    assert s["fallback_steps"] == 1.0
+    assert s["rollback_pages"] == 2.0
+    with pytest.raises(ValueError):
+        l.record(0, 1, 2)                      # accepted > proposed
+    with pytest.raises(ValueError):
+        l.record(0, -1, 0)
+    with pytest.raises(ValueError):
+        l.record_rollback(-1)
+
+
+def test_page_table_truncate():
+    t = PageTable(2, 4, scratch_page=0)
+    t.assign(0, [5, 6, 7])
+    assert t.truncate(0, 3) == []              # nothing past keep
+    assert t.truncate(0, 1) == [6, 7]
+    assert t.pages_of(0) == [5]
+    assert list(t.table[0]) == [5, 0, 0, 0]
+    assert t.truncate(1, 2) == []              # empty slot is a no-op
+    with pytest.raises(ValueError):
+        t.truncate(0, -1)
+
+
+# ---------------------------------------------------------------------------
+# Analysis: acceptance-rate section + ITL summary
+# ---------------------------------------------------------------------------
+def _spec_span(begin, end, **tags):
+    return Span(
+        name="spec:verify", level=TraceLevel.SYSTEM, trace_id="t",
+        begin=begin, end=end, tags=tags,
+    )
+
+
+def test_spec_decode_summary_and_section():
+    spans = [
+        _spec_span(0.0, 0.1, window=4, slots=2, proposed=6, accepted=4, emitted=6),
+        _spec_span(0.2, 0.3, window=4, slots=1, proposed=3, accepted=0, emitted=1),
+        Span(name="pages:occupancy", level=TraceLevel.SYSTEM, trace_id="t"),
+    ]
+    s = spec_decode_summary(spans)
+    assert s["spec_launches"] == 2.0
+    assert s["window"] == 4.0
+    assert s["draft_proposed"] == 9.0
+    assert s["draft_accepted"] == 4.0
+    assert s["acceptance_rate"] == pytest.approx(4 / 9)
+    assert s["emitted_tokens"] == 7.0
+    assert s["mean_tokens_per_launch"] == pytest.approx(7 / 3)
+    assert s["emitted_tokens_per_s"] == pytest.approx(7 / 0.2, rel=1e-6)
+    section = spec_decode_section(spans)
+    assert "acceptance_rate" in section
+    assert spec_decode_section([]) == ""
+
+
+def test_itl_summary():
+    s = itl_summary([0.01, 0.02, 0.03, 0.1])
+    assert s["samples"] == 4.0
+    assert s["itl_p50_ms"] == pytest.approx(20.0)
+    assert s["itl_p99_ms"] == pytest.approx(100.0)
+    assert itl_summary([]) == {}
+
+
+def test_serve_paged_spec_emits_verify_events():
+    from repro.core.tracing import Tracer, TracingServer
+
+    cfg, engine = _engine()
+    rng = np.random.default_rng(19)
+    prompts = [rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+               for _ in range(2)]
+    server = TracingServer()
+    tracer = Tracer("t", server)
+    stats = engine.serve_paged(
+        [ServeRequest(request_id=i, prompt=p, max_new_tokens=16)
+         for i, p in enumerate(prompts)],
+        num_slots=2, page_size=4, prefill_budget=8, spec_k=3, tracer=tracer,
+    )
+    summary = spec_decode_summary(server.timeline("t"))
+    s = stats.spec_stats
+    if s["spec_launches"]:
+        assert summary["spec_launches"] == s["spec_launches"]
+        assert summary["draft_proposed"] == s["draft_proposed"]
+        assert summary["draft_accepted"] == s["draft_accepted"]
+    else:  # pragma: no cover - workload always drafts in practice
+        assert summary == {}
