@@ -20,6 +20,7 @@ BENCHES = [
     ("paged", "benchmarks.bench_paged"),
     ("prefill", "benchmarks.bench_prefill"),
     ("spec", "benchmarks.bench_spec"),
+    ("prefix", "benchmarks.bench_prefix"),
 ]
 
 

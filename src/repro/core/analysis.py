@@ -242,6 +242,68 @@ def spec_decode_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def prefix_cache_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize the automatic prefix cache's trace series.
+
+    The paged engine publishes one ``prefix:lookup`` event per admitted
+    request (tagged ``prompt_tokens`` / ``cached_tokens`` / ``hit_pages`` /
+    ``full_hit``), a ``prefix:cow`` event per copy-on-write page split, and
+    a ``prefix:evict`` event per reclamation of cached-unreferenced pages
+    (tagged ``pages``).  This aggregates them into the serving block of the
+    analysis workflow: the hit rate and saved-token fraction say how much
+    prefill the workload's shared prefixes amortize, COW copies how often
+    shared last pages had to split, and evictions whether the page budget
+    is recycling the cache under pressure."""
+    prompt = 0.0
+    cached = 0.0
+    hit_pages = 0.0
+    lookups = 0
+    hits = 0
+    full_hits = 0
+    cow = 0
+    evicted = 0.0
+    for s in spans:
+        if s.name == "prefix:lookup":
+            lookups += 1
+            p = float(s.tags.get("prompt_tokens", 0))
+            c = float(s.tags.get("cached_tokens", 0))
+            prompt += p
+            cached += c
+            hit_pages += float(s.tags.get("hit_pages", 0))
+            if c > 0:
+                hits += 1
+            if s.tags.get("full_hit"):
+                full_hits += 1
+        elif s.name == "prefix:cow":
+            cow += 1
+        elif s.name == "prefix:evict":
+            evicted += float(s.tags.get("pages", 0))
+    if not lookups and not cow and not evicted:
+        return {}
+    return {
+        "lookups": float(lookups),
+        "hits": float(hits),
+        "full_hits": float(full_hits),
+        "hit_rate": hits / lookups if lookups else 0.0,
+        "hit_pages": hit_pages,
+        "prompt_tokens": prompt,
+        "saved_prefill_tokens": cached,
+        "saved_fraction": cached / prompt if prompt else 0.0,
+        "cow_copies": float(cow),
+        "evicted_pages": evicted,
+    }
+
+
+def prefix_cache_section(spans: Iterable[Span]) -> str:
+    """Render the prefix-cache block as a report section; empty string when
+    no prefix-cached run was traced."""
+    summary = prefix_cache_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def itl_summary(itls_s: Sequence[float]) -> Dict[str, float]:
     """Inter-token latency block: the serving-quality metric the paged
     decode loop optimizes (speculative boundaries emit several tokens at

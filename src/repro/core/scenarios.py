@@ -42,7 +42,13 @@ from ..serve.scheduler import (
 )
 from .analysis import latency_summary, percentile, slo_attainment
 from .tracing import Tracer, TraceLevel
-from .workload import BatchedLoad, PoissonLoad, Request, TraceReplayLoad
+from .workload import (
+    BatchedLoad,
+    PoissonLoad,
+    Request,
+    SharedPrefixLoad,
+    TraceReplayLoad,
+)
 
 
 @dataclass
@@ -58,6 +64,13 @@ class ScenarioSpec:
     arrivals: Optional[List[float]] = None    # trace replay
     seed: int = 0
     slo_ms: float = 100.0           # server scenario p99 latency SLO
+    # shared-prefix request mix (server/trace kinds): prefix_len > 0 swaps
+    # the arrival process for a SharedPrefixLoad whose requests carry the
+    # prompt-composition tags the paged engine's prefix cache feeds on
+    prefix_len: int = 0             # shared-prefix tokens (0 = plain load)
+    prefix_share: float = 0.75      # fraction of requests reusing a prefix
+    prefix_groups: int = 1          # distinct shared prefixes
+    suffix_len: int = 16            # unique tail tokens per request
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -70,6 +83,10 @@ class ScenarioSpec:
             "arrivals": self.arrivals,
             "seed": self.seed,
             "slo_ms": self.slo_ms,
+            "prefix_len": self.prefix_len,
+            "prefix_share": self.prefix_share,
+            "prefix_groups": self.prefix_groups,
+            "suffix_len": self.suffix_len,
         }
 
     @classmethod
@@ -259,13 +276,41 @@ class TraceScenario(Scenario):
             raise ValueError("trace scenario requires arrivals")
         self.warmup(predict, tracer, spec.batch_size)
         sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
-        load = TraceReplayLoad(spec.arrivals, [spec.batch_size] * len(spec.arrivals))
+        tags = None
+        if spec.prefix_len > 0:
+            # replayed traces with shared prompt prefixes: stamp each
+            # replayed request with the composition tags a SharedPrefixLoad
+            # of the same seed would emit, so the trace exercises the
+            # prefix cache exactly like the server mix does
+            tags = [
+                r.tags
+                for r in SharedPrefixLoad(
+                    len(spec.arrivals),
+                    prefix_len=spec.prefix_len,
+                    suffix_len=spec.suffix_len,
+                    share_ratio=spec.prefix_share,
+                    num_groups=spec.prefix_groups,
+                    seed=spec.seed,
+                ).requests()
+            ]
+        load = TraceReplayLoad(
+            spec.arrivals, [spec.batch_size] * len(spec.arrivals), tags=tags
+        )
         with tracer.span("scenario:trace", TraceLevel.MODEL):
             t0 = clock()
             rows = self.closed_loop(list(load.requests()), sched, clock, sleep, t0, True)
         lat = [r["latency_s"] for r in rows]
         metrics = latency_summary(lat)
         metrics.update({"scenario": "trace", "num_requests": len(rows)})
+        if tags is not None:
+            shared = sum(1 for t in tags if t.get("prefix_group", -1) >= 0)
+            metrics.update(
+                {
+                    "prefix_len": spec.prefix_len,
+                    "shared_prefix_requests": shared,
+                    "shared_prefix_fraction": shared / max(len(tags), 1),
+                }
+            )
         return metrics
 
 
@@ -307,11 +352,30 @@ class ServerScenario(Scenario):
         spec = self.spec
         self.warmup(predict, tracer, 1)
         sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
-        load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
+        if spec.prefix_len > 0:
+            # shared-prefix server mix: Poisson arrivals whose requests
+            # carry prompt-composition tags (prefix group / lengths) so the
+            # scheduler path — and the paged engine behind it — sees the
+            # request mix the prefix cache is built for
+            load = SharedPrefixLoad(
+                spec.num_requests,
+                rate_hz=spec.rate_hz,
+                prefix_len=spec.prefix_len,
+                suffix_len=spec.suffix_len,
+                share_ratio=spec.prefix_share,
+                num_groups=spec.prefix_groups,
+                seed=spec.seed,
+            )
+        else:
+            load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
         with tracer.span("scenario:server", TraceLevel.MODEL, rate_hz=spec.rate_hz):
             t0 = clock()
             futs = [
-                sched.submit(batch_size=1, arrival_s=t0 + req.arrival_s)
+                sched.submit(
+                    payload=req.tags or None,
+                    batch_size=1,
+                    arrival_s=t0 + req.arrival_s,
+                )
                 for req in load.requests()
             ]
             sched.run_until_idle()
@@ -336,6 +400,20 @@ class ServerScenario(Scenario):
                 **self.scheduler_metrics(sched),
             }
         )
+        if spec.prefix_len > 0:
+            shared = sum(
+                1
+                for r in reqs
+                if isinstance(r.payload, dict)
+                and r.payload.get("prefix_group", -1) >= 0
+            )
+            metrics.update(
+                {
+                    "prefix_len": spec.prefix_len,
+                    "shared_prefix_requests": shared,
+                    "shared_prefix_fraction": shared / n,
+                }
+            )
         return metrics
 
 

@@ -91,19 +91,115 @@ class SingleStreamLoad(BatchedLoad):
 
 
 class TraceReplayLoad(WorkloadGenerator):
-    """Custom/emerging workloads: replay recorded (arrival, batch) pairs."""
+    """Custom/emerging workloads: replay recorded (arrival, batch) pairs.
+
+    ``tags`` optionally carries per-request metadata recorded with the
+    trace (e.g. the shared-prefix composition of replayed prompts), passed
+    through on each :class:`Request` so scheduler-level scenarios can
+    reconstruct the prompt mix."""
 
     name = "trace"
 
-    def __init__(self, arrivals: List[float], batch_sizes: Optional[List[int]] = None) -> None:
+    def __init__(self, arrivals: List[float], batch_sizes: Optional[List[int]] = None,
+                 tags: Optional[List[Dict[str, object]]] = None) -> None:
         self.arrivals = list(arrivals)
         self.batch_sizes = list(batch_sizes) if batch_sizes else [1] * len(self.arrivals)
         if len(self.batch_sizes) != len(self.arrivals):
             raise ValueError("arrivals and batch_sizes length mismatch")
+        self.tags = list(tags) if tags else None
+        if self.tags is not None and len(self.tags) != len(self.arrivals):
+            raise ValueError("arrivals and tags length mismatch")
 
     def requests(self) -> Iterator[Request]:
         for i, (t, b) in enumerate(zip(self.arrivals, self.batch_sizes)):
-            yield Request(request_id=i, arrival_s=float(t), batch_size=int(b))
+            yield Request(
+                request_id=i, arrival_s=float(t), batch_size=int(b),
+                tags=dict(self.tags[i]) if self.tags else {},
+            )
+
+
+class SharedPrefixLoad(WorkloadGenerator):
+    """Shared-prefix serving mix: the workload the prefix cache eats.
+
+    A configurable fraction (``share_ratio``) of requests reuse one of
+    ``num_groups`` common prompt prefixes of ``prefix_len`` tokens (system
+    prompts / few-shot templates), each followed by a ``suffix_len``-token
+    unique tail; the rest are fully unique prompts of the same total
+    length.  Arrivals are Poisson at ``rate_hz`` (all at t=0 when 0).  The
+    generator emits *composition tags*, not tokens — ``prefix_group`` (-1
+    for unique requests), ``prefix_len`` and ``prompt_len`` — so scheduler-
+    level scenarios measure the mix without a tokenizer, and
+    :func:`shared_prefix_prompts` materializes token arrays for the engine
+    (same-group requests share their first ``prefix_len`` tokens
+    bit-for-bit)."""
+
+    name = "shared_prefix"
+
+    def __init__(self, num_requests: int, rate_hz: float = 0.0,
+                 prefix_len: int = 64, suffix_len: int = 16,
+                 share_ratio: float = 0.75, num_groups: int = 1,
+                 seed: int = 0) -> None:
+        if prefix_len < 0 or suffix_len < 0:
+            raise ValueError("prefix_len and suffix_len must be >= 0")
+        if not 0.0 <= share_ratio <= 1.0:
+            raise ValueError("share_ratio must be in [0, 1]")
+        if num_groups < 1:
+            raise ValueError("num_groups must be >= 1")
+        self.num_requests = num_requests
+        self.rate_hz = rate_hz
+        self.prefix_len = prefix_len
+        self.suffix_len = suffix_len
+        self.share_ratio = share_ratio
+        self.num_groups = num_groups
+        self.seed = seed
+
+    def requests(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed)
+        t = 0.0
+        total = self.prefix_len + self.suffix_len
+        for i in range(self.num_requests):
+            if self.rate_hz > 0:
+                t += float(rng.exponential(1.0 / self.rate_hz))
+            shared = bool(rng.random() < self.share_ratio)
+            group = int(rng.integers(0, self.num_groups)) if shared else -1
+            yield Request(
+                request_id=i,
+                arrival_s=t,
+                batch_size=1,
+                tags={
+                    "prefix_group": group,
+                    "prefix_len": self.prefix_len if shared else 0,
+                    "prompt_len": total,
+                },
+            )
+
+
+def shared_prefix_prompts(
+    requests: List[Request], vocab_size: int, seed: int = 0
+) -> List["np.ndarray"]:
+    """Materialize token arrays for a shared-prefix load: requests tagged
+    with the same ``prefix_group`` (>= 0) share their first ``prefix_len``
+    tokens bit-for-bit (generated once per group from ``seed``); the
+    remainder of every prompt is unique.  The engine-side counterpart of
+    :class:`SharedPrefixLoad` — prompts feed ``serve_paged`` directly."""
+    rng = np.random.default_rng(seed)
+    prefixes: Dict[int, np.ndarray] = {}
+    prompts: List[np.ndarray] = []
+    for req in requests:
+        total = int(req.tags.get("prompt_len", 0))
+        plen = int(req.tags.get("prefix_len", 0))
+        group = int(req.tags.get("prefix_group", -1))
+        if group >= 0 and plen > 0:
+            if group not in prefixes:
+                grng = np.random.default_rng((seed, group))
+                prefixes[group] = grng.integers(
+                    0, vocab_size, (plen,)
+                ).astype(np.int32)
+            tail = rng.integers(0, vocab_size, (total - plen,)).astype(np.int32)
+            prompts.append(np.concatenate([prefixes[group], tail]))
+        else:
+            prompts.append(rng.integers(0, vocab_size, (total,)).astype(np.int32))
+    return prompts
 
 
 _GENERATORS: Dict[str, Callable[..., WorkloadGenerator]] = {
@@ -114,6 +210,8 @@ _GENERATORS: Dict[str, Callable[..., WorkloadGenerator]] = {
     "single_stream": SingleStreamLoad,
     # the server scenario's open-loop arrival process is Poisson
     "server": PoissonLoad,
+    # shared-prefix request mixes (system prompts / few-shot templates)
+    "shared_prefix": SharedPrefixLoad,
 }
 
 

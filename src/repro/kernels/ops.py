@@ -500,6 +500,33 @@ def paged_attention(
 
 
 # ---------------------------------------------------------------------------
+# Page copy (copy-on-write sharing in the paged KV pool)
+# ---------------------------------------------------------------------------
+def copy_pages(
+    k_pages: jnp.ndarray,      # (L, num_pages, page_size, kvh, d)
+    v_pages: jnp.ndarray,
+    src: jnp.ndarray,          # (n,) int32 physical source pages
+    dst: jnp.ndarray,          # (n,) int32 physical destination pages
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-side physical page copy across every layer of the paged KV
+    pool: the copy-on-write primitive behind automatic prefix caching.
+
+    When a request is about to append a token into a page that other
+    holders (the prefix cache / other requests) still reference, the engine
+    first duplicates that page into a private one and remaps the request's
+    page table — committed cache content is never mutated, so greedy tokens
+    stay bit-identical to a cache-off run.  A gather + scatter on the page
+    axis (jit-friendly, donation-safe: callers donate the pools so XLA
+    copies in place)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return (
+        k_pages.at[:, dst].set(k_pages[:, src]),
+        v_pages.at[:, dst].set(v_pages[:, src]),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Speculative-decoding verification (k+1-token windows vs a paged KV pool)
 # ---------------------------------------------------------------------------
 def spec_verify_jnp(

@@ -45,11 +45,12 @@ from ..core.analysis import (
     latency_summary,
     page_occupancy_section,
     prefill_saturation_section,
+    prefix_cache_section,
     spec_decode_section,
 )
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.tracing import Tracer, TracingServer
-from ..core.workload import PoissonLoad
+from ..core.workload import PoissonLoad, SharedPrefixLoad, shared_prefix_prompts
 from ..models import build_model
 from ..serve.engine import ServeRequest, ServingEngine
 from ..serve.scheduler import RequestScheduler, SchedulerConfig
@@ -150,6 +151,7 @@ def _serve_paged(engine, cfg, args, load, prompts):
         prefill_budget=args.prefill_budget or None,
         spec_k=args.spec_k,
         spec_ngram=args.spec_ngram,
+        prefix_cache=args.prefix_cache == "on",
         tracer=tracer,
     )
     for r in stats.results:
@@ -171,6 +173,11 @@ def _serve_paged(engine, cfg, args, load, prompts):
     section = spec_decode_section(server.timeline("serve-paged"))
     if section:
         print("[serve] speculative decoding:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    section = prefix_cache_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] prefix cache:")
         for line in section.splitlines():
             print(f"[serve]   {line}")
     latencies = [r.latency_s for r in stats.results]
@@ -198,8 +205,15 @@ def _serve_paged(engine, cfg, args, load, prompts):
             "itl_p50_ms": stats.itl_p50_ms,
             "itl_p99_ms": stats.itl_p99_ms,
             "spec_k": float(stats.spec_k),
+            "prefix_cache": float(stats.prefix_cache),
+            "prompt_tokens_admitted": float(stats.prompt_tokens_admitted),
+            "saved_prefill_tokens": float(stats.saved_prefill_tokens),
+            "prefill_tokens_dropped": float(stats.prefill_tokens_dropped),
+            "cow_copies": float(stats.cow_copies),
+            "cache_evictions": float(stats.cache_evictions),
             **{f"compiles_{k}": float(v) for k, v in stats.compile_stats.items()},
             **{f"budget_{k}": v for k, v in stats.prefill_budget_stats.items()},
+            **{f"prefix_{k}": v for k, v in stats.prefix_stats.items()},
             **{k: v for k, v in stats.spec_stats.items()},
         }
     )
@@ -244,9 +258,26 @@ def main(argv=None) -> int:
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission overcommit factor (>1 admits past "
                          "worst-case page commitment; preemption is the valve)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="automatic prefix caching (paged engine): share "
+                         "committed KV pages across requests with common "
+                         "prompt prefixes (copy-on-write on append)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix workload: tokens of common prompt "
+                         "prefix (0 = independent random prompts)")
+    ap.add_argument("--prefix-share", type=float, default=0.75,
+                    help="fraction of requests reusing a shared prefix")
+    ap.add_argument("--prefix-groups", type=int, default=1,
+                    help="distinct shared prefixes in the workload")
     ap.add_argument("--evaldb", default="")
     args = ap.parse_args(argv)
 
+    if args.prefix_len > 0 and args.prefix_len >= args.prompt_len:
+        ap.error(
+            f"--prefix-len {args.prefix_len} must be smaller than "
+            f"--prompt-len {args.prompt_len} (the shared prefix is a strict "
+            f"prefix; every prompt keeps a unique tail)"
+        )
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg, backend=args.backend)
     params = model.init(jax.random.PRNGKey(0))
@@ -255,11 +286,25 @@ def main(argv=None) -> int:
         page_size=args.page_size,
     )
     rng = np.random.default_rng(0)
-    load = list(PoissonLoad(args.requests, args.rate_hz, seed=0).requests())
-    prompts = [
-        rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
-        for _ in load
-    ]
+    if args.prefix_len > 0:
+        # shared-prefix serving mix: same-group prompts share their first
+        # prefix_len tokens bit-for-bit — the workload the prefix cache eats
+        load = list(
+            SharedPrefixLoad(
+                args.requests, rate_hz=args.rate_hz,
+                prefix_len=args.prefix_len,
+                suffix_len=args.prompt_len - args.prefix_len,
+                share_ratio=args.prefix_share,
+                num_groups=args.prefix_groups, seed=0,
+            ).requests()
+        )
+        prompts = shared_prefix_prompts(load, cfg.vocab_size, seed=0)
+    else:
+        load = list(PoissonLoad(args.requests, args.rate_hz, seed=0).requests())
+        prompts = [
+            rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
+            for _ in load
+        ]
 
     if args.engine == "continuous":
         summary, generated, wall = _serve_continuous(engine, cfg, args, load, prompts)

@@ -54,9 +54,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.analysis import percentile
+from ..kernels import ops
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
-from .page_table import PagePool, PageTable, pages_needed
+from .page_table import PagePool, PageTable, PrefixCache, pages_needed
 from .scheduler import PagedSlotPool, PrefillBudget, SlotPool, SpecLedger
 
 
@@ -174,10 +175,24 @@ class PagedStats:
     prefill_mode: str = "packed"
     prefill_launches: int = 0   # packed launches (== prefill_chunks if chunked)
     prefill_s: float = 0.0      # wall time spent inside prefill calls
-    prefill_tokens: int = 0     # real prompt tokens prefilled
+    prefill_tokens: int = 0     # real prompt tokens COMPUTED by prefill
     prefill_padded_tokens: int = 0  # packed-buffer slots spent on padding
     prefill_budget: int = 0     # packed-buffer tokens per boundary (0 = chunked)
     prefill_budget_stats: Dict[str, float] = field(default_factory=dict)
+    # -- prompt-token ledger: admitted tokens split exactly into computed
+    # (prefill_tokens above), served from the prefix cache, and abandoned by
+    # preemption before they were ever prefilled.  Invariant (asserted in
+    # tests) over any completed run:
+    #   prompt_tokens_admitted ==
+    #       prefill_tokens + saved_prefill_tokens + prefill_tokens_dropped
+    prompt_tokens_admitted: int = 0   # per admission (re-admissions count again)
+    saved_prefill_tokens: int = 0     # prompt tokens served from cached pages
+    prefill_tokens_dropped: int = 0   # admitted but preempted before prefill
+    # -- automatic prefix caching -------------------------------------------
+    prefix_cache: bool = False
+    cow_copies: int = 0         # shared pages split by copy-on-write
+    cache_evictions: int = 0    # cached-unreferenced pages reclaimed
+    prefix_stats: Dict[str, float] = field(default_factory=dict)
     # -- decode loop / speculative decoding ---------------------------------
     decode_s: float = 0.0       # wall time spent inside decode/verify launches
     spec_k: int = 0             # draft depth (0 = speculation disabled)
@@ -228,6 +243,10 @@ class ServingEngine:
             donate_argnums=(0, 1, 2, 3),
         )
         self._mirror_patch_shapes: set = set()
+        # copy-on-write page duplication (prefix caching): one donated
+        # gather/scatter over the pools per shared page about to be written
+        self._cow_copy = jax.jit(ops.copy_pages, donate_argnums=(0, 1))
+        self._cow_shapes: set = set()
         self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self._packed_prefill_fns: Dict[Tuple[int, int, int, int], Callable] = {}
         self._slot_writers: Dict[int, Callable] = {}
@@ -257,6 +276,7 @@ class ServingEngine:
             "paged_decode": len(self._paged_decode_fns),
             "spec_decode": len(self._spec_decode_fns),
             "mirror_patch": len(self._mirror_patch_shapes),
+            "cow_copy": len(self._cow_shapes),
         }
 
     def _compile_delta(self, before: Dict[str, int]) -> Dict[str, int]:
@@ -635,6 +655,7 @@ class ServingEngine:
         prefill_budget: Optional[int] = None,
         spec_k: int = 0,
         spec_ngram: int = 3,
+        prefix_cache: bool = False,
         clock: Callable[[], float] = time.perf_counter,
         tracer=None,
     ) -> PagedStats:
@@ -677,6 +698,26 @@ class ServingEngine:
         when a rejected draft had opened a fresh page.  Boundaries where no
         slot has a draft fall back to a plain fused decode step, so
         lookup-hostile text pays only the host-side scan.
+
+        ``prefix_cache=True`` turns on automatic prefix caching: every full
+        prompt page a request prefills is registered in a
+        :class:`~repro.serve.page_table.PrefixCache` (hash-chained token
+        blocks -> physical pages), and admission maps the longest cached
+        page-aligned prefix of each new prompt read-only into the slot's
+        table — only the uncached suffix is prefilled (page-aligned, so the
+        packed/chunked pipelines need no new shapes), cached tokens cost
+        the :class:`PrefillBudget` nothing, and the worst-case page
+        commitment counts shared pages ONCE globally, multiplying peak
+        concurrency on shared-prefix workloads.  A full hit (page-aligned
+        prompt entirely cached) skips prefill outright and replays the last
+        prompt token through the decode path — the append into the shared
+        last page copy-on-writes it to a private page first (a device-side
+        page copy), so cached content is never mutated and greedy tokens
+        stay bit-identical to a cache-off run.  Pages released by finished
+        requests stay cached (refcount 1: the cache's own reference) in an
+        LRU tier reclaimed only when admission/growth/COW actually need
+        pages; eviction never touches a referenced page, and preemption
+        still works unchanged (shared pages just drop a reference).
         """
         if prefill_mode not in ("packed", "chunked"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
@@ -723,6 +764,7 @@ class ServingEngine:
                 )
         slots = PagedSlotPool(num_slots, pool, tracer=tracer, clock=clock)
         table = PageTable(num_slots, max_pages_per_seq, scratch_page=0)
+        pcache = PrefixCache(pool) if prefix_cache else None
         cache = self.model.init_paged_cache(
             num_pages, page_size, dtype=self.cache_dtype
         )
@@ -735,6 +777,19 @@ class ServingEngine:
         decoding: set = set()
         admit_order: Dict[int, int] = {}             # slot -> admission sequence
         admit_seq = 0
+        # prefix-cache bookkeeping: per-slot worst-case PRIVATE page
+        # commitment, cached tokens granted at admission, prompt tokens
+        # prefilled this admission, and full-hit slots awaiting their first
+        # decode emission (their TTFT is that boundary, not a prefill)
+        slot_commit: Dict[int, int] = {}
+        slot_cached: Dict[int, int] = {}
+        slot_prefilled: Dict[int, int] = {}
+        replay_first: set = set()
+        # pages slots mapped FROM the cache (not allocated themselves): the
+        # commitment ledger counts each of these once globally, no matter
+        # how many requests share it — the concurrency multiplier
+        pinned_refs: Dict[int, int] = {}             # page -> mapping slots
+        slot_shared: Dict[int, List[int]] = {}       # slot -> acquired pages
         finished: Dict[int, RequestResult] = {}
         t_start = clock()
         submit_s = {r.request_id: t_start for r in requests}
@@ -748,6 +803,10 @@ class ServingEngine:
         prefill_s = 0.0
         prefill_tokens = 0
         prefill_padded = 0
+        prompt_admitted = 0
+        saved_tokens = 0
+        dropped_tokens = 0
+        cow_copies = 0
         decode_s = 0.0
         spec = spec_k > 0
         ledger = SpecLedger() if spec else None
@@ -778,7 +837,10 @@ class ServingEngine:
                 # values, so the patch is idempotent): log2(num_slots)
                 # variants instead of one per distinct dirty count
                 cnt = bucket_pow2(len(stale), cap=num_slots)
-                self._mirror_patch_shapes.add(cnt)
+                # keyed by the full traced shape: a same-engine run with a
+                # different slot count / table width re-traces the patch jit
+                # and must show up in the compile delta
+                self._mirror_patch_shapes.add((num_slots, max_pages_per_seq, cnt))
                 idx = np.fromiter(sorted(stale), np.int32, len(stale))
                 idx = np.concatenate(
                     [idx, np.full((cnt - len(idx),), idx[-1], np.int32)]
@@ -795,14 +857,42 @@ class ServingEngine:
                 cur_mask = new_mask
                 dirty.clear()
 
+        def unpin(slot: int, page: int) -> None:
+            """Drop ``slot``'s record of mapping ``page`` from the cache (the
+            commitment ledger's pinned set must mirror the actual mappings)."""
+            held = slot_shared.get(slot, [])
+            if page in held:
+                held.remove(page)
+                pinned_refs[page] -= 1
+                if not pinned_refs[page]:
+                    del pinned_refs[page]
+
         def release_slot(slot: int, preempted: bool = False):
+            nonlocal dropped_tokens
             req = slots.release_paged(slot, table.clear(slot), preempted=preempted)
+            if preempted:
+                # prompt tokens this admission promised but never prefilled:
+                # the recompute debt the saved-token ledger must stay exact
+                # against (cached grants + computed tokens cover the rest)
+                dropped_tokens += max(
+                    len(req.prompt)
+                    - slot_cached.get(slot, 0)
+                    - slot_prefilled.get(slot, 0),
+                    0,
+                )
             lengths[slot] = 0
             slot_tokens.pop(slot, None)
             slot_times.pop(slot, None)
             prefilling.pop(slot, None)
             decoding.discard(slot)
             admit_order.pop(slot, None)
+            slot_commit.pop(slot, None)
+            slot_cached.pop(slot, None)
+            slot_prefilled.pop(slot, None)
+            replay_first.discard(slot)
+            for p in list(slot_shared.get(slot, [])):
+                unpin(slot, p)
+            slot_shared.pop(slot, None)
             dirty.add(slot)
             return req
 
@@ -816,6 +906,57 @@ class ServingEngine:
             victim = max(admit_order, key=lambda s: admit_order[s])
             queue.appendleft(release_slot(victim, preempted=True))
             return victim
+
+        def ensure_free(n: int) -> bool:
+            """Guarantee ``n`` free pages, reclaiming cached-but-unreferenced
+            pages (LRU, true free) before the caller has to queue or preempt
+            live work — the ONLY path that evicts cache entries (the run's
+            eviction count is the cache's own ``evicted_pages``)."""
+            if pool.num_free >= n:
+                return True
+            if pcache is not None:
+                evicted = pcache.evict(n - pool.num_free)
+                if evicted and tracer is not None:
+                    now = clock()
+                    tracer.event("prefix:evict", now, now, pages=evicted)
+            return pool.num_free >= n
+
+        def cow_if_shared(s: int) -> bool:
+            """Copy-on-write guard before any append at position
+            ``lengths[s]``: if the destination page is still referenced by
+            other holders (the prefix cache / other requests), duplicate it
+            on device into a private page and remap the slot's table —
+            committed cache content is never mutated.  Returns False when
+            no page can be found for the copy (caller preempts)."""
+            nonlocal cache, cow_copies
+            li = int(lengths[s]) // page_size
+            held = table.pages_of(s)
+            if li >= len(held):
+                return True          # append opens a fresh page (growth path)
+            p = held[li]
+            if pool.refcount(p) <= 1:
+                return True          # exclusively ours already
+            if not ensure_free(1):
+                return False
+            fresh = pool.alloc(1)
+            if fresh is None:  # pragma: no cover - guarded by ensure_free
+                return False
+            t0c = clock()
+            cache["k_pages"], cache["v_pages"] = self._cow_copy(
+                cache["k_pages"], cache["v_pages"],
+                np.asarray([p], np.int32), np.asarray([fresh[0]], np.int32),
+            )
+            # pool shapes are per-call arguments: one jit variant per
+            # (pool size, page size) configuration
+            self._cow_shapes.add((num_pages, page_size))
+            table.replace(s, li, fresh[0])
+            pool.free([p])           # drop our reference to the shared page
+            unpin(s, p)              # no longer mapped from the cache
+            cow_copies += 1
+            dirty.add(s)
+            if tracer is not None:
+                tracer.event("prefix:cow", t0c, clock(), slot=s, page=fresh[0])
+            return True
 
         while queue or slots.num_active:
             progressed = False
@@ -852,28 +993,89 @@ class ServingEngine:
                     progressed = True
             # 2) admission keyed on free pages: a request enters only when a
             #    slot AND its prompt's pages are available AND its worst-case
-            #    page commitment fits the (possibly overcommitted) pool
+            #    page commitment fits the (possibly overcommitted) pool.
+            #    With the prefix cache on, the longest cached page-aligned
+            #    prefix is mapped (shared) instead of allocated: only the
+            #    uncached suffix needs fresh pages, the commitment ledger
+            #    counts each shared page ONCE globally (plus one COW page
+            #    for a full hit), and cached-unreferenced pages are evicted
+            #    on demand before admission gives up
             while queue:
                 req0 = queue[0]
-                npages = pool.pages_needed(len(req0.prompt))
+                hit_pages: List[int] = []
+                cached = 0
+                if pcache is not None:
+                    hit_pages, cached = pcache.match(req0.prompt)
+                full_hit = cached >= len(req0.prompt)
+                npages = pool.pages_needed(len(req0.prompt)) - len(hit_pages)
                 worst = pool.pages_needed(len(req0.prompt) + req0.max_new_tokens)
-                committed = sum(
-                    pool.pages_needed(len(r.prompt) + r.max_new_tokens)
-                    for r in slots.active.values()
+                # private worst case: shared pages are not this request's
+                # cost (they're pinned once, below); a full hit will split
+                # its shared last page copy-on-write, so reserve that page
+                commit = worst - len(hit_pages) + (1 if full_hit else 0)
+                # shared pages counted once globally: every page some slot
+                # already mapped from the cache plus the ones THIS admission
+                # would newly pin
+                pinned = len(pinned_refs) + sum(
+                    1 for p in hit_pages if p not in pinned_refs
                 )
-                if not slots.can_admit(npages):
+                committed = sum(slot_commit.values()) + pinned
+                if not slots.num_free:
                     break
-                if committed + worst > pool.capacity * overcommit:
+                if committed + commit > pool.capacity * overcommit:
+                    break
+                # pin the hit pages BEFORE eviction runs: they are exactly
+                # the cached-unreferenced pages ensure_free may reclaim
+                if hit_pages:
+                    pool.incref(hit_pages)
+                if not ensure_free(npages):
+                    if hit_pages:
+                        pool.free(hit_pages)
                     break
                 req = queue.popleft()
+                if pcache is not None:
+                    pcache.record(len(req.prompt), hit_pages)
                 slot, pages = slots.admit_paged(req, npages, step=step)
-                table.assign(slot, pages)
-                lengths[slot] = 0
+                table.assign(slot, hit_pages + pages)
+                for p in hit_pages:
+                    pinned_refs[p] = pinned_refs.get(p, 0) + 1
+                slot_shared[slot] = list(hit_pages)
                 slot_tokens[slot] = []
-                prefilling[slot] = 0
+                slot_commit[slot] = commit
+                slot_prefilled[slot] = 0
+                prompt_admitted += len(req.prompt)
                 admit_order[slot] = admit_seq
                 admit_seq += 1
                 req._admit_step = step              # type: ignore[attr-defined]
+                if full_hit:
+                    # every prompt page is cached: skip prefill entirely and
+                    # replay the last prompt token through the decode path
+                    # (its append copy-on-writes the shared last page); TTFT
+                    # collapses to one decode boundary
+                    slot_cached[slot] = len(req.prompt)
+                    saved_tokens += len(req.prompt)
+                    if budget is not None:
+                        budget.credit(len(req.prompt))
+                    lengths[slot] = len(req.prompt) - 1
+                    nxt[slot] = int(req.prompt[-1])
+                    slot_times[slot] = []
+                    decoding.add(slot)
+                    replay_first.add(slot)
+                    dirty.add(slot)
+                else:
+                    slot_cached[slot] = cached
+                    saved_tokens += cached
+                    if budget is not None and cached:
+                        budget.credit(cached)
+                    lengths[slot] = cached
+                    prefilling[slot] = cached
+                if tracer is not None and pcache is not None:
+                    now = clock()
+                    tracer.event(
+                        "prefix:lookup", now, now,
+                        prompt_tokens=len(req.prompt), cached_tokens=cached,
+                        hit_pages=len(hit_pages), full_hit=int(full_hit),
+                    )
                 progressed = True
             # 3) prefill at the boundary, interleaved with decode.
             #    packed: coalesce every prefilling slot's next span into ONE
@@ -965,9 +1167,12 @@ class ServingEngine:
                         req = slots.active[slot]
                         new_start = start + take
                         lengths[slot] = new_start
+                        slot_prefilled[slot] = slot_prefilled.get(slot, 0) + take
                         chunks_done += 1
                         if new_start >= len(req.prompt):
                             del prefilling[slot]
+                            if pcache is not None:
+                                pcache.insert(req.prompt, table.pages_of(slot))
                             tok0 = int(jnp.argmax(logits[ci]))
                             nxt[slot] = tok0
                             slot_tokens[slot] = [tok0]
@@ -1023,9 +1228,12 @@ class ServingEngine:
                     prefill_padded += c_pad - c
                     start += c
                     lengths[slot] = start
+                    slot_prefilled[slot] = slot_prefilled.get(slot, 0) + c
                     progressed = True
                     if start >= len(req.prompt):
                         del prefilling[slot]
+                        if pcache is not None:
+                            pcache.insert(req.prompt, table.pages_of(slot))
                         tok0 = int(jnp.argmax(logits[0]))
                         nxt[slot] = tok0
                         slot_tokens[slot] = [tok0]
@@ -1062,20 +1270,30 @@ class ServingEngine:
                         drafts[s] = ngram_propose(ctx, spec_ngram, cap)
                     else:
                         drafts[s] = []
-            # grow page tables for rows whose next token (plus any draft
-            # tokens — the verify scatter writes them too) opens a new page;
-            # preempt the youngest request when the pool is dry.  Speculative
-            # demand must never evict live work (or self-preempt into a
-            # recompute loop): when growth fails, first trim the slot's
-            # draft to the pages it already holds — only the REAL next
-            # token's page may preempt, exactly like the non-spec path
+            # copy-on-write, then growth, for every decoding row.  The next
+            # token (plus any draft tokens — the verify scatter writes them
+            # too) appends at ``lengths[s]``: if that position lands in a
+            # page other holders still reference (a full-hit slot's shared
+            # last page), split it into a private copy FIRST; then grow the
+            # table for rows whose window opens a new page.  Both paths
+            # reclaim cached-unreferenced pages before preempting the
+            # youngest request.  Speculative demand must never evict live
+            # work (or self-preempt into a recompute loop): when growth
+            # fails, first trim the slot's draft to the pages it already
+            # holds — only the REAL next token's page may preempt, exactly
+            # like the non-spec path
             for s in sorted(active_dec, key=lambda s: admit_order[s]):
+                while s in decoding and not cow_if_shared(s):
+                    if preempt_one() is None:
+                        raise RuntimeError(
+                            "page pool exhausted with nothing to preempt"
+                        )
                 while (
                     s in decoding   # may have been evicted (even by itself)
                     and table.num_pages_of(s) * page_size
                     <= int(lengths[s]) + len(drafts.get(s, ()))
                 ):
-                    grown = slots.grow(1)
+                    grown = slots.grow(1) if ensure_free(1) else None
                     if grown is None:
                         d = drafts.get(s)
                         if d:
@@ -1138,6 +1356,11 @@ class ServingEngine:
                     nxt[s] = int(emitted[-1])
                     lengths[s] += a + 1
                     slot_times[s].extend([now] * (a + 1))
+                    if s in replay_first:
+                        # full cache hit: the first token came from this
+                        # decode boundary, not from a prefill launch
+                        replay_first.discard(s)
+                        req._ttft_s = now - submit_s[req.request_id]  # type: ignore
                     if spec:
                         prop = len(drafts.get(s, ()))
                         ledger.record(req.request_id, prop, a)
@@ -1198,6 +1421,13 @@ class ServingEngine:
             prefill_padded_tokens=prefill_padded,
             prefill_budget=t_pack if packed else 0,
             prefill_budget_stats=budget.stats() if budget else {},
+            prompt_tokens_admitted=prompt_admitted,
+            saved_prefill_tokens=saved_tokens,
+            prefill_tokens_dropped=dropped_tokens,
+            prefix_cache=prefix_cache,
+            cow_copies=cow_copies,
+            cache_evictions=pcache.evicted_pages if pcache else 0,
+            prefix_stats=pcache.stats() if pcache else {},
             decode_s=decode_s,
             spec_k=spec_k,
             spec_stats=ledger.stats() if ledger else {},

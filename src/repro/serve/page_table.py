@@ -11,14 +11,31 @@ without a model.  The engine owns the actual page tensors.
 Page 0 (more generally, the first ``reserved`` pages) is never allocated:
 idle batch rows point their table entries at it so their masked-out decode
 writes land in a scratch page instead of a live request's memory.
+
+Pages are REFCOUNTED so automatic prefix caching can map one physical page
+into many requests' tables: :class:`PrefixCache` hash-chains full
+``page_size``-token prompt blocks to the physical page that holds their
+K/V, holding one reference of its own per cached page.  A page whose
+refcount drops to the cache's single reference enters the "cached but
+unreferenced" LRU tier — still serving future lookups, reclaimed (true
+free) only when admission or growth actually needs pages.  Correctness
+never depends on cache state: eviction only ever frees unreferenced pages,
+and any write into a page someone else still references is copy-on-write
+at the engine layer.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["PagePool", "PageTable", "pages_needed", "scatter_cache_to_pages"]
+__all__ = [
+    "PagePool",
+    "PageTable",
+    "PrefixCache",
+    "pages_needed",
+    "scatter_cache_to_pages",
+]
 
 
 def pages_needed(tokens: int, page_size: int) -> int:
@@ -58,7 +75,9 @@ def scatter_cache_to_pages(k_cache, v_cache, page_size: int, rng=None):
 
 
 class PagePool:
-    """Free-list allocator over the global KV page pool."""
+    """Free-list allocator over the global KV page pool, with per-page
+    refcounts so prefix caching can share one physical page across many
+    requests (and the cache itself)."""
 
     def __init__(self, num_pages: int, page_size: int, reserved: int = 1) -> None:
         if num_pages <= reserved:
@@ -70,7 +89,7 @@ class PagePool:
         self.reserved = reserved
         # pop() hands out low page ids first
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
-        self._allocated: set = set()
+        self._ref: Dict[int, int] = {}      # page -> reference count (>= 1)
         self.peak_in_use = 0
         self.allocs = 0
         self.frees = 0
@@ -88,29 +107,62 @@ class PagePool:
     def num_in_use(self) -> int:
         return self.capacity - len(self._free)
 
+    @property
+    def num_shared(self) -> int:
+        """Pages referenced more than once (mapped by several requests, or
+        by a request and the prefix cache) — the pages admission must count
+        once globally rather than per request."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    def refcount(self, page: int) -> int:
+        """Current reference count of ``page`` (0 when free)."""
+        return self._ref.get(page, 0)
+
     def pages_needed(self, tokens: int) -> int:
         return pages_needed(tokens, self.page_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Allocate ``n`` pages atomically; None when the pool can't supply
-        all of them (the caller then queues or preempts)."""
+        """Allocate ``n`` pages atomically (each at refcount 1); None when
+        the pool can't supply all of them (the caller then evicts cached
+        pages, queues, or preempts)."""
         if n < 0:
             raise ValueError("cannot allocate a negative page count")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         self.allocs += n
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def incref(self, pages: List[int]) -> None:
+        """Add one reference per page (a request mapping cached pages into
+        its table, or the prefix cache registering a page)."""
         for p in pages:
-            if p not in self._allocated:
+            if p not in self._ref:
+                raise ValueError(f"page {p} is not allocated (incref on free page)")
+            self._ref[p] += 1
+
+    def free(self, pages: List[int]) -> List[int]:
+        """Drop one reference per page; pages whose count reaches zero go
+        back to the free list.  Returns the pages actually released (shared
+        pages survive their other holders).  Freeing an unallocated page —
+        or more times than it was referenced — raises (double-free guard).
+        """
+        released: List[int] = []
+        for p in pages:
+            c = self._ref.get(p, 0)
+            if c <= 0:
                 raise ValueError(f"page {p} is not allocated (double free?)")
-            self._allocated.discard(p)
-            self._free.append(p)
-            self.frees += 1
+            if c == 1:
+                del self._ref[p]
+                self._free.append(p)
+                self.frees += 1
+                released.append(p)
+            else:
+                self._ref[p] = c - 1
+        return released
 
 
 class PageTable:
@@ -150,6 +202,19 @@ class PageTable:
         self.table[slot, len(held)] = page
         held.append(page)
 
+    def replace(self, slot: int, index: int, page: int) -> int:
+        """Swap the physical page behind logical page ``index`` (copy-on-
+        write: the slot is about to append into a shared page, so it remaps
+        that logical page to a private copy).  Returns the old physical
+        page so the caller can drop its reference."""
+        held = self._pages.get(slot, [])
+        if not 0 <= index < len(held):
+            raise ValueError(f"slot {slot} holds no logical page {index}")
+        old = held[index]
+        held[index] = page
+        self.table[slot, index] = page
+        return old
+
     def truncate(self, slot: int, keep: int) -> List[int]:
         """Drop every page past the first ``keep`` (speculative-decoding
         rollback: a rejected draft suffix may have opened a fresh page past
@@ -177,3 +242,186 @@ class PageTable:
         (idle/prefilling rows must not let the batched decode write into
         their live pages)."""
         return np.where(mask[:, None], self.table, np.int32(self.scratch_page))
+
+
+class _CacheEntry:
+    """One cached full prompt page: the physical page holding the K/V of a
+    ``page_size``-token block reached through a specific prefix chain."""
+
+    __slots__ = ("page", "parent", "children", "last_use")
+
+    def __init__(self, page: int, parent: Optional[tuple], last_use: int) -> None:
+        self.page = page
+        self.parent = parent        # key of the previous block in the chain
+        self.children = 0           # cached blocks extending this prefix
+        self.last_use = last_use
+
+
+class PrefixCache:
+    """Automatic prefix cache: hash-chain of full prompt pages -> physical
+    page ids, sharing committed K/V across requests.
+
+    Keys chain ``(parent_key, token_block_bytes)`` so a cached page is only
+    ever reachable through the exact token prefix that produced it — two
+    prompts share page ``i`` iff their first ``(i + 1) * page_size`` tokens
+    are identical.  The cache holds ONE pool reference per cached page, so
+    a page shared by the cache and ``r`` requests has refcount ``r + 1``;
+    when every request releases, the page (refcount 1) sits in the "cached
+    but unreferenced" LRU tier until :meth:`evict` reclaims it on demand.
+
+    Eviction is leaf-first in LRU order and can only ever free unreferenced
+    pages: a referenced child implies a referenced parent (requests always
+    map a cached run from block 0), so the unreferenced entries form a
+    subtree-closed set that leaf-first eviction fully drains — ``evictable``
+    counts them all.  Only full prompt pages are ever cached; partially
+    filled last pages stay private to their request.
+    """
+
+    def __init__(self, pool: PagePool) -> None:
+        self.pool = pool
+        self._entries: Dict[tuple, _CacheEntry] = {}
+        self._tick = 0
+        # counters (surface through stats() -> PagedStats.prefix_stats)
+        self.lookups = 0
+        self.hits = 0
+        self.full_hits = 0
+        self.hit_pages = 0
+        self.hit_tokens = 0
+        self.inserts = 0
+        self.evicted_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def evictable(self) -> int:
+        """Cached pages reclaimable on demand (refcount 1: no request maps
+        them).  Leaf-first eviction reaches every one of them."""
+        return sum(
+            1 for e in self._entries.values() if self.pool.refcount(e.page) == 1
+        )
+
+    def _blocks(self, prompt: np.ndarray):
+        ps = self.pool.page_size
+        toks = np.asarray(prompt, np.int32)
+        for i in range(len(toks) // ps):
+            yield toks[i * ps : (i + 1) * ps].tobytes()
+
+    def match(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """Longest cached page-aligned prefix of ``prompt``: returns the
+        physical pages (block 0 first) and the token count they cover.
+        Bumps recency but records no hit/miss counters — an admission
+        *probe*; the caller increfs the pages it actually maps and calls
+        :meth:`record` once the request really enters (a queued request is
+        re-probed every boundary and must not inflate the hit rate).  A
+        hit run covering the whole (page-aligned) prompt is a *full hit*:
+        the engine skips prefill entirely and replays the last prompt
+        token through the decode path (copy-on-write splits the shared
+        last page)."""
+        self._tick += 1
+        pages: List[int] = []
+        parent: Optional[tuple] = None
+        for blk in self._blocks(prompt):
+            key = (parent, blk)
+            e = self._entries.get(key)
+            if e is None:
+                break
+            e.last_use = self._tick
+            pages.append(e.page)
+            parent = key
+        return pages, len(pages) * self.pool.page_size
+
+    def record(self, prompt_tokens: int, pages: List[int]) -> None:
+        """Count one admitted request's lookup outcome (hit-rate / saved-
+        token accounting)."""
+        self.lookups += 1
+        if pages:
+            cached = len(pages) * self.pool.page_size
+            self.hits += 1
+            self.hit_pages += len(pages)
+            self.hit_tokens += cached
+            if cached >= prompt_tokens:
+                self.full_hits += 1
+
+    def lookup(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """:meth:`match` + :meth:`record` in one call (the non-probing
+        form)."""
+        pages, cached = self.match(prompt)
+        self.record(len(np.asarray(prompt)), pages)
+        return pages, cached
+
+    def insert(self, prompt: np.ndarray, slot_pages: List[int]) -> int:
+        """Register a just-prefilled request's full prompt pages.  Blocks
+        already cached (under any physical page) are left alone — first
+        writer wins, the newcomer keeps its private copy; each newly cached
+        page gains the cache's own reference.  Returns pages added."""
+        self._tick += 1
+        parent: Optional[tuple] = None
+        added = 0
+        for i, blk in enumerate(self._blocks(prompt)):
+            key = (parent, blk)
+            e = self._entries.get(key)
+            if e is None:
+                page = slot_pages[i]
+                self.pool.incref([page])
+                e = _CacheEntry(page, parent, self._tick)
+                self._entries[key] = e
+                if parent is not None:
+                    self._entries[parent].children += 1
+                added += 1
+            else:
+                e.last_use = self._tick
+            parent = key
+        self.inserts += added
+        return added
+
+    def evict(self, need: int) -> int:
+        """Reclaim up to ``need`` cached-but-unreferenced pages (true free:
+        the pages return to the pool's free list), least recently used
+        leaves first.  Referenced pages are never touched.  Returns the
+        number of pages actually freed."""
+        freed = 0
+        while freed < need:
+            # one LRU-sorted pass over the unreferenced tier (leaves are
+            # checked live, so a chain drains within the pass); evicting a
+            # leaf exposes its parent, which an older ``last_use`` may have
+            # placed earlier in the order — repeat until dry or satisfied
+            candidates = sorted(
+                (
+                    (key, e)
+                    for key, e in self._entries.items()
+                    if self.pool.refcount(e.page) == 1
+                ),
+                key=lambda kv: kv[1].last_use,
+            )
+            progressed = False
+            for key, e in candidates:
+                if freed >= need:
+                    break
+                if e.children:
+                    continue
+                del self._entries[key]
+                if e.parent is not None:
+                    self._entries[e.parent].children -= 1
+                self.pool.free([e.page])
+                freed += 1
+                progressed = True
+            if not progressed:
+                break
+        self.evicted_pages += freed
+        return freed
+
+    def stats(self) -> Dict[str, float]:
+        """Scalar summary of the cache economy over one run."""
+        return {
+            "lookups": float(self.lookups),
+            "hits": float(self.hits),
+            "full_hits": float(self.full_hits),
+            "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
+            "hit_pages": float(self.hit_pages),
+            "hit_tokens": float(self.hit_tokens),
+            "inserts": float(self.inserts),
+            "evicted_pages": float(self.evicted_pages),
+            "cached_pages": float(len(self._entries)),
+            "unreferenced_pages": float(self.evictable),
+        }

@@ -67,6 +67,7 @@ class SchedulerConfig:
     prefill_budget: int = 0        # packed-prefill tokens per boundary (0 = default)
     spec_k: int = 0                # speculative draft depth (0 = disabled)
     spec_ngram: int = 3            # prompt-lookup n-gram match length
+    prefix_cache: bool = False     # automatic prefix caching (paged engine)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -80,6 +81,7 @@ class SchedulerConfig:
             "prefill_budget": self.prefill_budget,
             "spec_k": self.spec_k,
             "spec_ngram": self.spec_ngram,
+            "prefix_cache": self.prefix_cache,
         }
 
     @classmethod
@@ -465,6 +467,7 @@ class PrefillBudget:
         self.steps = 0
         self.requested_total = 0
         self.granted_total = 0
+        self.cached_total = 0
         self._remaining = 0
         # (step_index, granted_this_step) samples, one per begin_step window
         self.granted_series: List[tuple] = []
@@ -500,6 +503,15 @@ class PrefillBudget:
             raise ValueError("cannot defer a negative token count")
         self.requested_total += tokens
 
+    def credit(self, tokens: int) -> None:
+        """Record prompt tokens served straight from the prefix cache: they
+        enter the system but are ZERO-COST to the ledger — never requested,
+        never granted, never starving anyone — so a cache-heavy boundary
+        keeps its whole budget for the uncached suffixes."""
+        if tokens < 0:
+            raise ValueError("cannot credit a negative token count")
+        self.cached_total += tokens
+
     def stats(self) -> Dict[str, float]:
         """Scalar summary: how saturated the per-boundary budget ran."""
         cap = self.steps * self.tokens_per_step
@@ -508,6 +520,7 @@ class PrefillBudget:
             "tokens_per_step": float(self.tokens_per_step),
             "granted_tokens": float(self.granted_total),
             "requested_tokens": float(self.requested_total),
+            "cached_tokens": float(self.cached_total),
             "budget_utilization": self.granted_total / cap if cap else 0.0,
             "starved_tokens": float(self.requested_total - self.granted_total),
         }

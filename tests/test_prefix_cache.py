@@ -1,0 +1,424 @@
+"""Automatic prefix caching: refcounted page-pool invariants, the
+hash-chained PrefixCache (lookup/insert/LRU eviction, never reclaiming a
+referenced page), copy-on-write before any append into a shared page,
+greedy bit-identity of ``prefix_cache=on`` vs ``off`` across packed/chunked
+prefill and spec_k > 0 (incl. preemption of cache-hit requests), the exact
+admitted = computed + saved + dropped prompt-token ledger, shared-prefix
+workload generators, and the prefix-cache analysis section."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analysis import prefix_cache_section, prefix_cache_summary
+from repro.core.tracing import Span, Tracer, TraceLevel, TracingServer
+from repro.core.workload import (
+    SharedPrefixLoad,
+    make_generator,
+    shared_prefix_prompts,
+)
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine
+from repro.serve.page_table import PagePool, PageTable, PrefixCache
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcounts
+# ---------------------------------------------------------------------------
+def test_pool_refcount_alloc_incref_free():
+    pool = PagePool(num_pages=8, page_size=4)
+    pages = pool.alloc(3)
+    assert all(pool.refcount(p) == 1 for p in pages)
+    pool.incref(pages[:2])
+    assert pool.refcount(pages[0]) == 2 and pool.refcount(pages[2]) == 1
+    assert pool.num_shared == 2
+    # first free of a shared page only drops the count — nothing released
+    released = pool.free(pages[:2])
+    assert released == []
+    assert pool.num_in_use == 3 and pool.num_shared == 0
+    # second free really releases
+    released = pool.free(pages)
+    assert sorted(released) == sorted(pages)
+    assert pool.num_free == pool.capacity
+
+
+def test_pool_double_free_guard_is_refcount_aware():
+    pool = PagePool(num_pages=6, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.incref([p])
+    pool.free([p])
+    pool.free([p])              # second reference: legitimate
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([p])          # third: one more than ever referenced
+    with pytest.raises(ValueError, match="incref on free page"):
+        pool.incref([p])
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.free([99])
+
+
+def test_page_table_replace_remaps_one_logical_page():
+    table = PageTable(num_slots=2, max_pages=4)
+    table.assign(0, [5, 6, 7])
+    old = table.replace(0, 1, 9)
+    assert old == 6
+    assert table.pages_of(0) == [5, 9, 7]
+    assert table.table[0, 1] == 9
+    with pytest.raises(ValueError, match="no logical page"):
+        table.replace(0, 3, 2)
+
+
+def test_truncate_on_shared_pages_keeps_other_holders():
+    """Spec-decode rollback on a slot holding cache-shared pages: the
+    truncated pages drop only this holder's reference — the cache (or
+    another request) keeps the page alive."""
+    pool = PagePool(num_pages=8, page_size=4)
+    table = PageTable(num_slots=1, max_pages=4)
+    pages = pool.alloc(3)
+    pool.incref(pages[2:])              # someone else also maps the last page
+    table.assign(0, pages)
+    freed = table.truncate(0, 2)
+    assert freed == [pages[2]]
+    assert pool.free(freed) == []       # shared: not actually released
+    assert pool.refcount(pages[2]) == 1
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache
+# ---------------------------------------------------------------------------
+def _prompt(*blocks):
+    return np.concatenate([np.asarray(b, np.int32) for b in blocks])
+
+
+def test_prefix_cache_lookup_longest_chain():
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    b0, b1, b2 = [1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12]
+    pages = pool.alloc(3)
+    cache.insert(_prompt(b0, b1, b2), pages)
+    assert all(pool.refcount(p) == 2 for p in pages)   # cache's own refs
+
+    hit, cached = cache.lookup(_prompt(b0, b1, [9, 9, 9, 9], [1]))
+    assert hit == pages[:2] and cached == 8            # diverges at block 2
+    hit, cached = cache.lookup(_prompt(b0, b1, b2))
+    assert hit == pages and cached == 12               # full page-aligned hit
+    hit, cached = cache.lookup(_prompt([7, 7, 7, 7]))
+    assert hit == [] and cached == 0                   # content-keyed: no hit
+    # a matching block NOT reached through the chain is invisible
+    hit, cached = cache.lookup(_prompt(b1, b2))
+    assert hit == []
+    # partial last pages are never cached
+    hit, cached = cache.lookup(_prompt(b0, [5, 6]))
+    assert hit == pages[:1] and cached == 4
+    s = cache.stats()
+    assert s["lookups"] == 5.0 and s["hits"] == 3.0 and s["full_hits"] == 1.0
+
+
+def test_prefix_cache_eviction_lru_leaf_first_never_referenced():
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    b0, b1 = [1, 2, 3, 4], [5, 6, 7, 8]
+    c0, c1 = [9, 9, 9, 9], [8, 8, 8, 8]
+    chain_a = pool.alloc(2)
+    chain_b = pool.alloc(2)
+    cache.insert(_prompt(b0, b1), chain_a)
+    cache.insert(_prompt(c0, c1), chain_b)
+    pool.free(chain_a)                  # requests release: cache-only refs
+    pool.free(chain_b)
+    assert cache.evictable == 4
+    cache.lookup(_prompt(b0, b1))       # chain A is now most recent
+    # leaf-first in LRU order: chain B's leaf goes before its root, and all
+    # of B goes before any of A
+    assert cache.evict(1) == 1
+    assert pool.refcount(chain_b[1]) == 0
+    assert pool.refcount(chain_b[0]) == 1
+    assert cache.evict(10) == 3          # drains B root then A leaf-first
+    assert len(cache) == 0 and pool.num_free == pool.capacity
+
+
+def test_prefix_cache_eviction_skips_referenced_pages():
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    b0, b1 = [1, 2, 3, 4], [5, 6, 7, 8]
+    pages = pool.alloc(2)
+    cache.insert(_prompt(b0, b1), pages)
+    # a request still maps both pages: nothing is evictable
+    assert cache.evictable == 0
+    assert cache.evict(5) == 0
+    assert pool.refcount(pages[0]) == 2
+    pool.free(pages)                    # request releases
+    assert cache.evict(5) == 2
+    assert cache.stats()["evicted_pages"] == 2.0
+
+
+def test_prefix_cache_insert_is_first_writer_wins():
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    b0 = [1, 2, 3, 4]
+    first = pool.alloc(1)
+    second = pool.alloc(1)
+    assert cache.insert(_prompt(b0), first) == 1
+    assert cache.insert(_prompt(b0), second) == 0      # duplicate content
+    hit, _ = cache.lookup(_prompt(b0))
+    assert hit == first
+    assert pool.refcount(second[0]) == 1               # newcomer stays private
+
+
+# ---------------------------------------------------------------------------
+# Serving pipeline: bit-identity, COW, eviction, preemption, ledger
+# ---------------------------------------------------------------------------
+def _engine(max_seq=96, num_slots=4):
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(model, params, max_batch=num_slots, max_seq=max_seq)
+
+
+def _shared_reqs(cfg, rng, page=8, n=8, gen=5):
+    """Mixed workload: shared 3-page prefix + unique tails, plus verbatim
+    page-aligned repeats (full hits -> COW)."""
+    prefix = rng.integers(0, cfg.vocab_size, (3 * page,)).astype(np.int32)
+    prompts = []
+    for i in range(n):
+        if i % 3 == 2:
+            prompts.append(prefix.copy())
+        else:
+            tail = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+            prompts.append(np.concatenate([prefix, tail]))
+    return lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=gen)
+        for i, p in enumerate(prompts)
+    ]
+
+
+def _ledger_exact(stats):
+    assert stats.prompt_tokens_admitted == (
+        stats.prefill_tokens + stats.saved_prefill_tokens
+        + stats.prefill_tokens_dropped
+    )
+
+
+@pytest.mark.parametrize("prefill_mode", ["packed", "chunked"])
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_prefix_cache_bit_identical(prefill_mode, spec_k):
+    """Greedy tokens with the cache on are bit-identical to cache-off in
+    every prefill pipeline, with and without speculative decoding — and the
+    cache genuinely fires (hits, full hits and COW copies all non-zero)."""
+    cfg, engine = _engine()
+    reqs = _shared_reqs(cfg, np.random.default_rng(11))
+    kw = dict(num_slots=4, page_size=8, prefill_mode=prefill_mode,
+              spec_k=spec_k, prefill_chunk=16, prefill_budget=32)
+    off = engine.serve_paged(reqs(), **kw)
+    on = engine.serve_paged(reqs(), prefix_cache=True, **kw)
+    by_id = {r.request_id: r for r in off.results}
+    for r in on.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    assert on.prefix_cache and not off.prefix_cache
+    assert on.prefix_stats["hits"] > 0
+    assert on.prefix_stats["full_hits"] > 0
+    assert on.cow_copies > 0                 # full hits split their last page
+    assert on.saved_prefill_tokens > 0
+    assert on.prefill_tokens < off.prefill_tokens
+    _ledger_exact(on)
+    _ledger_exact(off)
+    assert off.saved_prefill_tokens == 0
+    assert off.prefix_stats == {}
+
+
+def test_prefix_cache_accounting_and_budget_credit():
+    """Cached tokens are zero-cost to the PrefillBudget ledger (credited,
+    never granted) and the saved-token split is exact per path: computed +
+    saved covers every admitted prompt token."""
+    cfg, engine = _engine()
+    reqs = _shared_reqs(cfg, np.random.default_rng(3))
+    on = engine.serve_paged(reqs(), num_slots=4, page_size=8,
+                            prefill_budget=32, prefix_cache=True)
+    _ledger_exact(on)
+    assert on.prefill_tokens_dropped == 0    # no preemption here
+    b = on.prefill_budget_stats
+    # every cache-served prompt token — partial-hit prefixes and full-hit
+    # decode replays alike — is credited to the budget as zero-cost
+    assert b["cached_tokens"] == on.saved_prefill_tokens > 0
+    assert b["granted_tokens"] == on.prefill_tokens
+    # saved tokens really skipped compute: granted + saved == admitted
+    assert b["granted_tokens"] + on.saved_prefill_tokens == \
+        on.prompt_tokens_admitted
+
+
+def test_prefix_cache_ttft_collapses_on_full_hit():
+    """A full hit skips prefill outright: its TTFT is a decode boundary,
+    and the request's first token still matches the cache-off run."""
+    cfg, engine = _engine()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=prompt.copy(), max_new_tokens=4)
+        for i in range(3)
+    ]
+    # one slot: requests run strictly one after another, so the second and
+    # third fully hit the first's cached pages
+    kw = dict(num_slots=1, page_size=8)
+    off = engine.serve_paged(reqs(), **kw)
+    on = engine.serve_paged(reqs(), prefix_cache=True, **kw)
+    by_id = {r.request_id: r for r in off.results}
+    for r in on.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    assert on.prefix_stats["full_hits"] == 2.0
+    assert on.cow_copies == 2
+    assert on.prefill_tokens == 16           # only the first request prefills
+    _ledger_exact(on)
+
+
+def test_prefix_cache_eviction_under_pressure_never_referenced():
+    """A pool too small to cache every distinct prompt forces LRU eviction
+    (true frees) — admission recycles cached-unreferenced pages instead of
+    failing, tokens stay correct, and the pool reconciles exactly."""
+    cfg, engine = _engine(max_seq=64)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, (24,)).astype(np.int32)
+               for _ in range(6)]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=4)
+        for i, p in enumerate(prompts)
+    ]
+    # 13 usable pages; each distinct request needs 4 — the cache fills after
+    # ~3 requests and later admissions must evict stale entries
+    kw = dict(num_slots=2, page_size=8, num_pages=14)
+    off = engine.serve_paged(reqs(), **kw)
+    on = engine.serve_paged(reqs(), prefix_cache=True, **kw)
+    by_id = {r.request_id: r for r in off.results}
+    for r in on.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    assert on.cache_evictions > 0
+    assert on.prefix_stats["evicted_pages"] == float(on.cache_evictions)
+    assert on.peak_pages_in_use <= on.num_pages
+    _ledger_exact(on)
+
+
+def test_prefix_cache_preemption_of_hit_request():
+    """Preempting a request that was admitted on a cache hit releases its
+    shared references (never double-frees), and the recompute-style restart
+    re-hits the cache — greedy tokens still match the cache-off run and the
+    dropped-token ledger stays exact."""
+    cfg, engine = _engine(max_seq=48)
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [
+        np.concatenate([prefix, rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)])
+        for _ in range(4)
+    ]
+    reqs = lambda: [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+        for i, (p, m) in enumerate(zip(prompts, (10, 8, 12, 6)))
+    ]
+    kw = dict(num_slots=3, page_size=4, num_pages=13, overcommit=10.0,
+              prefill_budget=8)
+    off = engine.serve_paged(reqs(), **kw)
+    on = engine.serve_paged(reqs(), prefix_cache=True, **kw)
+    assert on.preemptions > 0
+    by_id = {r.request_id: r for r in off.results}
+    for r in on.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+    _ledger_exact(on)
+    _ledger_exact(off)
+
+
+def test_cache_off_ledger_exact_under_preemption():
+    """The counter split is exact with the cache off too: every admitted
+    prompt token is either computed or dropped by preemption (saved == 0)."""
+    cfg, engine = _engine(max_seq=32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (9, 8, 7, 5)]
+    reqs = [ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(zip(prompts, (10, 8, 12, 6)))]
+    stats = engine.serve_paged(reqs, num_slots=3, page_size=4, num_pages=7,
+                               prefill_chunk=4, overcommit=10.0)
+    assert stats.preemptions > 0
+    assert stats.saved_prefill_tokens == 0
+    assert stats.prompt_tokens_admitted > sum(len(p) for p in prompts)
+    _ledger_exact(stats)
+
+
+def test_prefix_cache_emits_trace_events():
+    cfg, engine = _engine()
+    reqs = _shared_reqs(cfg, np.random.default_rng(11), n=6)
+    server = TracingServer()
+    tracer = Tracer("t", server)
+    stats = engine.serve_paged(reqs(), num_slots=2, page_size=8,
+                               prefix_cache=True, tracer=tracer)
+    summary = prefix_cache_summary(server.timeline("t"))
+    assert summary["lookups"] == stats.prefix_stats["lookups"]
+    assert summary["hits"] == stats.prefix_stats["hits"]
+    assert summary["saved_prefill_tokens"] == float(stats.saved_prefill_tokens)
+    assert summary["cow_copies"] == float(stats.cow_copies)
+
+
+# ---------------------------------------------------------------------------
+# Analysis section
+# ---------------------------------------------------------------------------
+def _lookup_span(**tags):
+    return Span(name="prefix:lookup", level=TraceLevel.SYSTEM, trace_id="t",
+                tags=tags)
+
+
+def test_prefix_cache_summary_and_section():
+    spans = [
+        _lookup_span(prompt_tokens=40, cached_tokens=32, hit_pages=4, full_hit=0),
+        _lookup_span(prompt_tokens=32, cached_tokens=32, hit_pages=4, full_hit=1),
+        _lookup_span(prompt_tokens=40, cached_tokens=0, hit_pages=0, full_hit=0),
+        Span(name="prefix:cow", level=TraceLevel.SYSTEM, trace_id="t"),
+        Span(name="prefix:evict", level=TraceLevel.SYSTEM, trace_id="t",
+             tags={"pages": 3}),
+    ]
+    s = prefix_cache_summary(spans)
+    assert s["lookups"] == 3.0 and s["hits"] == 2.0 and s["full_hits"] == 1.0
+    assert s["hit_rate"] == pytest.approx(2 / 3)
+    assert s["saved_prefill_tokens"] == 64.0
+    assert s["saved_fraction"] == pytest.approx(64 / 112)
+    assert s["cow_copies"] == 1.0 and s["evicted_pages"] == 3.0
+    section = prefix_cache_section(spans)
+    assert "hit_rate" in section and "saved_prefill_tokens" in section
+    assert prefix_cache_section([]) == ""
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix workload generators
+# ---------------------------------------------------------------------------
+def test_shared_prefix_load_tags_and_registry():
+    load = make_generator("shared_prefix", num_requests=40, prefix_len=32,
+                          suffix_len=8, share_ratio=0.7, num_groups=2, seed=0)
+    assert isinstance(load, SharedPrefixLoad)
+    reqs = list(load.requests())
+    assert len(reqs) == 40
+    shared = [r for r in reqs if r.tags["prefix_group"] >= 0]
+    unique = [r for r in reqs if r.tags["prefix_group"] < 0]
+    assert shared and unique
+    assert 0.4 <= len(shared) / len(reqs) <= 0.95
+    assert all(r.tags["prefix_len"] == 32 for r in shared)
+    assert all(r.tags["prefix_len"] == 0 for r in unique)
+    assert all(r.tags["prompt_len"] == 40 for r in reqs)
+    assert all(r.tags["prefix_group"] in (0, 1) for r in shared)
+    # same seed -> same mix
+    again = list(SharedPrefixLoad(40, prefix_len=32, suffix_len=8,
+                                  share_ratio=0.7, num_groups=2, seed=0).requests())
+    assert [r.tags for r in again] == [r.tags for r in reqs]
+
+
+def test_shared_prefix_prompts_share_tokens_bit_for_bit():
+    load = SharedPrefixLoad(24, prefix_len=16, suffix_len=4, share_ratio=0.8,
+                            num_groups=2, seed=1)
+    reqs = list(load.requests())
+    prompts = shared_prefix_prompts(reqs, vocab_size=1000, seed=1)
+    assert all(len(p) == 20 for p in prompts)
+    by_group = {}
+    for r, p in zip(reqs, prompts):
+        g = r.tags["prefix_group"]
+        if g >= 0:
+            by_group.setdefault(g, []).append(p)
+    for g, ps in by_group.items():
+        for p in ps[1:]:
+            np.testing.assert_array_equal(p[:16], ps[0][:16])
+    assert len(by_group) == 2
+    # distinct groups do NOT share their prefix
+    g0, g1 = by_group[0][0], by_group[1][0]
+    assert not np.array_equal(g0[:16], g1[:16])

@@ -341,3 +341,48 @@ def test_slo_attainment_helper():
     out = slo_attainment([0.01, 0.02, 0.05], slo_ms=25.0)
     assert out["slo_violations"] == 1.0
     assert out["slo_attainment"] == pytest.approx(2.0 / 3.0)
+
+
+def test_server_scenario_shared_prefix_mix():
+    """prefix_len > 0 swaps the server arrival process for a shared-prefix
+    mix: submitted requests carry prompt-composition tags (group / prefix
+    length) through the scheduler, the metrics report the realized share,
+    and the trace kind stamps the same mix onto replayed arrivals."""
+    vt = VirtualTime()
+
+    def predict(bs):
+        vt.t += 0.001
+
+    spec = ScenarioSpec(
+        kind="server", num_requests=24, rate_hz=100.0, warmup=0, seed=0,
+        prefix_len=32, prefix_share=0.75, prefix_groups=2, suffix_len=8,
+    )
+    m = run_scenario(
+        spec, predict, NullTracer(), clock=vt.clock, sleep=vt.sleep,
+        scheduler=SchedulerConfig(max_batch=4, batch_timeout_ms=2.0),
+    )
+    assert m["scenario"] == "server"
+    assert m["prefix_len"] == 32
+    assert m["shared_prefix_requests"] > 0
+    assert 0.5 <= m["shared_prefix_fraction"] <= 1.0
+    assert m["sched_completed"] == 24.0
+
+    # the trace kind replays recorded arrivals with the same composition
+    vt2 = VirtualTime()
+    spec_tr = ScenarioSpec(
+        kind="trace", num_requests=10, warmup=0, seed=0,
+        arrivals=[i * 0.01 for i in range(10)],
+        prefix_len=16, prefix_share=0.5, prefix_groups=1,
+    )
+    m2 = run_scenario(spec_tr, predict, NullTracer(), clock=vt2.clock,
+                      sleep=vt2.sleep)
+    assert m2["scenario"] == "trace"
+    assert m2["prefix_len"] == 16
+    assert 0 <= m2["shared_prefix_requests"] <= 10
+    assert m2["num_requests"] == 10
+
+
+def test_prefix_cache_scheduler_config_roundtrip():
+    cfg = SchedulerConfig(prefix_cache=True)
+    assert SchedulerConfig.from_dict(cfg.to_dict()).prefix_cache is True
+    assert SchedulerConfig.from_dict({"max_batch": 2}).prefix_cache is False
