@@ -21,6 +21,7 @@ BENCHES = [
     ("prefill", "benchmarks.bench_prefill"),
     ("spec", "benchmarks.bench_spec"),
     ("prefix", "benchmarks.bench_prefix"),
+    ("tp", "benchmarks.bench_tp"),
 ]
 
 

@@ -30,6 +30,36 @@ def _soft_cap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel head-split wrapping of the serving kernels
+# ---------------------------------------------------------------------------
+def _heads_shard_info(heads: int, kv_heads: int):
+    """(mesh, axis) when the active sharding rules head-split the serving
+    kernels, else None (no rules, or the replication fallback)."""
+    # lazy: sharding.specs pulls in the model param helpers; importing it at
+    # kernel-import time would cycle through models/__init__
+    from ..sharding.specs import heads_shard_axis
+
+    return heads_shard_axis(heads, kv_heads)
+
+
+def _shard_heads(body, mesh, axis, in_specs, out_specs):
+    """shard_map a serving-kernel body with heads-split blocks.
+
+    Every rank runs the identical attention program on its own head slice —
+    attention never mixes heads, so per-shard outputs are bit-exact slices
+    of the unsharded result and no collective is needed until the o-proj
+    contraction outside the kernel.  ``check_rep=False``: the replicated
+    page tables/lengths feed gathers whose replication the checker can't
+    prove."""
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Attention (training / prefill)
 # ---------------------------------------------------------------------------
 def _kv_blocks(t: jnp.ndarray, block_k: int):
@@ -446,21 +476,43 @@ def varlen_prefill(
     token-packed buffer; each chunk attends its request's committed pages
     plus the causal prefix of its own tokens.  ``pages_bound`` statically
     bounds context pages per chunk (host-known, bucketed)."""
-    if backend == "pallas":
-        from . import varlen_prefill as vp  # lazy: pallas import cost
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
 
-        return vp.varlen_prefill(
+    def body(q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
+             page_tables):
+        if backend == "pallas":
+            from . import varlen_prefill as vp  # lazy: pallas import cost
+
+            return vp.varlen_prefill(
+                q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens,
+                chunk_pos0, page_tables, softcap=softcap, window=window,
+                scale=scale, pages_bound=pages_bound,
+            )
+        # ref and flash share the masked one-shot computation (jit-friendly;
+        # ref.varlen_prefill is the host-loop oracle used by tests)
+        return varlen_prefill_jnp(
             q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
             page_tables, softcap=softcap, window=window, scale=scale,
             pages_bound=pages_bound,
         )
-    # ref and flash share the masked one-shot computation (jit-friendly;
-    # ref.varlen_prefill is the host-loop oracle used by tests)
-    return varlen_prefill_jnp(
-        q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
-        page_tables, softcap=softcap, window=window, scale=scale,
-        pages_bound=pages_bound,
-    )
+
+    tp = _heads_shard_info(q.shape[1], k_pages.shape[2])
+    if tp is None:
+        return body(
+            q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
+            page_tables,
+        )
+    mesh, ax = tp
+    P = jax.sharding.PartitionSpec
+    tok = P(None, ax, None)                                 # (T, heads, d)
+    pool = P(None, None, ax, None)
+    return _shard_heads(
+        body, mesh, ax,
+        in_specs=(tok, tok, tok, pool, pool, P(None), P(None), P(None),
+                  P(None, None)),
+        out_specs=tok,
+    )(q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
+      page_tables)
 
 
 # ---------------------------------------------------------------------------
@@ -485,18 +537,33 @@ def paged_attention(
     page-table width."""
     if pages_bound is not None and pages_bound < page_table.shape[1]:
         page_table = page_table[:, :pages_bound]
-    if backend == "pallas":
-        from . import paged_attention as pa
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
 
-        return pa.paged_attention(
+    def body(q, k_pages, v_pages, page_table, lengths):
+        if backend == "pallas":
+            from . import paged_attention as pa
+
+            return pa.paged_attention(
+                q, k_pages, v_pages, page_table, lengths,
+                softcap=softcap, window=window, scale=scale,
+            )
+        # ref and flash share the gather-based computation
+        return ref.paged_attention(
             q, k_pages, v_pages, page_table, lengths,
             softcap=softcap, window=window, scale=scale,
         )
-    # ref and flash share the gather-based computation
-    return ref.paged_attention(
-        q, k_pages, v_pages, page_table, lengths,
-        softcap=softcap, window=window, scale=scale,
-    )
+
+    tp = _heads_shard_info(q.shape[2], k_pages.shape[2])
+    if tp is None:
+        return body(q, k_pages, v_pages, page_table, lengths)
+    mesh, ax = tp
+    P = jax.sharding.PartitionSpec
+    hsplit = P(None, None, ax, None)
+    return _shard_heads(
+        body, mesh, ax,
+        in_specs=(hsplit, hsplit, hsplit, P(None, None), P(None)),
+        out_specs=hsplit,
+    )(q, k_pages, v_pages, page_table, lengths)
 
 
 # ---------------------------------------------------------------------------
@@ -609,19 +676,34 @@ def spec_verify(
     bucketed) so neither path iterates the padded page-table width."""
     if pages_bound is not None and pages_bound < page_table.shape[1]:
         page_table = page_table[:, :pages_bound]
-    if backend == "pallas":
-        from . import spec_verify as sv  # lazy: pallas import cost
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
 
-        return sv.spec_verify(
+    def body(q, k_pages, v_pages, page_table, lengths, window_lens):
+        if backend == "pallas":
+            from . import spec_verify as sv  # lazy: pallas import cost
+
+            return sv.spec_verify(
+                q, k_pages, v_pages, page_table, lengths, window_lens,
+                softcap=softcap, window=window, scale=scale,
+            )
+        # ref and flash share the gather-based one-shot computation (jit-
+        # friendly; ref.spec_verify is the host-loop oracle used by tests)
+        return spec_verify_jnp(
             q, k_pages, v_pages, page_table, lengths, window_lens,
             softcap=softcap, window=window, scale=scale,
         )
-    # ref and flash share the gather-based one-shot computation (jit-
-    # friendly; ref.spec_verify is the host-loop oracle used by tests)
-    return spec_verify_jnp(
-        q, k_pages, v_pages, page_table, lengths, window_lens,
-        softcap=softcap, window=window, scale=scale,
-    )
+
+    tp = _heads_shard_info(q.shape[2], k_pages.shape[2])
+    if tp is None:
+        return body(q, k_pages, v_pages, page_table, lengths, window_lens)
+    mesh, ax = tp
+    P = jax.sharding.PartitionSpec
+    hsplit = P(None, None, ax, None)
+    return _shard_heads(
+        body, mesh, ax,
+        in_specs=(hsplit, hsplit, hsplit, P(None, None), P(None), P(None)),
+        out_specs=hsplit,
+    )(q, k_pages, v_pages, page_table, lengths, window_lens)
 
 
 # ---------------------------------------------------------------------------

@@ -12,20 +12,45 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types only exists on newer jax; plain Auto axes are the default
+    # everywhere, so drop the kwarg when the installed version lacks it.
+    if hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(
+                shape, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Single-device mesh for CPU smoke paths (axis sizes 1)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+def make_host_mesh(tp: int | None = None):
+    """Host (CPU) serving mesh: ``(data=1, model=tp)``.
+
+    ``tp`` > 1 needs forced host devices — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes its backend) so ``jax.devices()`` exposes enough CPU
+    "chips" to fill the model axis.
+    """
+    tp = 1 if tp is None else int(tp)
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    n = jax.device_count()
+    if tp > n:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but only {n} visible; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            f"before the process starts"
+        )
+    return _make_mesh((1, tp), ("data", "model"))
 
 
 def mesh_name(mesh) -> str:

@@ -47,6 +47,7 @@ from ..core.analysis import (
     prefill_saturation_section,
     prefix_cache_section,
     spec_decode_section,
+    tp_section,
 )
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.tracing import Tracer, TracingServer
@@ -180,6 +181,11 @@ def _serve_paged(engine, cfg, args, load, prompts):
         print("[serve] prefix cache:")
         for line in section.splitlines():
             print(f"[serve]   {line}")
+    section = tp_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] tensor-parallel collectives:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
     latencies = [r.latency_s for r in stats.results]
     summary = latency_summary(latencies) if latencies else {}
     summary.update(
@@ -204,6 +210,7 @@ def _serve_paged(engine, cfg, args, load, prompts):
             "decode_s": stats.decode_s,
             "itl_p50_ms": stats.itl_p50_ms,
             "itl_p99_ms": stats.itl_p99_ms,
+            "tp": float(stats.tp),
             "spec_k": float(stats.spec_k),
             "prefix_cache": float(stats.prefix_cache),
             "prompt_tokens_admitted": float(stats.prompt_tokens_admitted),
@@ -258,6 +265,13 @@ def main(argv=None) -> int:
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission overcommit factor (>1 admits past "
                          "worst-case page commitment; preemption is the valve)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree over the mesh 'model' axis "
+                         "(1 = single device; CPU testing needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--rs-block-outputs", action="store_true",
+                    help="reduce-scatter block outputs instead of all-reduce "
+                         "on seq-shardable (prefill) launches")
     ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
                     help="automatic prefix caching (paged engine): share "
                          "committed KV pages across requests with common "
@@ -281,10 +295,25 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg, backend=args.backend)
     params = model.init(jax.random.PRNGKey(0))
+    rules = None
+    if args.tp > 1:
+        if args.engine != "paged":
+            ap.error("--tp > 1 requires --engine paged")
+        from ..sharding.specs import serve_rules
+        from .mesh import make_host_mesh
+
+        rules = serve_rules(
+            make_host_mesh(tp=args.tp),
+            rs_block_outputs=args.rs_block_outputs,
+        )
     engine = ServingEngine(
         model, params, max_batch=args.engine_batch, max_seq=args.max_seq,
-        page_size=args.page_size,
+        page_size=args.page_size, rules=rules,
     )
+    if args.tp > 1:
+        print(f"[serve] tensor parallelism: requested tp={args.tp}, "
+              f"effective tp={engine.tp} "
+              f"({'heads split' if engine.tp > 1 else 'replication fallback'})")
     rng = np.random.default_rng(0)
     if args.prefix_len > 0:
         # shared-prefix serving mix: same-group prompts share their first

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
-from ..sharding.specs import opt_enabled, shard_act
+from ..sharding.specs import opt_enabled, param_pspecs, shard_act
 from .config import ArchConfig
 from .modules import (
     attn_decode,
@@ -503,6 +503,17 @@ class DecoderLM(BaseModel):
             jax.random.PRNGKey(0), self.paged_cache_defs(num_pages, page_size, dtype)
         )
 
+    def paged_cache_pspecs(self, rules, num_pages: int, page_size: int,
+                           dtype="bfloat16"):
+        """PartitionSpec tree for the paged pool under ``rules``: the
+        ``act_kv`` head dim shards over "model" (each shard holds kv/tp
+        heads of EVERY page), everything else replicates — page accounting
+        stays host-global.  Non-divisible kv head counts fall back to full
+        replication via the rules themselves."""
+        return param_pspecs(
+            self.paged_cache_defs(num_pages, page_size, dtype), rules
+        )
+
     # -- prefill -----------------------------------------------------------------------
     def prefill(self, params, batch, cache):
         cfg = self.cfg
@@ -706,6 +717,7 @@ class DecoderLM(BaseModel):
             )
         pos = jnp.asarray(lengths, jnp.int32)
         x = self._embed_tokens(params, tokens)[:, None, :]       # (b, 1, D)
+        x = shard_act(x, ("batch", None, "act_embed"))
         windows = self._layer_windows(0)
         xs = (
             (params["blocks"], windows)
@@ -766,6 +778,7 @@ class DecoderLM(BaseModel):
         pos = jnp.asarray(lengths, jnp.int32)
         wlens = jnp.asarray(window_lens, jnp.int32)
         x = self._embed_tokens(params, tokens)                   # (b, W, D)
+        x = shard_act(x, ("batch", None, "act_embed"))
         windows = self._layer_windows(0)
         xs = (
             (params["blocks"], windows)

@@ -249,6 +249,8 @@ def attn_decode_paged(
         pages_bound=pages_bound,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if opt_enabled("rs_block_outputs"):
+        y = shard_act(y, ("batch", "seq", "act_embed"))
     return y, k_pages, v_pages
 
 
@@ -300,6 +302,8 @@ def attn_decode_spec(
         pages_bound=pages_bound,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if opt_enabled("rs_block_outputs"):
+        y = shard_act(y, ("batch", "seq", "act_embed"))
     return y, k_pages, v_pages
 
 
@@ -347,6 +351,8 @@ def attn_prefill_paged(
         backend=backend,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if opt_enabled("rs_block_outputs"):
+        y = shard_act(y, ("batch", "seq", "act_embed"))
     tok_pos = pos0 + jnp.arange(c)
     page_ids = page_row[tok_pos // page_size]
     offsets = tok_pos % page_size
@@ -395,6 +401,8 @@ def attn_prefill_packed(
         pages_bound=pages_bound,
     )
     y = jnp.einsum("bshk,hkd->bsd", out[None], p["wo"])
+    if opt_enabled("rs_block_outputs"):
+        y = shard_act(y, ("batch", "seq", "act_embed"))
     k_pages = k_pages.at[meta["dst_page"], meta["dst_off"]].set(
         k[0].astype(k_pages.dtype)
     )

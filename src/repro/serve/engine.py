@@ -53,12 +53,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from ..core.analysis import percentile
 from ..kernels import ops
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
+from ..sharding.specs import (
+    ShardingRules, param_pspecs, set_activation_rules, tp_degree,
+)
 from .page_table import PagePool, PageTable, PrefixCache, pages_needed
 from .scheduler import PagedSlotPool, PrefillBudget, SlotPool, SpecLedger
+
+
+def _named_shardings(mesh, pspecs):
+    """PartitionSpec tree -> NamedSharding tree (PartitionSpec subclasses
+    tuple, so plain tree_map would descend into it)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
 
 
 def bucket_pow2(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
@@ -199,6 +213,8 @@ class PagedStats:
     spec_stats: Dict[str, float] = field(default_factory=dict)  # SpecLedger
     itl_p50_ms: float = 0.0     # inter-token latency over every gap in the run
     itl_p99_ms: float = 0.0
+    # -- tensor parallelism -------------------------------------------------
+    tp: int = 1                 # effective model-axis degree (1 = unsharded)
 
 
 class ServingEngine:
@@ -210,8 +226,30 @@ class ServingEngine:
         max_seq: int,
         cache_dtype: str = "float32",
         page_size: int = 16,
+        rules: Optional[ShardingRules] = None,
     ) -> None:
         self.model = model
+        # tensor parallelism: ``rules`` maps the existing logical axes
+        # (heads/kv/ffn/vocab + activations) onto a device mesh.  Weights are
+        # placed once here; every jit body runs under the rules (see
+        # ``_ruled``) so shard_act constraints and the kernels' shard_map
+        # head splits activate at trace time.  ``tp`` is the EFFECTIVE
+        # degree: 1 when the head counts don't divide the model axis (the
+        # specs.py replication fallback).
+        self.rules = rules
+        cfg = getattr(model, "cfg", None)
+        self.tp = tp_degree(
+            rules,
+            int(getattr(cfg, "num_heads", 1) or 1),
+            int(getattr(cfg, "num_kv_heads", 1) or 1),
+        )
+        if rules is not None:
+            params = jax.device_put(
+                params,
+                _named_shardings(
+                    rules.mesh, param_pspecs(model.param_defs(), rules)
+                ),
+            )
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -219,7 +257,7 @@ class ServingEngine:
         # tokens per KV page (paged engine) — doubles as the prefill length-
         # bucket floor so admission shapes snap to page boundaries
         self.page_size = page_size
-        self._prefill = jax.jit(model.prefill)
+        self._prefill = jax.jit(self._ruled(model.prefill))
         # decode jits keyed by (uniform_pos, kv_bound): the kv bound is a
         # static power-of-two bucket, so short contexts stop streaming the
         # whole padded cache and compile count stays logarithmic
@@ -257,6 +295,23 @@ class ServingEngine:
         # the hybrid ring cache wraps, so those keep exact-length shapes
         self._ragged_ok = fam in ("dense", "moe", "encdec")
 
+    def _ruled(self, fn: Callable) -> Callable:
+        """Run ``fn`` under this engine's activation sharding rules.
+
+        jit traces the wrapped body on first call, so entering the context
+        inside the wrapper is what makes ``shard_act`` constraints and the
+        serving kernels' shard_map head splits visible to GSPMD.  Identity
+        when the engine has no rules (single-device)."""
+        if self.rules is None:
+            return fn
+        rules = self.rules
+
+        def wrapped(*args, **kwargs):
+            with set_activation_rules(rules):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
     # -- compile accounting --------------------------------------------------
     def compile_stats(self) -> Dict[str, int]:
         """Distinct jitted variants per path (the engine's compile budget).
@@ -288,7 +343,10 @@ class ServingEngine:
         fn = self._decode_fns.get(key)
         if fn is None:
             fn = jax.jit(
-                partial(self.model.decode, uniform_pos=uniform, kv_bound=kv_bound),
+                self._ruled(
+                    partial(self.model.decode, uniform_pos=uniform,
+                            kv_bound=kv_bound)
+                ),
                 donate_argnums=(2,),
             )
             self._decode_fns[key] = fn
@@ -554,7 +612,7 @@ class ServingEngine:
                 new_pos = jnp.where(mask, pos + 1, pos)
                 return tok, new_nxt, new_pos, cache
 
-            fn = jax.jit(step, donate_argnums=(1, 2, 4))
+            fn = jax.jit(self._ruled(step), donate_argnums=(1, 2, 4))
             self._paged_decode_fns[pages_bound] = fn
         return fn
 
@@ -605,7 +663,7 @@ class ServingEngine:
                 new_nxt = jnp.where(active, last[:, 0], nxt)
                 return greedy, n_accept, new_pos, new_nxt, cache
 
-            fn = jax.jit(step, donate_argnums=(2, 4, 6))
+            fn = jax.jit(self._ruled(step), donate_argnums=(2, 4, 6))
             self._spec_decode_fns[key] = fn
         return fn
 
@@ -619,7 +677,7 @@ class ServingEngine:
         fn = self._paged_prefill_fns.get(key)
         if fn is None:
             fn = jax.jit(
-                partial(self.model.prefill_paged_chunk, pos0=pos0),
+                self._ruled(partial(self.model.prefill_paged_chunk, pos0=pos0)),
                 donate_argnums=(2,),
             )
             self._paged_prefill_fns[key] = fn
@@ -637,7 +695,9 @@ class ServingEngine:
         fn = self._packed_prefill_fns.get(key)
         if fn is None:
             fn = jax.jit(
-                partial(self.model.prefill_packed, pages_bound=pages_bound),
+                self._ruled(
+                    partial(self.model.prefill_packed, pages_bound=pages_bound)
+                ),
                 donate_argnums=(2,),
             )
             self._packed_prefill_fns[key] = fn
@@ -727,7 +787,8 @@ class ServingEngine:
             raise ValueError("spec_ngram must be >= 1")
         if not requests:
             return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
-                              0.0, 0, 0, 0, {}, prefill_mode=prefill_mode)
+                              0.0, 0, 0, 0, {}, prefill_mode=prefill_mode,
+                              tp=self.tp)
         if overcommit <= 0:
             raise ValueError("overcommit must be > 0")
         compiles_before = self.compile_stats()
@@ -768,6 +829,20 @@ class ServingEngine:
         cache = self.model.init_paged_cache(
             num_pages, page_size, dtype=self.cache_dtype
         )
+        if self.rules is not None:
+            # heads-split pool: each shard holds kv/tp heads of EVERY page,
+            # so a fixed per-shard page budget carries tp× the tokens while
+            # the PagePool/PageTable accounting above stays host-global
+            cache = jax.device_put(
+                cache,
+                _named_shardings(
+                    self.rules.mesh,
+                    self.model.paged_cache_pspecs(
+                        self.rules, num_pages, page_size,
+                        dtype=self.cache_dtype,
+                    ),
+                ),
+            )
         queue = deque(requests)
         nxt = np.zeros((num_slots,), np.int32)
         lengths = np.zeros((num_slots,), np.int32)   # live tokens per slot
@@ -820,8 +895,48 @@ class ServingEngine:
         dev_pos = jnp.zeros((num_slots,), jnp.int32)
         dev_nxt = jnp.zeros((num_slots,), jnp.int32)
         dev_mask = jnp.zeros((num_slots,), bool)
+        if self.rules is not None:
+            # explicitly replicated so the donated mirror-patch scatter and
+            # the decode launches agree on placement from the first step
+            # (no GSPMD resharding inserted at a steady-state boundary)
+            rep = NamedSharding(self.rules.mesh, PartitionSpec())
+            dev_table, dev_pos, dev_nxt, dev_mask = (
+                jax.device_put(a, rep)
+                for a in (dev_table, dev_pos, dev_nxt, dev_mask)
+            )
         cur_mask = np.zeros((num_slots,), bool)
         dirty: set = set()                           # slots needing a patch
+        # -- analytic TP-collective ledger: every transformer layer closes
+        # two tensor-parallel boundaries (attention o-proj, MLP down-proj),
+        # each summing a (tokens, d_model) partial block output across the
+        # model axis.  Ring all-reduce moves 2(tp-1)/tp of the payload per
+        # shard; reduce-scatter (rs_block_outputs, seq-shardable launches
+        # only) halves that.  Emitted per launch for analysis.tp_summary.
+        tp = self.tp
+        rs_opt = bool(
+            self.rules is not None
+            and self.rules.opts.get("rs_block_outputs")
+        )
+        d_model = int(getattr(self.model.cfg, "d_model", 0) or 0)
+        n_layers = int(getattr(self.model.cfg, "num_layers", 0) or 0)
+
+        def tp_event(phase: str, t0: float, t1: float, tokens: int,
+                     seq_shardable: bool = False) -> None:
+            if tp <= 1 or tracer is None or not tokens:
+                return
+            kind = (
+                "reduce_scatter"
+                if rs_opt and seq_shardable and tokens % tp == 0
+                else "psum"
+            )
+            count = 2 * n_layers
+            payload = tokens * d_model * 4           # f32 block outputs
+            factor = (tp - 1) / tp * (2.0 if kind == "psum" else 1.0)
+            tracer.event(
+                "tp:collective", t0, t1, phase=phase, kind=kind, tp=tp,
+                count=count, payload_bytes=payload * count,
+                moved_bytes=int(payload * count * factor),
+            )
 
         def sync_device(active: List[int]) -> None:
             """Patch the device mirrors for slots whose table row, position,
@@ -1196,9 +1311,11 @@ class ServingEngine:
                             chunks=len(spans), buffer=t_pack,
                             budget=budget.tokens_per_step,
                         )
+                    tp_event("prefill", t0p, now, t_pack, seq_shardable=True)
                     progressed = True
             elif prefilling:
                 t0p = clock()
+                chunk_tok = 0
                 for slot in list(prefilling):
                     req = slots.active[slot]
                     start = prefilling[slot]
@@ -1226,6 +1343,7 @@ class ServingEngine:
                     prefill_launches += 1
                     prefill_tokens += c
                     prefill_padded += c_pad - c
+                    chunk_tok += c_pad
                     start += c
                     lengths[slot] = start
                     slot_prefilled[slot] = slot_prefilled.get(slot, 0) + c
@@ -1244,7 +1362,9 @@ class ServingEngine:
                         req._ttft_s = tnow - submit_s[req.request_id]  # type: ignore
                     else:
                         prefilling[slot] = start
-                prefill_s += clock() - t0p
+                now = clock()
+                prefill_s += now - t0p
+                tp_event("prefill", t0p, now, chunk_tok, seq_shardable=True)
             # 4) one decode step over the whole pool.  With ``spec_k > 0``
             #    the prompt-lookup drafter proposes up to ``spec_k`` tokens
             #    per slot and ONE verify launch scores every slot's window;
@@ -1345,6 +1465,8 @@ class ServingEngine:
                     na = np.zeros((num_slots,), np.int32)
                 now = clock()
                 decode_s += now - t0d
+                tp_event("verify" if use_spec else "decode", t0d, now,
+                         num_slots * W)
                 step += 1
                 occupancy_sum += slots.num_active
                 prop_total = acc_total = 0
@@ -1433,4 +1555,5 @@ class ServingEngine:
             spec_stats=ledger.stats() if ledger else {},
             itl_p50_ms=percentile(itl_all, 50.0) * 1e3 if itl_all else 0.0,
             itl_p99_ms=percentile(itl_all, 99.0) * 1e3 if itl_all else 0.0,
+            tp=self.tp,
         )

@@ -25,8 +25,6 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from ..models.params import P, tree_map_defs
-
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 
@@ -123,6 +121,57 @@ def default_rules(mesh: Mesh, fsdp: bool = False) -> ShardingRules:
     return ShardingRules(mesh=mesh, fsdp=fsdp, rules=rules)
 
 
+def serve_rules(mesh: Mesh, *, rs_block_outputs: bool = False) -> ShardingRules:
+    """Tensor-parallel rules for the paged serving stack.
+
+    The default rules already map heads / kv / ffn / vocab onto "model";
+    serving adds one lever: with ``rs_block_outputs`` the block outputs are
+    constrained seq-sharded (the packed-prefill token axis joins "model"),
+    so the attention/MLP partial sums lower to reduce-scatter instead of
+    all-reduce.  Decode launches have seq == 1, which can't shard — they
+    fall back to the plain psum either way."""
+    rules = default_rules(mesh)
+    if rs_block_outputs:
+        rules = replace(
+            rules,
+            rules={**rules.rules, "seq": "model"},
+            opts={**rules.opts, "rs_block_outputs": True},
+        )
+    return rules
+
+
+def heads_shard_axis(heads: int, kv_heads: int):
+    """(mesh, axis) the serving attention kernels shard their head dims
+    over, or ``None`` when the current activation rules don't tensor-
+    parallelize this head layout.
+
+    Head-parallel attention needs the query-head AND kv-head counts to
+    resolve to the SAME single mesh axis (GQA groups must not straddle
+    shards); either count failing divisibility falls back to replication —
+    the same fallback :func:`ShardingRules.mesh_axes_for` applies to the
+    page-pool and weight dims, so kernels and operands always agree."""
+    rules = activation_rules()
+    if rules is None:
+        return None
+    ah = rules.mesh_axes_for("act_heads", heads)
+    ak = rules.mesh_axes_for("act_kv", kv_heads)
+    if not isinstance(ah, str) or ah != ak:
+        return None
+    if rules.axis_size(ah) <= 1:
+        return None
+    return rules.mesh, ah
+
+
+def tp_degree(rules: Optional[ShardingRules], heads: int, kv_heads: int) -> int:
+    """Effective tensor-parallel degree for one head layout: the "model"
+    axis size when heads genuinely split, else 1 (replication fallback)."""
+    if rules is None:
+        return 1
+    with set_activation_rules(rules):
+        info = heads_shard_axis(heads, kv_heads)
+    return rules.axis_size(info[1]) if info else 1
+
+
 def _dedup(dims):
     """Drop mesh axes already claimed by an earlier dim (earlier dim wins)."""
     used = set()
@@ -142,6 +191,10 @@ def _dedup(dims):
 
 def param_pspecs(defs, rules: ShardingRules):
     """PartitionSpec tree matching a parameter def tree."""
+    # lazy: models.params ends up importing this module back through the
+    # models package, so a module-level import would cycle when sharding
+    # loads first
+    from ..models.params import P, tree_map_defs
 
     def make(path: str, p: P) -> PartitionSpec:
         axes = p.axes if p.axes is not None else (None,) * len(p.shape)
