@@ -26,9 +26,7 @@ the same workload so baseline and CI numbers compare one-to-one.
 """
 from __future__ import annotations
 
-import argparse
 import json
-import time
 
 import jax
 import numpy as np
@@ -188,15 +186,6 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
 
 
 if __name__ == "__main__":
-    from .common import emit_header
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny config for CI (interpret-mode kernels, CPU)")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="workload RNG seed (recorded in BENCH_prefix.json)")
-    args = ap.parse_args()
-    emit_header()
-    t0 = time.perf_counter()
-    run(smoke=args.smoke, seed=args.seed)
-    print(f"# bench_prefix done in {time.perf_counter() - t0:.1f}s")
+    bench_main(run, "prefix")

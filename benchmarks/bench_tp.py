@@ -30,13 +30,11 @@ numbers compare one-to-one.
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
 import json
 import os
 import subprocess
 import sys
-import time
 
 import numpy as np
 
@@ -202,16 +200,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
 
 
 if __name__ == "__main__":
-    from .common import emit_header
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke mode (same workload, recorded in JSON)")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="workload RNG seed (recorded in BENCH_tp.json)")
-    args = ap.parse_args()
-    if not os.environ.get(_CHILD_ENV):    # re-exec'd child: header already out
-        emit_header()
-    t0 = time.perf_counter()
-    run(smoke=args.smoke, seed=args.seed)
-    print(f"# bench_tp done in {time.perf_counter() - t0:.1f}s")
+    # re-exec'd child: the parent already printed the CSV header
+    bench_main(run, "tp", suppress_header_env=_CHILD_ENV)

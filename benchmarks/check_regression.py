@@ -4,7 +4,13 @@ The CI bench-smoke job runs the serving benchmarks and fails the build when
 a headline throughput metric regresses more than ``--max-regression``
 (default 25%) against the baseline committed under
 ``benchmarks/baselines/`` — the perf trajectory is enforced, not just
-recorded.  Higher-is-better metrics only.
+recorded.
+
+``--metric`` names higher-is-better metrics (throughput, speedup ratios);
+``--metric-lower`` names lower-is-better ones (divergence fractions,
+latency) that fail when they RISE past ``1 + max_regression`` times the
+baseline.  A lower-is-better baseline of exactly 0 is a hard gate: the
+current value must stay 0 (e.g. "tokens never diverge" stays enforced).
 
     python -m benchmarks.check_regression BENCH_paged.json \
         benchmarks/baselines/BENCH_paged_smoke.json \
@@ -35,13 +41,20 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="freshly emitted BENCH_*.json")
     ap.add_argument("baseline", help="committed baseline BENCH_*.json")
-    ap.add_argument("--metric", action="append", required=True,
+    ap.add_argument("--metric", action="append", default=[],
                     help="dotted path of a higher-is-better metric "
                          "(repeatable), e.g. paged.tokens_per_s")
+    ap.add_argument("--metric-lower", action="append", default=[],
+                    help="dotted path of a LOWER-is-better metric "
+                         "(repeatable), e.g. int8.divergence_fraction; "
+                         "fails when it rises past (1 + max-regression) x "
+                         "baseline (baseline 0 must stay 0)")
     ap.add_argument("--max-regression", type=float,
                     default=float(os.environ.get("BENCH_MAX_REGRESSION", 0.25)),
                     help="allowed fractional drop vs baseline (default 0.25)")
     args = ap.parse_args(argv)
+    if not args.metric and not args.metric_lower:
+        ap.error("at least one --metric or --metric-lower is required")
 
     with open(args.current) as f:
         cur = json.load(f)
@@ -61,6 +74,26 @@ def main(argv=None) -> int:
         print(f"[bench-check] {metric}: current={c:.2f} baseline={b:.2f} "
               f"ratio={ratio:.2f} (floor {1.0 - args.max_regression:.2f}) "
               f"[{status}]")
+    for metric in args.metric_lower:
+        c, b = lookup(cur, metric), lookup(base, metric)
+        if b < 0:
+            print(f"[bench-check] {metric}: baseline {b} < 0, skipping")
+            continue
+        if b == 0:
+            # the baseline says this never happens — keep it that way
+            status = "OK" if c == 0 else "REGRESSION"
+            failed |= c != 0
+            print(f"[bench-check] {metric}: current={c:.2f} baseline=0.00 "
+                  f"(must stay 0) [{status}]")
+            continue
+        ratio = c / b
+        status = "OK"
+        if ratio > 1.0 + args.max_regression:
+            status = "REGRESSION"
+            failed = True
+        print(f"[bench-check] {metric}: current={c:.2f} baseline={b:.2f} "
+              f"ratio={ratio:.2f} (ceiling {1.0 + args.max_regression:.2f}, "
+              f"lower is better) [{status}]")
     if failed:
         print(f"[bench-check] FAILED: regression beyond "
               f"{args.max_regression:.0%} vs {args.baseline} "

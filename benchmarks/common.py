@@ -1,13 +1,19 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + the CLI entry point.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
-contract) and may emit extra derived columns in the third field.
+contract) and may emit extra derived columns in the third field.  The
+serving benchmarks (``bench_spec``/``bench_prefix``/``bench_tp``/
+``bench_kvquant``) share one ``__main__`` shape — ``--smoke``/``--seed``
+flags, CSV header, wall-clock footer — provided by :func:`bench_main` so
+seed stamping stays consistent across all of them.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import subprocess
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -45,3 +51,33 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
 
 def emit_header() -> None:
     print("name,us_per_call,derived")
+
+
+def bench_main(
+    run: Callable[..., dict],
+    name: str,
+    *,
+    suppress_header_env: Optional[str] = None,
+    argv: Optional[List[str]] = None,
+) -> dict:
+    """Uniform benchmark CLI: parse ``--smoke``/``--seed``, print the CSV
+    header, call ``run(smoke=..., seed=...)`` and footer the wall time.
+
+    Every serving benchmark routes through here so the seed always reaches
+    ``bench_meta`` the same way (stamped into the ``BENCH_*.json``
+    artifact).  ``suppress_header_env`` names an env var that, when set,
+    skips the CSV header — for benchmarks that re-exec themselves in a
+    child process (bench_tp) where the parent already printed it.
+    """
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode (same workload, recorded in JSON)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help=f"workload RNG seed (recorded in BENCH_{name}.json)")
+    args = ap.parse_args(argv)
+    if not (suppress_header_env and os.environ.get(suppress_header_env)):
+        emit_header()
+    t0 = time.perf_counter()
+    out = run(smoke=args.smoke, seed=args.seed)
+    print(f"# bench_{name} done in {time.perf_counter() - t0:.1f}s")
+    return out

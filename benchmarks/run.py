@@ -22,6 +22,7 @@ BENCHES = [
     ("spec", "benchmarks.bench_spec"),
     ("prefix", "benchmarks.bench_prefix"),
     ("tp", "benchmarks.bench_tp"),
+    ("kvquant", "benchmarks.bench_kvquant"),
 ]
 
 

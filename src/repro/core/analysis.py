@@ -373,6 +373,68 @@ def itl_summary(itls_s: Sequence[float]) -> Dict[str, float]:
     }
 
 
+def kv_divergence_summary(
+    ref_tokens: Sequence[Sequence[int]],
+    test_tokens: Sequence[Sequence[int]],
+) -> Dict[str, float]:
+    """Token-divergence block for the KV-quantization accuracy harness.
+
+    Compares per-request greedy token streams from a quantized-KV serving
+    run against the full-precision replay of the SAME workload (greedy
+    decoding is deterministic per request, so any mismatch is caused by the
+    quantization error, not scheduling).  Reports the exact-match fraction,
+    the position of the first diverging token (later is better — the
+    quantized run tracked the reference longer), and the mean matched-prefix
+    fraction across requests.
+    """
+    if len(ref_tokens) != len(test_tokens):
+        raise ValueError(
+            f"mismatched request counts: {len(ref_tokens)} reference vs "
+            f"{len(test_tokens)} test streams"
+        )
+    n = len(ref_tokens)
+    if not n:
+        return {}
+    exact = 0
+    first_div: List[int] = []
+    prefix_frac: List[float] = []
+    for r, t in zip(ref_tokens, test_tokens):
+        r = [int(x) for x in r]
+        t = [int(x) for x in t]
+        m = min(len(r), len(t))
+        i = next((j for j in range(m) if r[j] != t[j]), m)
+        if i == m and len(r) == len(t):
+            exact += 1
+        else:
+            first_div.append(i)
+        prefix_frac.append(i / max(len(r), 1))
+    out = {
+        "requests": float(n),
+        "exact_matches": float(exact),
+        "exact_match_fraction": exact / n,
+        "diverged_requests": float(n - exact),
+        "divergence_fraction": (n - exact) / n,
+        "matched_prefix_fraction": float(sum(prefix_frac) / n),
+    }
+    if first_div:
+        out["first_divergence_min"] = float(min(first_div))
+        out["first_divergence_mean"] = float(sum(first_div) / len(first_div))
+    return out
+
+
+def kv_divergence_section(
+    ref_tokens: Sequence[Sequence[int]],
+    test_tokens: Sequence[Sequence[int]],
+) -> str:
+    """Render the KV-quantization divergence block as a report section;
+    empty string when there are no requests to compare."""
+    summary = kv_divergence_summary(ref_tokens, test_tokens)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def throughput_scalability(
     per_batch: Dict[int, float]
 ) -> Dict[int, float]:

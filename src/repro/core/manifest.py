@@ -276,3 +276,48 @@ class SystemRequirements:
         if self.mesh and info.get("mesh") != self.mesh:
             return False
         return True
+
+
+# --------------------------------------------------------------------------
+# Engine knobs (serving-engine configuration, part of the evaluation spec)
+# --------------------------------------------------------------------------
+@dataclass
+class EngineKnobs:
+    """The serving-engine configuration an evaluation ran under.
+
+    The paper's manifests make the model and software stack self-describing;
+    the serving engine grew its own knobs (paged KV, speculative decoding,
+    prefix caching, tensor parallelism, KV quantization) that change the
+    measured numbers just as much — so they are recorded with every run and
+    printed in the serve report header.
+    """
+
+    engine: str = "static"          # static | continuous | paged
+    kv_dtype: str = "float32"       # KV pool storage dtype (int8/fp8 = quantized)
+    page_size: int = 0              # tokens per KV page (0 = not paged)
+    spec_k: int = 0                 # speculative draft depth (0 = off)
+    prefix_cache: bool = False      # automatic prefix caching on?
+    tp: int = 1                     # tensor-parallel degree
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "engine": self.engine,
+            "kv_dtype": self.kv_dtype,
+            "page_size": int(self.page_size),
+            "spec_k": int(self.spec_k),
+            "prefix_cache": bool(self.prefix_cache),
+            "tp": int(self.tp),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineKnobs":
+        return cls(**{k: v for k, v in d.items() if k in cls.__dataclass_fields__})
+
+    def describe(self) -> str:
+        """One-line report header, e.g.
+        ``engine=paged kv_dtype=int8 page_size=16 spec_k=0 prefix_cache=on tp=1``."""
+        return (
+            f"engine={self.engine} kv_dtype={self.kv_dtype} "
+            f"page_size={self.page_size} spec_k={self.spec_k} "
+            f"prefix_cache={'on' if self.prefix_cache else 'off'} tp={self.tp}"
+        )

@@ -331,6 +331,8 @@ def varlen_prefill_jnp(
     window=None,
     scale: Optional[float] = None,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Masked one-shot packed prefill (jit-friendly, any backend).
 
@@ -339,7 +341,9 @@ def varlen_prefill_jnp(
     buffer itself, masked so a token sees exactly its request's committed
     positions plus the causal prefix of its own chunk.  Rows outside any
     chunk's real tokens come back zero (a manual safe softmax — not
-    ``jax.nn.softmax``, which would go uniform on fully-masked rows).
+    ``jax.nn.softmax``, which would go uniform on fully-masked rows).  With
+    a quantized pool (``k_scales``/``v_scales`` given) only the gathered
+    context dequantizes — the packed chunk K/V stay full precision.
     """
     T, h, d = q.shape
     page_size, kvh = k_pages.shape[1], k_pages.shape[2]
@@ -391,12 +395,14 @@ def varlen_prefill_jnp(
             ).astype(jnp.int32) - 1,
             0, C - 1,
         )
-        kctx = k_pages[page_tables[blk_chunk][:, :ctx_pages]].reshape(
-            nqb, Lc, kvh, d
-        )
-        vctx = v_pages[page_tables[blk_chunk][:, :ctx_pages]].reshape(
-            nqb, Lc, kvh, d
-        )
+        blk_tables = page_tables[blk_chunk][:, :ctx_pages]
+        kctx = k_pages[blk_tables].reshape(nqb, Lc, kvh, d)
+        vctx = v_pages[blk_tables].reshape(nqb, Lc, kvh, d)
+        if k_scales is not None:
+            ksc = k_scales[blk_tables].reshape(nqb, Lc, kvh)
+            vsc = v_scales[blk_tables].reshape(nqb, Lc, kvh)
+            kctx = kctx.astype(jnp.float32) * ksc[..., None]
+            vctx = vctx.astype(jnp.float32) * vsc[..., None]
         qb = qg.reshape(nqb, page_size, kvh, rep, d)
         s_ctx = (
             jnp.einsum(
@@ -408,6 +414,11 @@ def varlen_prefill_jnp(
         kctx_c = k_pages[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh, d)
         kctx = kctx_c[tc]
         vctx = v_pages[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh, d)[tc]
+        if k_scales is not None:
+            ksc = k_scales[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh)[tc]
+            vsc = v_scales[page_tables[:, :ctx_pages]].reshape(C, Lc, kvh)[tc]
+            kctx = kctx.astype(jnp.float32) * ksc[..., None]
+            vctx = vctx.astype(jnp.float32) * vsc[..., None]
         s_ctx = jnp.einsum(
             "tgrd,tlgd->tgrl", qg, kctx, preferred_element_type=jnp.float32
         ) * scale                            # (T, kvh, rep, Lc)
@@ -471,48 +482,57 @@ def varlen_prefill(
     scale: Optional[float] = None,
     backend: str = DEFAULT_BACKEND,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Packed ragged-prefill attention: chunks from many requests share one
     token-packed buffer; each chunk attends its request's committed pages
     plus the causal prefix of its own tokens.  ``pages_bound`` statically
     bounds context pages per chunk (host-known, bucketed)."""
     scale = scale if scale is not None else q.shape[-1] ** -0.5
+    quantized = k_scales is not None
 
     def body(q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
-             page_tables):
+             page_tables, *scales):
+        sc = dict(zip(("k_scales", "v_scales"), scales))
         if backend == "pallas":
             from . import varlen_prefill as vp  # lazy: pallas import cost
 
             return vp.varlen_prefill(
                 q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens,
                 chunk_pos0, page_tables, softcap=softcap, window=window,
-                scale=scale, pages_bound=pages_bound,
+                scale=scale, pages_bound=pages_bound, **sc,
             )
         # ref and flash share the masked one-shot computation (jit-friendly;
         # ref.varlen_prefill is the host-loop oracle used by tests)
         return varlen_prefill_jnp(
             q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
             page_tables, softcap=softcap, window=window, scale=scale,
-            pages_bound=pages_bound,
+            pages_bound=pages_bound, **sc,
         )
 
+    extra = (k_scales, v_scales) if quantized else ()
     tp = _heads_shard_info(q.shape[1], k_pages.shape[2])
     if tp is None:
         return body(
             q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
-            page_tables,
+            page_tables, *extra,
         )
     mesh, ax = tp
     P = jax.sharding.PartitionSpec
     tok = P(None, ax, None)                                 # (T, heads, d)
     pool = P(None, None, ax, None)
+    in_specs = (tok, tok, tok, pool, pool, P(None), P(None), P(None),
+                P(None, None))
+    if quantized:
+        # scale pools shard on the kv-head axis with their pages
+        in_specs += (P(None, None, ax), P(None, None, ax))
     return _shard_heads(
         body, mesh, ax,
-        in_specs=(tok, tok, tok, pool, pool, P(None), P(None), P(None),
-                  P(None, None)),
+        in_specs=in_specs,
         out_specs=tok,
     )(q, k, v, k_pages, v_pages, cu_seqlens, chunk_lens, chunk_pos0,
-      page_tables)
+      page_tables, *extra)
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +550,8 @@ def paged_attention(
     scale: Optional[float] = None,
     backend: str = DEFAULT_BACKEND,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Decode attention over a paged KV cache (global page pool + per-request
     page table).  ``pages_bound`` statically bounds the live pages per
@@ -538,32 +560,39 @@ def paged_attention(
     if pages_bound is not None and pages_bound < page_table.shape[1]:
         page_table = page_table[:, :pages_bound]
     scale = scale if scale is not None else q.shape[-1] ** -0.5
+    quantized = k_scales is not None
 
-    def body(q, k_pages, v_pages, page_table, lengths):
+    def body(q, k_pages, v_pages, page_table, lengths, *scales):
+        sc = dict(zip(("k_scales", "v_scales"), scales))
         if backend == "pallas":
             from . import paged_attention as pa
 
             return pa.paged_attention(
                 q, k_pages, v_pages, page_table, lengths,
-                softcap=softcap, window=window, scale=scale,
+                softcap=softcap, window=window, scale=scale, **sc,
             )
         # ref and flash share the gather-based computation
         return ref.paged_attention(
             q, k_pages, v_pages, page_table, lengths,
-            softcap=softcap, window=window, scale=scale,
+            softcap=softcap, window=window, scale=scale, **sc,
         )
 
+    extra = (k_scales, v_scales) if quantized else ()
     tp = _heads_shard_info(q.shape[2], k_pages.shape[2])
     if tp is None:
-        return body(q, k_pages, v_pages, page_table, lengths)
+        return body(q, k_pages, v_pages, page_table, lengths, *extra)
     mesh, ax = tp
     P = jax.sharding.PartitionSpec
     hsplit = P(None, None, ax, None)
+    in_specs = (hsplit, hsplit, hsplit, P(None, None), P(None))
+    if quantized:
+        # scale pools shard on the kv-head axis with their pages
+        in_specs += (P(None, None, ax), P(None, None, ax))
     return _shard_heads(
         body, mesh, ax,
-        in_specs=(hsplit, hsplit, hsplit, P(None, None), P(None)),
+        in_specs=in_specs,
         out_specs=hsplit,
-    )(q, k_pages, v_pages, page_table, lengths)
+    )(q, k_pages, v_pages, page_table, lengths, *extra)
 
 
 # ---------------------------------------------------------------------------
@@ -574,7 +603,9 @@ def copy_pages(
     v_pages: jnp.ndarray,
     src: jnp.ndarray,          # (n,) int32 physical source pages
     dst: jnp.ndarray,          # (n,) int32 physical destination pages
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k_scales: Optional[jnp.ndarray] = None,  # (L, num_pages, page_size, kvh)
+    v_scales: Optional[jnp.ndarray] = None,
+):
     """Device-side physical page copy across every layer of the paged KV
     pool: the copy-on-write primitive behind automatic prefix caching.
 
@@ -584,12 +615,19 @@ def copy_pages(
     page table — committed cache content is never mutated, so greedy tokens
     stay bit-identical to a cache-off run.  A gather + scatter on the page
     axis (jit-friendly, donation-safe: callers donate the pools so XLA
-    copies in place)."""
+    copies in place).  With a quantized pool the scale rows move with their
+    pages (4-tuple return); otherwise the 2-tuple return is unchanged."""
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
-    return (
+    out = (
         k_pages.at[:, dst].set(k_pages[:, src]),
         v_pages.at[:, dst].set(v_pages[:, src]),
+    )
+    if k_scales is None:
+        return out
+    return out + (
+        k_scales.at[:, dst].set(k_scales[:, src]),
+        v_scales.at[:, dst].set(v_scales[:, src]),
     )
 
 
@@ -607,6 +645,8 @@ def spec_verify_jnp(
     softcap: float = 0.0,
     window=None,
     scale: Optional[float] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Masked one-shot verification (jit-friendly, any backend).
 
@@ -627,6 +667,11 @@ def spec_verify_jnp(
     Lk = max_pages * page_size
     k = k_pages[page_table].reshape(b, Lk, kvh, d)
     v = v_pages[page_table].reshape(b, Lk, kvh, d)
+    if k_scales is not None:
+        ks = k_scales[page_table].reshape(b, Lk, kvh)
+        vs = v_scales[page_table].reshape(b, Lk, kvh)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     qg = q.reshape(b, W, kvh, rep, d)
     s = jnp.einsum(
         "bwgrd,bkgd->bgrwk", qg, k, preferred_element_type=jnp.float32
@@ -667,6 +712,8 @@ def spec_verify(
     scale: Optional[float] = None,
     backend: str = DEFAULT_BACKEND,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Speculative multi-token verification over a paged KV cache: one
     ``(b, W)`` launch scores each slot's ``[next_token, draft_1..draft_k]``
@@ -677,33 +724,41 @@ def spec_verify(
     if pages_bound is not None and pages_bound < page_table.shape[1]:
         page_table = page_table[:, :pages_bound]
     scale = scale if scale is not None else q.shape[-1] ** -0.5
+    quantized = k_scales is not None
 
-    def body(q, k_pages, v_pages, page_table, lengths, window_lens):
+    def body(q, k_pages, v_pages, page_table, lengths, window_lens, *scales):
+        sc = dict(zip(("k_scales", "v_scales"), scales))
         if backend == "pallas":
             from . import spec_verify as sv  # lazy: pallas import cost
 
             return sv.spec_verify(
                 q, k_pages, v_pages, page_table, lengths, window_lens,
-                softcap=softcap, window=window, scale=scale,
+                softcap=softcap, window=window, scale=scale, **sc,
             )
         # ref and flash share the gather-based one-shot computation (jit-
         # friendly; ref.spec_verify is the host-loop oracle used by tests)
         return spec_verify_jnp(
             q, k_pages, v_pages, page_table, lengths, window_lens,
-            softcap=softcap, window=window, scale=scale,
+            softcap=softcap, window=window, scale=scale, **sc,
         )
 
+    extra = (k_scales, v_scales) if quantized else ()
     tp = _heads_shard_info(q.shape[2], k_pages.shape[2])
     if tp is None:
-        return body(q, k_pages, v_pages, page_table, lengths, window_lens)
+        return body(q, k_pages, v_pages, page_table, lengths, window_lens,
+                    *extra)
     mesh, ax = tp
     P = jax.sharding.PartitionSpec
     hsplit = P(None, None, ax, None)
+    in_specs = (hsplit, hsplit, hsplit, P(None, None), P(None), P(None))
+    if quantized:
+        # scale pools shard on the kv-head axis with their pages
+        in_specs += (P(None, None, ax), P(None, None, ax))
     return _shard_heads(
         body, mesh, ax,
-        in_specs=(hsplit, hsplit, hsplit, P(None, None), P(None), P(None)),
+        in_specs=in_specs,
         out_specs=hsplit,
-    )(q, k_pages, v_pages, page_table, lengths, window_lens)
+    )(q, k_pages, v_pages, page_table, lengths, window_lens, *extra)
 
 
 # ---------------------------------------------------------------------------

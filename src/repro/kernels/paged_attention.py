@@ -11,6 +11,14 @@ table so only a request's *live* pages stream HBM->VMEM — pages beyond
 Pallas recognises as a revisit (no new DMA).  The caller additionally bounds
 the grid with ``pages_bound`` (host-known max live pages, bucketed), so the
 kernel never iterates the padded page-table width.
+
+Quantized pools (``k_scales``/``v_scales`` given): pages hold int8/fp8 K/V
+and a parallel ``(num_pages, page_size, kvh)`` float32 scale pool carries
+one scale per row per kv head.  The scale blocks stream through the same
+page-table index map as their K/V pages and dequantization (``q * scale``)
+is fused right after the block load — quantized K/V never materializes in
+full precision outside the kernel.  With scales absent the trace is
+bit-identical to the unquantized kernel.
 """
 from __future__ import annotations
 
@@ -35,13 +43,16 @@ def _kernel(
     w_ref,                     # scalar prefetch: (1,) int32 window (0 = none)
     q_ref,                     # (1, 1, 1, d)
     k_ref, v_ref,              # (1, page_size, 1, d) — one page
-    o_ref,                     # (1, 1, 1, d)
-    m_ref, l_ref, acc_ref,     # VMEM scratch (online-softmax state)
-    *,
+    *rest,                     # [ks_ref, vs_ref (1, page_size, 1)], o_ref, scratch
     softcap: float,
     page_size: int,
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     pj = pl.program_id(2)
     np_ = pl.num_programs(2)
@@ -55,6 +66,10 @@ def _kernel(
     q = q_ref[0, 0, 0, :]                                   # (d,)
     k = k_ref[0, :, 0, :]                                   # (page_size, d)
     v = v_ref[0, :, 0, :]
+    if quantized:
+        # fused dequant: one f32 scale per page row for this kv head
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
     length = lens_ref[bi]
     # positions are *logical*: page pj of this request covers
     # [pj*page_size, (pj+1)*page_size) regardless of which physical page
@@ -99,11 +114,14 @@ def paged_attention(
     scale: Optional[float] = None,
     pages_bound: Optional[int] = None,
     interpret: Optional[bool] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     b, _, h, d = q.shape
     page_size, kvh = k_pages.shape[1], k_pages.shape[2]
     max_pages = page_table.shape[1]
     rep = h // kvh
+    quantized = k_scales is not None
     scale = scale if scale is not None else d ** -0.5
     ns = max_pages if pages_bound is None else min(pages_bound, max_pages)
     ns = max(ns, 1)
@@ -121,22 +139,31 @@ def paged_attention(
         return pt[bi, jnp.minimum(pj, last)]
 
     kernel = functools.partial(
-        _kernel, softcap=float(softcap), page_size=page_size, scale=float(scale)
+        _kernel, softcap=float(softcap), page_size=page_size,
+        scale=float(scale), quantized=quantized,
     )
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, d),
+        lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep, 0),
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, d), lambda bi, hi, pj, pt, lens, w: (bi, 0, hi, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        # scale blocks ride the same page-table index map as their pages
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1),
+            lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep),
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, h, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, pj, pt, lens, w: (bi, 0, hi, 0)),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda bi, hi, pj, pt, lens, w: (_page(pj, pt, lens, bi), 0, hi // rep, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, 1, d), lambda bi, hi, pj, pt, lens, w: (bi, 0, hi, 0)
         ),
@@ -158,7 +185,5 @@ def paged_attention(
         jnp.asarray(page_table, jnp.int32),
         jnp.asarray(lengths, jnp.int32),
         wval,
-        q,
-        k_pages,
-        v_pages,
+        *operands,
     )

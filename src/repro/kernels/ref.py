@@ -108,15 +108,24 @@ def paged_attention(
     softcap: float = 0.0,
     window=None,
     scale: Optional[float] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Paged decode-attention oracle: gather each request's pages back into a
     contiguous cache, then run the dense decode oracle.  Memory-hungry (it
     rematerializes ``max_pages * page_size`` per request) but obviously
-    equivalent to dense attention over the live tokens."""
+    equivalent to dense attention over the live tokens.  With a quantized
+    pool (``k_scales``/``v_scales`` given) the gathered pages dequantize via
+    the gathered per-row scales before the dense oracle runs."""
     _, page_size, kvh, d = k_pages.shape
     b, max_pages = page_table.shape
     k = k_pages[page_table].reshape(b, max_pages * page_size, kvh, d)
     v = v_pages[page_table].reshape(b, max_pages * page_size, kvh, d)
+    if k_scales is not None:
+        ks = k_scales[page_table].reshape(b, max_pages * page_size, kvh)
+        vs = v_scales[page_table].reshape(b, max_pages * page_size, kvh)
+        k = k.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+        v = v.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
     return decode_attention(
         q, k, v, lengths, softcap=softcap, window=window, scale=scale
     )
@@ -138,11 +147,15 @@ def varlen_prefill(
     softcap: float = 0.0,
     window=None,
     scale: Optional[float] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Packed ragged-prefill oracle: per chunk, gather the request's
     committed context pages back into a contiguous cache and run the dense
     causal attention oracle over ``context + chunk``.  Rows outside any
     chunk's real tokens (chunk pad and buffer tail pad) come back zero.
+    With a quantized pool only the gathered context dequantizes — the
+    chunk's own packed K/V stay full precision, matching the kernel.
     Host-side loop over chunks — obviously correct, test/benchmark only.
     """
     import numpy as np
@@ -168,6 +181,15 @@ def varlen_prefill(
             vctx = v_pages[tables[c, :n_ctx]].reshape(
                 n_ctx * page_size, *v_pages.shape[2:]
             )[:ctx]
+            if k_scales is not None:
+                ksc = k_scales[tables[c, :n_ctx]].reshape(
+                    n_ctx * page_size, k_scales.shape[-1]
+                )[:ctx]
+                vsc = v_scales[tables[c, :n_ctx]].reshape(
+                    n_ctx * page_size, v_scales.shape[-1]
+                )[:ctx]
+                kctx = kctx.astype(jnp.float32) * ksc[..., None]
+                vctx = vctx.astype(jnp.float32) * vsc[..., None]
             kc = jnp.concatenate([kctx.astype(kc.dtype), kc], axis=0)
             vc = jnp.concatenate([vctx.astype(vc.dtype), vc], axis=0)
         o = attention(
@@ -190,6 +212,8 @@ def spec_verify(
     softcap: float = 0.0,
     window=None,
     scale: Optional[float] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Speculative multi-token verification oracle.
 
@@ -225,6 +249,15 @@ def spec_verify(
         vc = v_pages[tables[i, :n_pg]].reshape(
             n_pg * page_size, *v_pages.shape[2:]
         )[:total]
+        if k_scales is not None:
+            ksc = k_scales[tables[i, :n_pg]].reshape(
+                n_pg * page_size, k_scales.shape[-1]
+            )[:total]
+            vsc = v_scales[tables[i, :n_pg]].reshape(
+                n_pg * page_size, v_scales.shape[-1]
+            )[:total]
+            kc = kc.astype(jnp.float32) * ksc[..., None]
+            vc = vc.astype(jnp.float32) * vsc[..., None]
         o = attention(
             q[i, :n][None], kc[None].astype(q.dtype), vc[None].astype(q.dtype),
             causal=True, window=window, softcap=softcap, q_offset=L,

@@ -25,6 +25,11 @@ static (one jit variant per draft depth k), rows with fewer real drafts
 mask the tail and emit exact zeros there.  Pallas wants block minor dims at
 8x128 multiples on real TPUs; the engine's small test/CI window and head
 sizes rely on interpret mode exactly like the paged decode kernel.
+
+Quantized pools (``k_scales``/``v_scales`` given): the float32 per-row
+per-kv-head scale blocks stream through the same page-table index map as
+their K/V pages and dequantization is fused right after the block load,
+exactly as in :mod:`.paged_attention`.
 """
 from __future__ import annotations
 
@@ -50,14 +55,17 @@ def _kernel(
     w_ref,                     # scalar prefetch: (1,) int32 window (0 = none)
     q_ref,                     # (1, W, 1, d)
     k_ref, v_ref,              # (1, page_size, 1, d) — one page
-    o_ref,                     # (1, W, 1, d)
-    m_ref, l_ref, acc_ref,     # VMEM scratch (online-softmax state per q row)
-    *,
+    *rest,                     # [ks_ref, vs_ref (1, page_size, 1)], o_ref, scratch
     softcap: float,
     page_size: int,
     win: int,                  # static window rows W
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     pj = pl.program_id(2)
     np_ = pl.num_programs(2)
@@ -71,6 +79,10 @@ def _kernel(
     q = q_ref[0, :, 0, :]                                   # (W, d)
     k = k_ref[0, :, 0, :]                                   # (page_size, d)
     v = v_ref[0, :, 0, :]
+    if quantized:
+        # fused dequant: one f32 scale per page row for this kv head
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
     L = lens_ref[bi]
     wl = wlens_ref[bi]
     # positions are *logical*: page pj of this request covers
@@ -128,11 +140,14 @@ def spec_verify(
     scale: Optional[float] = None,
     pages_bound: Optional[int] = None,
     interpret: Optional[bool] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     b, W, h, d = q.shape
     page_size, kvh = k_pages.shape[1], k_pages.shape[2]
     max_pages = page_table.shape[1]
     rep = h // kvh
+    quantized = k_scales is not None
     scale = scale if scale is not None else d ** -0.5
     # static bound on pages per request INCLUDING the in-flight window (the
     # window may straddle into a freshly-opened page)
@@ -154,29 +169,37 @@ def spec_verify(
 
     kernel = functools.partial(
         _kernel, softcap=float(softcap), page_size=page_size, win=W,
-        scale=float(scale),
+        scale=float(scale), quantized=quantized,
     )
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, d),
+        lambda bi, hi, pj, pt, lens, wlens, w: (
+            _page(pj, pt, lens, wlens, bi), 0, hi // rep, 0
+        ),
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, W, 1, d),
+            lambda bi, hi, pj, pt, lens, wlens, w: (bi, 0, hi, 0),
+        ),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        # scale blocks ride the same page-table index map as their pages
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1),
+            lambda bi, hi, pj, pt, lens, wlens, w: (
+                _page(pj, pt, lens, wlens, bi), 0, hi // rep
+            ),
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(b, h, ns),
-        in_specs=[
-            pl.BlockSpec(
-                (1, W, 1, d),
-                lambda bi, hi, pj, pt, lens, wlens, w: (bi, 0, hi, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda bi, hi, pj, pt, lens, wlens, w: (
-                    _page(pj, pt, lens, wlens, bi), 0, hi // rep, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda bi, hi, pj, pt, lens, wlens, w: (
-                    _page(pj, pt, lens, wlens, bi), 0, hi // rep, 0
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, W, 1, d),
             lambda bi, hi, pj, pt, lens, wlens, w: (bi, 0, hi, 0),
@@ -200,7 +223,5 @@ def spec_verify(
         jnp.asarray(lengths, jnp.int32),
         jnp.asarray(window_lens, jnp.int32),
         wval,
-        q,
-        k_pages,
-        v_pages,
+        *operands,
     )

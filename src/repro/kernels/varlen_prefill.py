@@ -30,6 +30,12 @@ pages/blocks — dead stages clamp to the previously streamed block, which
 Pallas recognises as a revisit (no new DMA).  Pallas wants the block minor
 dims at 8×128 multiples on real TPUs; the engine's small test/CI page sizes
 rely on interpret mode exactly like the paged decode kernel.
+
+Quantized pools (``k_scales``/``v_scales`` given): only the CONTEXT page
+stages dequantize — the packed chunk K/V (current activations) stay full
+precision.  The float32 per-row per-kv-head scale blocks stream through the
+same context-page index map as their K/V pages and dequantization is fused
+right after the block load.
 """
 from __future__ import annotations
 
@@ -58,14 +64,17 @@ def _kernel(
     q_ref,                     # (1, block, 1, d)
     kc_ref, vc_ref,            # (1, block, 1, d) — packed chunk K/V block
     kp_ref, vp_ref,            # (1, block, 1, d) — one context page
-    o_ref,                     # (1, block, 1, d)
-    m_ref, l_ref, acc_ref,     # VMEM scratch (online-softmax state)
-    *,
+    *rest,                     # [kps_ref, vps_ref (1, block, 1)], o_ref, scratch
     softcap: float,
     block: int,
     ctx_bound: int,
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        kps_ref, vps_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     qj = pl.program_id(0)
     s = pl.program_id(2)
     ns = pl.num_programs(2)
@@ -103,8 +112,16 @@ def _kernel(
     valid &= jnp.where(w > 0, (q_pos - k_pos) < w, True)
 
     q = q_ref[0, :, 0, :]                                   # (block, d)
-    k = jnp.where(is_ctx, kp_ref[0, :, 0, :], kc_ref[0, :, 0, :])
-    v = jnp.where(is_ctx, vp_ref[0, :, 0, :], vc_ref[0, :, 0, :])
+    if quantized:
+        # fused dequant of the CONTEXT page only (packed chunk K/V are the
+        # current activations and stay full precision)
+        kp = kp_ref[0, :, 0, :].astype(jnp.float32) * kps_ref[0, :, 0][:, None]
+        vp = vp_ref[0, :, 0, :].astype(jnp.float32) * vps_ref[0, :, 0][:, None]
+        k = jnp.where(is_ctx, kp, kc_ref[0, :, 0, :].astype(jnp.float32))
+        v = jnp.where(is_ctx, vp, vc_ref[0, :, 0, :].astype(jnp.float32))
+    else:
+        k = jnp.where(is_ctx, kp_ref[0, :, 0, :], kc_ref[0, :, 0, :])
+        v = jnp.where(is_ctx, vp_ref[0, :, 0, :], vc_ref[0, :, 0, :])
     # zero invalid V rows: dead blocks hold undefined memory and pad q rows
     # accumulate p=1 over fully-masked stages — 0-valued V keeps them inert
     row_valid = jnp.max(valid, axis=0)
@@ -152,11 +169,14 @@ def varlen_prefill(
     scale: Optional[float] = None,
     pages_bound: Optional[int] = None,
     interpret: Optional[bool] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kvh) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     T, h, d = q.shape
     page_size, kvh = k_pages.shape[1], k_pages.shape[2]
     C, max_pages = page_tables.shape
     rep = h // kvh
+    quantized = k_scales is not None
     block = page_size                  # chunk spans are page multiples
     if T % block:
         raise ValueError(f"packed length {T} not a multiple of page {block}")
@@ -198,41 +218,53 @@ def varlen_prefill(
 
     kernel = functools.partial(
         _kernel, softcap=float(softcap), block=block, ctx_bound=ctx_bound,
-        scale=float(scale),
+        scale=float(scale), quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec(
+            (1, block, 1, d),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (0, qj, hi, 0),
+        ),
+        pl.BlockSpec(
+            (1, block, 1, d),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
+                0, _intra_blk(qj, s, blkc, sblk), hi // rep, 0
+            ),
+        ),
+        pl.BlockSpec(
+            (1, block, 1, d),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
+                0, _intra_blk(qj, s, blkc, sblk), hi // rep, 0
+            ),
+        ),
+        pl.BlockSpec(
+            (1, block, 1, d),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
+                _ctx_page(qj, s, blkc, sblk, pos0, lens, pt), 0, hi // rep, 0
+            ),
+        ),
+        pl.BlockSpec(
+            (1, block, 1, d),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
+                _ctx_page(qj, s, blkc, sblk, pos0, lens, pt), 0, hi // rep, 0
+            ),
+        ),
+    ]
+    operands = [q[None], k[None], v[None], k_pages, v_pages]
+    if quantized:
+        # scale blocks ride the same context-page index map as their pages
+        scale_spec = pl.BlockSpec(
+            (1, block, 1),
+            lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
+                _ctx_page(qj, s, blkc, sblk, pos0, lens, pt), 0, hi // rep
+            ),
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(nqb, h, ctx_bound + nqb),
-        in_specs=[
-            pl.BlockSpec(
-                (1, block, 1, d),
-                lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (0, qj, hi, 0),
-            ),
-            pl.BlockSpec(
-                (1, block, 1, d),
-                lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
-                    0, _intra_blk(qj, s, blkc, sblk), hi // rep, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, block, 1, d),
-                lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
-                    0, _intra_blk(qj, s, blkc, sblk), hi // rep, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, block, 1, d),
-                lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
-                    _ctx_page(qj, s, blkc, sblk, pos0, lens, pt), 0, hi // rep, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, block, 1, d),
-                lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (
-                    _ctx_page(qj, s, blkc, sblk, pos0, lens, pt), 0, hi // rep, 0
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, block, 1, d),
             lambda qj, hi, s, blkc, sblk, pos0, lens, pt, w: (0, qj, hi, 0),
@@ -258,10 +290,6 @@ def varlen_prefill(
         jnp.asarray(chunk_lens, jnp.int32),
         jnp.asarray(page_tables, jnp.int32),
         wval,
-        q[None],
-        k[None],
-        v[None],
-        k_pages,
-        v_pages,
+        *operands,
     )
     return out[0]

@@ -50,6 +50,7 @@ from ..core.analysis import (
     tp_section,
 )
 from ..core.evaldb import EvalDB, EvaluationRecord
+from ..core.manifest import EngineKnobs
 from ..core.tracing import Tracer, TracingServer
 from ..core.workload import PoissonLoad, SharedPrefixLoad, shared_prefix_prompts
 from ..models import build_model
@@ -213,6 +214,7 @@ def _serve_paged(engine, cfg, args, load, prompts):
             "tp": float(stats.tp),
             "spec_k": float(stats.spec_k),
             "prefix_cache": float(stats.prefix_cache),
+            "kv_bytes_per_token": stats.kv_bytes_per_token,
             "prompt_tokens_admitted": float(stats.prompt_tokens_admitted),
             "saved_prefill_tokens": float(stats.saved_prefill_tokens),
             "prefill_tokens_dropped": float(stats.prefill_tokens_dropped),
@@ -272,6 +274,13 @@ def main(argv=None) -> int:
     ap.add_argument("--rs-block-outputs", action="store_true",
                     help="reduce-scatter block outputs instead of all-reduce "
                          "on seq-shardable (prefill) launches")
+    ap.add_argument("--kv-dtype", default="",
+                    choices=["", "float32", "bfloat16", "int8", "fp8"],
+                    help="paged KV pool storage dtype: int8/fp8 store "
+                         "quantized pages + per-page-per-head scales and "
+                         "fuse dequantization into the attention kernels "
+                         "for 2-4x effective pool capacity (empty = full "
+                         "precision, bit-identical to before the flag)")
     ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
                     help="automatic prefix caching (paged engine): share "
                          "committed KV pages across requests with common "
@@ -306,10 +315,25 @@ def main(argv=None) -> int:
             make_host_mesh(tp=args.tp),
             rs_block_outputs=args.rs_block_outputs,
         )
+    if args.kv_dtype and args.engine != "paged":
+        ap.error("--kv-dtype requires --engine paged (only the paged pool "
+                 "stores quantized KV pages)")
     engine = ServingEngine(
         model, params, max_batch=args.engine_batch, max_seq=args.max_seq,
         page_size=args.page_size, rules=rules,
+        kv_dtype=args.kv_dtype or None,
     )
+    # report header: the engine knobs this evaluation ran under, so the run
+    # is self-describing (same block lands in the evaldb record)
+    knobs = EngineKnobs(
+        engine=args.engine,
+        kv_dtype=args.kv_dtype or engine.cache_dtype,
+        page_size=args.page_size if args.engine == "paged" else 0,
+        spec_k=args.spec_k if args.engine == "paged" else 0,
+        prefix_cache=args.engine == "paged" and args.prefix_cache == "on",
+        tp=engine.tp,
+    )
+    print(f"[serve] {knobs.describe()}")
     if args.tp > 1:
         print(f"[serve] tensor parallelism: requested tp={args.tp}, "
               f"effective tp={engine.tp} "
@@ -352,7 +376,8 @@ def main(argv=None) -> int:
                 backend_version="1.0.0", system="local",
                 scenario=f"serve-{args.engine}",
                 batch_size=args.engine_batch, trace_level="NONE",
-                agent_id="serve-driver", metrics=summary,
+                agent_id="serve-driver",
+                metrics={**summary, "engine_knobs": knobs.to_dict()},
             )
         )
     return 0

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import ops
+from ..kernels import kvquant, ops
 from ..sharding.specs import opt_enabled, param_pspecs, shard_act
 from .config import ArchConfig
 from .modules import (
@@ -491,6 +491,21 @@ class DecoderLM(BaseModel):
             )
         kv, dh, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
         axes = ("layer", None, "kv_seq", "act_kv", "head_dim")
+        if kvquant.is_quantized(dtype):
+            # quantized pool: int8/fp8 pages + a parallel float32 scale pool
+            # (one scale per page row per kv head); scales shard with heads
+            store = kvquant.pool_dtype(dtype)
+            sc_axes = ("layer", None, "kv_seq", "act_kv")
+            return {
+                "k_pages": P((L, num_pages, page_size, kv, dh), "zeros",
+                             dtype=store, axes=axes),
+                "v_pages": P((L, num_pages, page_size, kv, dh), "zeros",
+                             dtype=store, axes=axes),
+                "k_scales": P((L, num_pages, page_size, kv), "zeros",
+                              dtype="float32", axes=sc_axes),
+                "v_scales": P((L, num_pages, page_size, kv), "zeros",
+                              dtype="float32", axes=sc_axes),
+            }
         return {
             "k_pages": P((L, num_pages, page_size, kv, dh), "zeros",
                          dtype=dtype, axes=axes),
@@ -699,6 +714,17 @@ class DecoderLM(BaseModel):
         return logits, new_cache
 
     # -- paged serving (global page pool + per-request page tables) --------------------
+    @staticmethod
+    def _paged_stacks(cache):
+        """Cache stacks the paged serving bodies carry through the layer
+        scan — the float32 scale pools ride along when the pool is
+        quantized."""
+        return {
+            k: cache[k]
+            for k in ("k_pages", "v_pages", "k_scales", "v_scales")
+            if k in cache
+        }
+
     def decode_paged(self, params, tokens, cache, page_table, lengths,
                      pages_bound=None):
         """One paged decode step for a pool of slots.
@@ -729,20 +755,29 @@ class DecoderLM(BaseModel):
             blk = self._cast(xs_l[0])
             window = xs_l[1] if len(xs_l) > 1 else None
             h = self._norm(x1, blk["ln1"])
-            a, kp, vp = attn_decode_paged(
-                blk["attn"], h, caches["k_pages"], caches["v_pages"],
-                page_table, pos, cfg, backend=self.backend,
-                window=window, pages_bound=pages_bound,
-            )
+            if "k_scales" in caches:
+                a, kp, vp, ksc, vsc = attn_decode_paged(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_table, pos, cfg, backend=self.backend,
+                    window=window, pages_bound=pages_bound,
+                    k_scales=caches["k_scales"], v_scales=caches["v_scales"],
+                )
+                new_l = {"k_pages": kp, "v_pages": vp,
+                         "k_scales": ksc, "v_scales": vsc}
+            else:
+                a, kp, vp = attn_decode_paged(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_table, pos, cfg, backend=self.backend,
+                    window=window, pages_bound=pages_bound,
+                )
+                new_l = {"k_pages": kp, "v_pages": vp}
             if cfg.post_norms:
                 a = self._norm(a, blk["post_attn_norm"])
             x1 = x1 + a
-            return self._block_ffn(blk, x1), {"k_pages": kp, "v_pages": vp}
+            return self._block_ffn(blk, x1), new_l
 
         x, stacks = _scan_cached(
-            body, x, xs,
-            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
-            cfg.num_layers,
+            body, x, xs, self._paged_stacks(cache), cfg.num_layers,
         )
         new_cache = dict(cache)
         new_cache.update(stacks)
@@ -790,20 +825,29 @@ class DecoderLM(BaseModel):
             blk = self._cast(xs_l[0])
             window = xs_l[1] if len(xs_l) > 1 else None
             h = self._norm(x1, blk["ln1"])
-            a, kp, vp = attn_decode_spec(
-                blk["attn"], h, caches["k_pages"], caches["v_pages"],
-                page_table, pos, wlens, cfg, backend=self.backend,
-                window=window, pages_bound=pages_bound,
-            )
+            if "k_scales" in caches:
+                a, kp, vp, ksc, vsc = attn_decode_spec(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_table, pos, wlens, cfg, backend=self.backend,
+                    window=window, pages_bound=pages_bound,
+                    k_scales=caches["k_scales"], v_scales=caches["v_scales"],
+                )
+                new_l = {"k_pages": kp, "v_pages": vp,
+                         "k_scales": ksc, "v_scales": vsc}
+            else:
+                a, kp, vp = attn_decode_spec(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_table, pos, wlens, cfg, backend=self.backend,
+                    window=window, pages_bound=pages_bound,
+                )
+                new_l = {"k_pages": kp, "v_pages": vp}
             if cfg.post_norms:
                 a = self._norm(a, blk["post_attn_norm"])
             x1 = x1 + a
-            return self._block_ffn(blk, x1), {"k_pages": kp, "v_pages": vp}
+            return self._block_ffn(blk, x1), new_l
 
         x, stacks = _scan_cached(
-            body, x, xs,
-            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
-            cfg.num_layers,
+            body, x, xs, self._paged_stacks(cache), cfg.num_layers,
         )
         new_cache = dict(cache)
         new_cache.update(stacks)
@@ -840,19 +884,27 @@ class DecoderLM(BaseModel):
             blk = self._cast(xs_l[0])
             window = xs_l[1] if len(xs_l) > 1 else None
             h = self._norm(x, blk["ln1"])
-            a, kp, vp = attn_prefill_paged(
-                blk["attn"], h, caches["k_pages"], caches["v_pages"],
-                page_row, pos0, cfg, backend=self.backend, window=window,
-            )
+            if "k_scales" in caches:
+                a, kp, vp, ksc, vsc = attn_prefill_paged(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_row, pos0, cfg, backend=self.backend, window=window,
+                    k_scales=caches["k_scales"], v_scales=caches["v_scales"],
+                )
+                new_l = {"k_pages": kp, "v_pages": vp,
+                         "k_scales": ksc, "v_scales": vsc}
+            else:
+                a, kp, vp = attn_prefill_paged(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    page_row, pos0, cfg, backend=self.backend, window=window,
+                )
+                new_l = {"k_pages": kp, "v_pages": vp}
             if cfg.post_norms:
                 a = self._norm(a, blk["post_attn_norm"])
             x = x + a
-            return self._block_ffn(blk, x), {"k_pages": kp, "v_pages": vp}
+            return self._block_ffn(blk, x), new_l
 
         x, stacks = _scan_cached(
-            body, x, xs,
-            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
-            cfg.num_layers,
+            body, x, xs, self._paged_stacks(cache), cfg.num_layers,
         )
         new_cache = dict(cache)
         new_cache.update(stacks)
@@ -899,20 +951,29 @@ class DecoderLM(BaseModel):
             blk = self._cast(xs_l[0])
             window = xs_l[1] if len(xs_l) > 1 else None
             h = self._norm(x, blk["ln1"])
-            a, kp, vp = attn_prefill_packed(
-                blk["attn"], h, caches["k_pages"], caches["v_pages"],
-                meta, cfg, backend=self.backend, window=window,
-                pages_bound=pages_bound,
-            )
+            if "k_scales" in caches:
+                a, kp, vp, ksc, vsc = attn_prefill_packed(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    meta, cfg, backend=self.backend, window=window,
+                    pages_bound=pages_bound,
+                    k_scales=caches["k_scales"], v_scales=caches["v_scales"],
+                )
+                new_l = {"k_pages": kp, "v_pages": vp,
+                         "k_scales": ksc, "v_scales": vsc}
+            else:
+                a, kp, vp = attn_prefill_packed(
+                    blk["attn"], h, caches["k_pages"], caches["v_pages"],
+                    meta, cfg, backend=self.backend, window=window,
+                    pages_bound=pages_bound,
+                )
+                new_l = {"k_pages": kp, "v_pages": vp}
             if cfg.post_norms:
                 a = self._norm(a, blk["post_attn_norm"])
             x = x + a
-            return self._block_ffn(blk, x), {"k_pages": kp, "v_pages": vp}
+            return self._block_ffn(blk, x), new_l
 
         x, stacks = _scan_cached(
-            body, x, xs,
-            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
-            cfg.num_layers,
+            body, x, xs, self._paged_stacks(cache), cfg.num_layers,
         )
         new_cache = dict(cache)
         new_cache.update(stacks)

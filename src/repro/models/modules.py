@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import ops
+from ..kernels import kvquant, ops
 from ..sharding.specs import opt_enabled, shard_act
 from .config import ArchConfig
 from .params import P
@@ -226,12 +226,16 @@ def attn_decode_paged(
     window=None,
     use_rope: bool = True,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kv) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ):
     """Single-token attention against a paged KV pool.
 
     The new token's K/V are appended to the page holding logical position
     ``pos`` (a per-row scatter through the page table); attention then runs
-    over only the request's live pages.  Returns (y, k_pages, v_pages).
+    over only the request's live pages.  With a quantized pool the append
+    quantizes the new rows and scatters their scales at the same indices.
+    Returns (y, k_pages, v_pages) — plus the scale pools when quantized.
     """
     b = x1.shape[0]
     page_size = k_pages.shape[1]
@@ -239,18 +243,30 @@ def attn_decode_paged(
     q, k, v = _project_qkv(p, x1, cfg, positions, backend)
     page_ids = page_table[jnp.arange(b), pos // page_size]    # (b,)
     offsets = pos % page_size
-    k_pages = k_pages.at[page_ids, offsets].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[page_ids, offsets].set(v[:, 0].astype(v_pages.dtype))
+    if k_scales is not None:
+        kq, ks = kvquant.quantize(k[:, 0], k_pages.dtype)
+        vq, vs = kvquant.quantize(v[:, 0], v_pages.dtype)
+        k_pages = k_pages.at[page_ids, offsets].set(kq)
+        v_pages = v_pages.at[page_ids, offsets].set(vq)
+        k_scales = k_scales.at[page_ids, offsets].set(ks)
+        v_scales = v_scales.at[page_ids, offsets].set(vs)
+    else:
+        k_pages = k_pages.at[page_ids, offsets].set(k[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[page_ids, offsets].set(v[:, 0].astype(v_pages.dtype))
     out = ops.paged_attention(
         q, k_pages, v_pages, page_table, pos + 1,
         softcap=cfg.attn_softcap,
         window=window,
         backend=backend,
         pages_bound=pages_bound,
+        k_scales=k_scales,
+        v_scales=v_scales,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     if opt_enabled("rs_block_outputs"):
         y = shard_act(y, ("batch", "seq", "act_embed"))
+    if k_scales is not None:
+        return y, k_pages, v_pages, k_scales, v_scales
     return y, k_pages, v_pages
 
 
@@ -268,6 +284,8 @@ def attn_decode_spec(
     window=None,
     use_rope: bool = True,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kv) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ):
     """Speculative-verification attention: score a whole ``[next_token,
     draft_1..draft_k]`` window per slot against the paged pool in one launch.
@@ -279,7 +297,8 @@ def attn_decode_spec(
     of one-token decode steps.  Rows past ``window_lens[b]`` (window pad /
     idle slots) scatter into positions the length mask never reads — pages
     are append-only, so a rejected suffix rolls back by just rewinding
-    ``lengths``.  Returns (y, k_pages, v_pages).
+    ``lengths``.  Returns (y, k_pages, v_pages) — plus the scale pools when
+    quantized.
     """
     b, W, _ = xw.shape
     page_size = k_pages.shape[1]
@@ -292,18 +311,30 @@ def attn_decode_spec(
     pidx = jnp.minimum(tok_pos // page_size, max_pages - 1)
     page_ids = jnp.take_along_axis(page_table, pidx, axis=1)   # (b, W)
     offsets = tok_pos % page_size
-    k_pages = k_pages.at[page_ids, offsets].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[page_ids, offsets].set(v.astype(v_pages.dtype))
+    if k_scales is not None:
+        kq, ks = kvquant.quantize(k, k_pages.dtype)
+        vq, vs = kvquant.quantize(v, v_pages.dtype)
+        k_pages = k_pages.at[page_ids, offsets].set(kq)
+        v_pages = v_pages.at[page_ids, offsets].set(vq)
+        k_scales = k_scales.at[page_ids, offsets].set(ks)
+        v_scales = v_scales.at[page_ids, offsets].set(vs)
+    else:
+        k_pages = k_pages.at[page_ids, offsets].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[page_ids, offsets].set(v.astype(v_pages.dtype))
     out = ops.spec_verify(
         q, k_pages, v_pages, page_table, lengths, window_lens,
         softcap=cfg.attn_softcap,
         window=window,
         backend=backend,
         pages_bound=pages_bound,
+        k_scales=k_scales,
+        v_scales=v_scales,
     )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     if opt_enabled("rs_block_outputs"):
         y = shard_act(y, ("batch", "seq", "act_embed"))
+    if k_scales is not None:
+        return y, k_pages, v_pages, k_scales, v_scales
     return y, k_pages, v_pages
 
 
@@ -318,6 +349,8 @@ def attn_prefill_paged(
     *,
     backend: str,
     window=None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kv) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ):
     """One chunked-prefill step: attend the chunk to the request's already-
     paged context plus itself (causal), then append the chunk's K/V to the
@@ -325,8 +358,10 @@ def attn_prefill_paged(
     so the context occupies exactly the first ``pos0 // page_size`` pages.
     The chunk may be right-padded to a page multiple: causal attention keeps
     pad rows invisible to real rows, and pad K/V lands in positions the
-    decode path masks (by length) until it overwrites them.
-    Returns (y, k_pages, v_pages).
+    decode path masks (by length) until it overwrites them.  With a
+    quantized pool the gathered context dequantizes through its scale rows
+    and the append quantizes the chunk.  Returns (y, k_pages, v_pages) —
+    plus the scale pools when quantized.
     """
     c = x.shape[1]
     page_size = k_pages.shape[1]
@@ -338,6 +373,11 @@ def attn_prefill_paged(
     if n_ctx:
         kctx = k_pages[page_row[:n_ctx]].reshape(1, pos0, *k_pages.shape[2:])
         vctx = v_pages[page_row[:n_ctx]].reshape(1, pos0, *v_pages.shape[2:])
+        if k_scales is not None:
+            ksc = k_scales[page_row[:n_ctx]].reshape(1, pos0, k_scales.shape[-1])
+            vsc = v_scales[page_row[:n_ctx]].reshape(1, pos0, v_scales.shape[-1])
+            kctx = kctx.astype(jnp.float32) * ksc[..., None]
+            vctx = vctx.astype(jnp.float32) * vsc[..., None]
         k_all = jnp.concatenate([kctx.astype(k.dtype), k], axis=1)
         v_all = jnp.concatenate([vctx.astype(v.dtype), v], axis=1)
     else:
@@ -356,6 +396,14 @@ def attn_prefill_paged(
     tok_pos = pos0 + jnp.arange(c)
     page_ids = page_row[tok_pos // page_size]
     offsets = tok_pos % page_size
+    if k_scales is not None:
+        kq, ks = kvquant.quantize(k[0], k_pages.dtype)
+        vq, vs = kvquant.quantize(v[0], v_pages.dtype)
+        k_pages = k_pages.at[page_ids, offsets].set(kq)
+        v_pages = v_pages.at[page_ids, offsets].set(vq)
+        k_scales = k_scales.at[page_ids, offsets].set(ks)
+        v_scales = v_scales.at[page_ids, offsets].set(vs)
+        return y, k_pages, v_pages, k_scales, v_scales
     k_pages = k_pages.at[page_ids, offsets].set(k[0].astype(k_pages.dtype))
     v_pages = v_pages.at[page_ids, offsets].set(v[0].astype(v_pages.dtype))
     return y, k_pages, v_pages
@@ -372,6 +420,8 @@ def attn_prefill_packed(
     backend: str,
     window=None,
     pages_bound: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,  # (num_pages, page_size, kv) f32
+    v_scales: Optional[jnp.ndarray] = None,
 ):
     """One packed varlen-prefill step: chunks from many requests share the
     packed buffer; each attends its request's committed pages plus the
@@ -387,7 +437,7 @@ def attn_prefill_packed(
     * ``chunk_pos0``  (C,)   absolute chunk starts (page-aligned)
     * ``page_tables`` (C, max_pages) the owning requests' pages
 
-    Returns (y, k_pages, v_pages).
+    Returns (y, k_pages, v_pages) — plus the scale pools when quantized.
     """
     positions = meta["tok_pos"][None, :]
     q, k, v = _project_qkv(p, x, cfg, positions, backend)
@@ -399,10 +449,20 @@ def attn_prefill_packed(
         window=window,
         backend=backend,
         pages_bound=pages_bound,
+        k_scales=k_scales,
+        v_scales=v_scales,
     )
     y = jnp.einsum("bshk,hkd->bsd", out[None], p["wo"])
     if opt_enabled("rs_block_outputs"):
         y = shard_act(y, ("batch", "seq", "act_embed"))
+    if k_scales is not None:
+        kq, ks = kvquant.quantize(k[0], k_pages.dtype)
+        vq, vs = kvquant.quantize(v[0], v_pages.dtype)
+        k_pages = k_pages.at[meta["dst_page"], meta["dst_off"]].set(kq)
+        v_pages = v_pages.at[meta["dst_page"], meta["dst_off"]].set(vq)
+        k_scales = k_scales.at[meta["dst_page"], meta["dst_off"]].set(ks)
+        v_scales = v_scales.at[meta["dst_page"], meta["dst_off"]].set(vs)
+        return y, k_pages, v_pages, k_scales, v_scales
     k_pages = k_pages.at[meta["dst_page"], meta["dst_off"]].set(
         k[0].astype(k_pages.dtype)
     )

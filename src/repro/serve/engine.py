@@ -56,7 +56,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from ..core.analysis import percentile
-from ..kernels import ops
+from ..kernels import kvquant, ops
 from ..models.lm import BaseModel
 from ..models.params import tree_map_defs
 from ..sharding.specs import (
@@ -215,6 +215,9 @@ class PagedStats:
     itl_p99_ms: float = 0.0
     # -- tensor parallelism -------------------------------------------------
     tp: int = 1                 # effective model-axis degree (1 = unsharded)
+    # -- quantized KV pages -------------------------------------------------
+    kv_dtype: str = "float32"   # pool storage mode (int8/fp8 = quantized)
+    kv_bytes_per_token: float = 0.0  # pool bytes per token incl. scales
 
 
 class ServingEngine:
@@ -227,6 +230,7 @@ class ServingEngine:
         cache_dtype: str = "float32",
         page_size: int = 16,
         rules: Optional[ShardingRules] = None,
+        kv_dtype: Optional[str] = None,
     ) -> None:
         self.model = model
         # tensor parallelism: ``rules`` maps the existing logical axes
@@ -254,6 +258,12 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        # quantized KV pages: ``kv_dtype`` in {"int8", "fp8"} stores the
+        # paged pool quantized (parallel f32 scale pool, dequant fused into
+        # the serving kernels); None keeps the full-precision pool and every
+        # code path bit-identical to an engine without the argument
+        self._kv_quantized = kvquant.is_quantized(kv_dtype)  # validates too
+        self.kv_dtype = kv_dtype
         # tokens per KV page (paged engine) — doubles as the prefill length-
         # bucket floor so admission shapes snap to page boundaries
         self.page_size = page_size
@@ -283,7 +293,9 @@ class ServingEngine:
         self._mirror_patch_shapes: set = set()
         # copy-on-write page duplication (prefix caching): one donated
         # gather/scatter over the pools per shared page about to be written
+        # (the quantized variant donates and copies the scale pools too)
         self._cow_copy = jax.jit(ops.copy_pages, donate_argnums=(0, 1))
+        self._cow_copy_q = jax.jit(ops.copy_pages, donate_argnums=(0, 1, 4, 5))
         self._cow_shapes: set = set()
         self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self._packed_prefill_fns: Dict[Tuple[int, int, int, int], Callable] = {}
@@ -788,7 +800,8 @@ class ServingEngine:
         if not requests:
             return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
                               0.0, 0, 0, 0, {}, prefill_mode=prefill_mode,
-                              tp=self.tp)
+                              tp=self.tp,
+                              kv_dtype=self.kv_dtype or self.cache_dtype)
         if overcommit <= 0:
             raise ValueError("overcommit must be > 0")
         compiles_before = self.compile_stats()
@@ -826,20 +839,24 @@ class ServingEngine:
         slots = PagedSlotPool(num_slots, pool, tracer=tracer, clock=clock)
         table = PageTable(num_slots, max_pages_per_seq, scratch_page=0)
         pcache = PrefixCache(pool) if prefix_cache else None
+        # quantized mode swaps the pool dtype and adds the f32 scale pools
+        # (paged_cache_defs branches on the dtype string)
+        pool_dtype = self.kv_dtype or self.cache_dtype
         cache = self.model.init_paged_cache(
-            num_pages, page_size, dtype=self.cache_dtype
+            num_pages, page_size, dtype=pool_dtype
         )
         if self.rules is not None:
             # heads-split pool: each shard holds kv/tp heads of EVERY page,
             # so a fixed per-shard page budget carries tp× the tokens while
             # the PagePool/PageTable accounting above stays host-global
+            # (the scale pools shard on the same kv-head axis)
             cache = jax.device_put(
                 cache,
                 _named_shardings(
                     self.rules.mesh,
                     self.model.paged_cache_pspecs(
                         self.rules, num_pages, page_size,
-                        dtype=self.cache_dtype,
+                        dtype=pool_dtype,
                     ),
                 ),
             )
@@ -1057,10 +1074,19 @@ class ServingEngine:
             if fresh is None:  # pragma: no cover - guarded by ensure_free
                 return False
             t0c = clock()
-            cache["k_pages"], cache["v_pages"] = self._cow_copy(
-                cache["k_pages"], cache["v_pages"],
-                np.asarray([p], np.int32), np.asarray([fresh[0]], np.int32),
-            )
+            src_d = np.asarray([p], np.int32)
+            dst_d = np.asarray([fresh[0]], np.int32)
+            if "k_scales" in cache:
+                # the scale rows move with their pages
+                (cache["k_pages"], cache["v_pages"],
+                 cache["k_scales"], cache["v_scales"]) = self._cow_copy_q(
+                    cache["k_pages"], cache["v_pages"], src_d, dst_d,
+                    cache["k_scales"], cache["v_scales"],
+                )
+            else:
+                cache["k_pages"], cache["v_pages"] = self._cow_copy(
+                    cache["k_pages"], cache["v_pages"], src_d, dst_d,
+                )
             # pool shapes are per-call arguments: one jit variant per
             # (pool size, page size) configuration
             self._cow_shapes.add((num_pages, page_size))
@@ -1556,4 +1582,9 @@ class ServingEngine:
             itl_p50_ms=percentile(itl_all, 50.0) * 1e3 if itl_all else 0.0,
             itl_p99_ms=percentile(itl_all, 99.0) * 1e3 if itl_all else 0.0,
             tp=self.tp,
+            kv_dtype=pool_dtype,
+            kv_bytes_per_token=float(
+                sum(v.nbytes for v in cache.values())
+                / (num_pages * page_size)
+            ),
         )

@@ -1,0 +1,436 @@
+"""Quantized KV pages (int8/fp8): quantize/dequant bounds, fused-dequant
+kernel parity against attending over a pre-dequantized pool, scale pools
+moving with pages under COW, pool/table invariants with an attached scale
+pool, flag-off bit-identity, quantized cross-mode token identity, the
+divergence harness, engine-knob manifests, and lower-is-better regression
+gating."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analysis import kv_divergence_section, kv_divergence_summary
+from repro.core.manifest import EngineKnobs
+from repro.kernels import kvquant, ops, ref
+from repro.kernels.paged_attention import paged_attention as pallas_paged
+from repro.kernels.spec_verify import spec_verify as pallas_spec
+from repro.kernels.varlen_prefill import varlen_prefill as pallas_varlen
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine
+from repro.serve.page_table import PagePool, PageTable
+
+H, KVH, DH = 8, 4, 16
+PAGE = 8
+
+# fused-dequant kernels do scale * int8 in f32 exactly like the
+# pre-dequantized oracle; only summation order differs
+TOL = dict(rtol=1e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# kvquant module
+# ---------------------------------------------------------------------------
+def test_is_quantized_modes():
+    assert kvquant.is_quantized("int8")
+    assert kvquant.is_quantized("fp8")
+    for full in (None, "float32", "bfloat16", "float16", "f32", "bf16"):
+        assert not kvquant.is_quantized(full)
+    with pytest.raises(ValueError):
+        kvquant.is_quantized("int4")
+
+
+def test_pool_dtype_and_quant_max():
+    assert kvquant.pool_dtype("int8") == "int8"
+    assert kvquant.pool_dtype("fp8") == "float8_e4m3fn"
+    assert kvquant.quant_max(jnp.int8) == 127.0
+    assert kvquant.quant_max(jnp.float8_e4m3fn) == 448.0
+    with pytest.raises(ValueError):
+        kvquant.quant_max(jnp.float32)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+def test_quantize_roundtrip_error_bound(mode):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, PAGE, KVH, DH)) * 3.0, jnp.float32)
+    q, scales = kvquant.quantize(x, kvquant.pool_dtype(mode))
+    assert q.shape == x.shape and scales.shape == x.shape[:-1]
+    assert scales.dtype == jnp.float32
+    deq = kvquant.dequantize(q, scales)
+    # per-(row, head) error bound: half a quantization step for int8,
+    # e4m3's ~2^-3 relative precision at the row amax for fp8
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    step = amax / 127.0 if mode == "int8" else amax / 8.0
+    assert np.all(np.abs(np.asarray(deq - x)) <= step + 1e-6)
+
+
+def test_quantize_zero_rows_stay_zero():
+    x = jnp.zeros((2, PAGE, KVH, DH), jnp.float32)
+    q, scales = kvquant.quantize(x, "int8")
+    assert np.all(np.asarray(scales) == 0.0)
+    np.testing.assert_array_equal(np.asarray(kvquant.dequantize(q, scales)), 0.0)
+
+
+def test_kv_bytes_per_token_math():
+    L, kvh, dh = 3, 2, 64
+    assert kvquant.kv_bytes_per_token(L, kvh, dh, "float32") == 2 * L * kvh * dh * 4
+    assert kvquant.kv_bytes_per_token(L, kvh, dh, "bfloat16") == 2 * L * kvh * dh * 2
+    # quantized: 1 byte payload + 4-byte f32 scale per row per head
+    assert kvquant.kv_bytes_per_token(L, kvh, dh, "int8") == 2 * L * kvh * (dh + 4)
+    assert kvquant.kv_bytes_per_token(L, kvh, dh, "fp8") == 2 * L * kvh * (dh + 4)
+
+
+# ---------------------------------------------------------------------------
+# fused-dequant kernels vs attending over the pre-dequantized pool
+# ---------------------------------------------------------------------------
+def _quantized_pools(rng, num_pages, mode):
+    k = jnp.asarray(rng.standard_normal((num_pages, PAGE, KVH, DH)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((num_pages, PAGE, KVH, DH)), jnp.float32)
+    store = kvquant.pool_dtype(mode)
+    kq, ks = kvquant.quantize(k, store)
+    vq, vs = kvquant.quantize(v, store)
+    return (kq, ks, vq, vs), (kvquant.dequantize(kq, ks), kvquant.dequantize(vq, vs))
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+@pytest.mark.parametrize("impl", ["ref", "jnp", "pallas"])
+def test_paged_attention_quantized(mode, impl):
+    rng = np.random.default_rng(0)
+    (kq, ks, vq, vs), (kd, vd) = _quantized_pools(rng, 24, mode)
+    b, max_pages = 4, 4
+    q = jnp.asarray(rng.standard_normal((b, 1, H, DH)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, 24))[: b * max_pages].reshape(b, max_pages),
+        jnp.int32,
+    )
+    lengths = jnp.asarray([5, 13, 1, 27], jnp.int32)
+    want = ref.paged_attention(q, kd, vd, table, lengths)
+
+    def dispatch_ref(*a, **kw):
+        return ops.paged_attention(*a, backend="ref", **kw)
+
+    fn = {"ref": ref.paged_attention, "jnp": dispatch_ref,
+          "pallas": pallas_paged}[impl]
+    got = fn(q, kq, vq, table, lengths, k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+@pytest.mark.parametrize("impl", ["ref", "jnp", "pallas"])
+def test_varlen_prefill_quantized(mode, impl):
+    rng = np.random.default_rng(1)
+    (kq, ks, vq, vs), (kd, vd) = _quantized_pools(rng, 24, mode)
+    C, max_pages = 4, 4
+    spans = [16, 8, 24, 16]
+    T = sum(spans)
+    cu = np.zeros((C + 1,), np.int32)
+    cu[1:] = np.cumsum(spans)
+    chunk_lens = jnp.asarray([13, 8, 21, 10], jnp.int32)
+    chunk_pos0 = jnp.asarray([0, 16, 8, 0], jnp.int32)
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, 24))[: C * max_pages].reshape(C, max_pages),
+        jnp.int32,
+    )
+    # the packed chunk K/V stay full precision — only committed context
+    # pages are quantized
+    q = jnp.asarray(rng.standard_normal((T, H, DH)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((T, KVH, DH)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((T, KVH, DH)), jnp.float32)
+    args = (q, k, v)
+    rest = (jnp.asarray(cu), chunk_lens, chunk_pos0, tables)
+    want = ref.varlen_prefill(*args, kd, vd, *rest)
+    fn = {"ref": ref.varlen_prefill, "jnp": ops.varlen_prefill_jnp,
+          "pallas": pallas_varlen}[impl]
+    got = fn(*args, kq, vq, *rest, k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+@pytest.mark.parametrize("impl", ["ref", "jnp", "pallas"])
+def test_spec_verify_quantized(mode, impl):
+    rng = np.random.default_rng(2)
+    (kq, ks, vq, vs), (kd, vd) = _quantized_pools(rng, 24, mode)
+    b, W, max_pages = 4, 3, 4
+    q = jnp.asarray(rng.standard_normal((b, W, H, DH)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, 24))[: b * max_pages].reshape(b, max_pages),
+        jnp.int32,
+    )
+    lengths = jnp.asarray([5, 14, 3, 26], jnp.int32)
+    window_lens = jnp.asarray([3, 1, 0, 2], jnp.int32)
+    want = ref.spec_verify(q, kd, vd, table, lengths, window_lens)
+    fn = {"ref": ref.spec_verify, "jnp": ops.spec_verify_jnp,
+          "pallas": pallas_spec}[impl]
+    got = fn(q, kq, vq, table, lengths, window_lens, k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# scale pools move with pages (COW) + pool/table invariants
+# ---------------------------------------------------------------------------
+def test_copy_pages_moves_scales_with_pages():
+    rng = np.random.default_rng(3)
+    L, num_pages = 2, 10
+    k = jnp.asarray(rng.standard_normal((L, num_pages, PAGE, KVH, DH)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((L, num_pages, PAGE, KVH, DH)), jnp.float32)
+    kq, ks = kvquant.quantize(k, "int8")
+    vq, vs = kvquant.quantize(v, "int8")
+    src = jnp.asarray([2, 5], jnp.int32)
+    dst = jnp.asarray([7, 8], jnp.int32)
+    out = ops.copy_pages(kq, vq, src, dst, ks, vs)
+    assert len(out) == 4
+    nk, nv, nks, nvs = (np.asarray(t) for t in out)
+    for s, d in ((2, 7), (5, 8)):
+        np.testing.assert_array_equal(nk[:, d], np.asarray(kq)[:, s])
+        np.testing.assert_array_equal(nks[:, d], np.asarray(ks)[:, s])
+        np.testing.assert_array_equal(nvs[:, d], np.asarray(vs)[:, s])
+    # unquantized call keeps the 2-tuple contract
+    out2 = ops.copy_pages(kq, vq, src, dst)
+    assert len(out2) == 2
+
+
+def test_page_pool_invariants_with_scale_pool():
+    """Refcount / COW / truncate / double-free invariants are dtype-blind:
+    the scale pool is a parallel array indexed by the SAME page ids, so any
+    page the pool hands out (or reclaims) indexes both pools consistently."""
+    pool = PagePool(num_pages=12, page_size=PAGE)
+    table = PageTable(num_slots=2, max_pages=4)
+    # parallel physical pools: int8 payload + f32 scales, one row per page
+    k_pages = np.zeros((12, PAGE, KVH, DH), np.int8)
+    k_scales = np.zeros((12, PAGE, KVH), np.float32)
+
+    a = pool.alloc(3)
+    table.assign(0, a)
+    for p in a:
+        k_pages[p] = p          # stamp payload + scales with the page id
+        k_scales[p] = float(p)
+    # share page a[0] with slot 1 (prefix-cache style) and COW-split it
+    pool.incref([a[0]])
+    table.assign(1, [a[0]])
+    assert pool.refcount(a[0]) == 2 and pool.num_shared == 1
+    (priv,) = pool.alloc(1)
+    k_pages[priv] = k_pages[a[0]]
+    k_scales[priv] = k_scales[a[0]]
+    table.replace(1, 0, priv)
+    pool.free([a[0]])                         # drop slot 1's shared ref
+    assert pool.refcount(a[0]) == 1           # slot 0 still holds it
+    np.testing.assert_array_equal(k_scales[priv], k_scales[a[0]])
+
+    # truncate slot 0 to one page: released page ids index BOTH pools, so
+    # zeroing the released scale rows is a consistent reclaim
+    released = table.truncate(0, keep=1)
+    assert released == a[1:]
+    pool.free(released)
+    for p in released:
+        k_scales[p] = 0.0
+        assert pool.refcount(p) == 0
+    # double-free guard covers the released (scale-carrying) pages too
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([released[0]])
+    # and slot 0's surviving page still has its scales intact
+    assert float(k_scales[a[0]][0, 0]) == float(a[0])
+
+
+def test_paged_cache_defs_quantized():
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    defs = model.paged_cache_defs(num_pages=6, page_size=PAGE, dtype="int8")
+    assert set(defs) >= {"k_pages", "v_pages", "k_scales", "v_scales"}
+    assert jnp.dtype(defs["k_pages"].dtype) == jnp.dtype(jnp.int8)
+    L = cfg.num_layers
+    assert defs["k_scales"].shape == (L, 6, PAGE, cfg.num_kv_heads)
+    assert jnp.dtype(defs["k_scales"].dtype) == jnp.dtype(jnp.float32)
+    # scale pools shard with the kv heads (trailing axis), like the pages
+    assert defs["k_scales"].axes[-1] == defs["k_pages"].axes[-2]
+    # full-precision defs carry no scale pools (bit-identical off mode)
+    plain = model.paged_cache_defs(num_pages=6, page_size=PAGE, dtype="float32")
+    assert set(plain) == {"k_pages", "v_pages"}
+
+
+# ---------------------------------------------------------------------------
+# engine: flag off == bit-identical; quantized modes agree with each other
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def _served_model():
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, shared_prefix=False):
+    rng = np.random.default_rng(7)
+    if shared_prefix:
+        prefix = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+        prompts = [
+            np.concatenate([prefix, rng.integers(0, cfg.vocab_size, (n,))
+                            .astype(np.int32)])
+            for n in (5, 3, 7, 2)
+        ]
+    else:
+        prompts = [
+            rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in (5, 9, 13, 4)
+        ]
+    return [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=m)
+        for i, (p, m) in enumerate(zip(prompts, (6, 4, 8, 3)))
+    ]
+
+
+def _tokens_by_id(stats):
+    return {r.request_id: r.tokens.tolist() for r in stats.results}
+
+
+@pytest.mark.parametrize("prefill_mode", ["packed", "chunked"])
+@pytest.mark.parametrize("spec_k", [0, 2])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_kv_dtype_off_is_bit_identical(_served_model, prefill_mode, spec_k,
+                                       prefix_cache):
+    """kv_dtype=None must be byte-for-byte the engine that existed before
+    the flag: same pool dtypes, same launches, same greedy tokens."""
+    cfg, model, params = _served_model
+    kwargs = dict(
+        num_slots=3, page_size=8, num_pages=40, prefill_mode=prefill_mode,
+        spec_k=spec_k, prefix_cache=prefix_cache,
+    )
+    base = ServingEngine(model, params, max_batch=3, max_seq=64).serve_paged(
+        _requests(cfg, prefix_cache), **kwargs
+    )
+    off = ServingEngine(
+        model, params, max_batch=3, max_seq=64, kv_dtype=None
+    ).serve_paged(_requests(cfg, prefix_cache), **kwargs)
+    assert _tokens_by_id(off) == _tokens_by_id(base)
+    assert off.kv_dtype == base.kv_dtype == "float32"
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+def test_quantized_cross_mode_token_identity(_served_model, mode):
+    """Every serving path reads the same quantized pool through the same
+    fused-dequant math, so packed == chunked prefill, spec on == off, and
+    prefix-cache on == off must hold token-exactly even though quantized
+    tokens may differ from full precision."""
+    cfg, model, params = _served_model
+    eng = ServingEngine(
+        model, params, max_batch=3, max_seq=64, kv_dtype=mode
+    )
+    base = eng.serve_paged(
+        _requests(cfg), num_slots=3, page_size=8, num_pages=40
+    )
+    assert base.kv_dtype == mode
+    assert base.kv_bytes_per_token > 0
+    chunked = eng.serve_paged(
+        _requests(cfg), num_slots=3, page_size=8, num_pages=40,
+        prefill_mode="chunked",
+    )
+    assert _tokens_by_id(chunked) == _tokens_by_id(base)
+    spec = eng.serve_paged(
+        _requests(cfg), num_slots=3, page_size=8, num_pages=40, spec_k=2
+    )
+    assert _tokens_by_id(spec) == _tokens_by_id(base)
+    pfx_reqs = _requests(cfg, shared_prefix=True)
+    pfx_off = eng.serve_paged(
+        pfx_reqs, num_slots=3, page_size=8, num_pages=40, prefix_cache=False
+    )
+    pfx_on = eng.serve_paged(
+        _requests(cfg, shared_prefix=True), num_slots=3, page_size=8,
+        num_pages=40, prefix_cache=True,
+    )
+    assert _tokens_by_id(pfx_on) == _tokens_by_id(pfx_off)
+
+
+def test_quantized_pool_byte_accounting(_served_model):
+    cfg, model, params = _served_model
+    eng = ServingEngine(model, params, max_batch=3, max_seq=64, kv_dtype="int8")
+    stats = eng.serve_paged(_requests(cfg), num_slots=3, page_size=8,
+                            num_pages=40)
+    assert stats.kv_bytes_per_token == kvquant.kv_bytes_per_token(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "int8"
+    )
+    full = ServingEngine(model, params, max_batch=3, max_seq=64).serve_paged(
+        _requests(cfg), num_slots=3, page_size=8, num_pages=40
+    )
+    assert full.kv_bytes_per_token == kvquant.kv_bytes_per_token(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "float32"
+    )
+    assert stats.kv_bytes_per_token < full.kv_bytes_per_token
+
+
+def test_engine_rejects_unknown_kv_dtype(_served_model):
+    cfg, model, params = _served_model
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServingEngine(model, params, max_batch=2, max_seq=32, kv_dtype="int4")
+
+
+# ---------------------------------------------------------------------------
+# divergence harness + manifest knobs + regression gating
+# ---------------------------------------------------------------------------
+def test_kv_divergence_summary_exact_and_diverged():
+    ref_t = [[1, 2, 3, 4], [5, 6, 7], [8, 9]]
+    test_t = [[1, 2, 3, 4], [5, 6, 9], [8, 9]]
+    s = kv_divergence_summary(ref_t, test_t)
+    assert s["requests"] == 3.0
+    assert s["exact_matches"] == 2.0
+    assert s["exact_match_fraction"] == pytest.approx(2 / 3)
+    assert s["divergence_fraction"] == pytest.approx(1 / 3)
+    assert s["first_divergence_min"] == 2.0
+    assert s["first_divergence_mean"] == 2.0
+    # a truncated stream diverges at its end even if the prefix matches
+    s2 = kv_divergence_summary([[1, 2, 3]], [[1, 2]])
+    assert s2["exact_matches"] == 0.0
+    assert s2["first_divergence_min"] == 2.0
+    assert kv_divergence_summary([], []) == {}
+    with pytest.raises(ValueError, match="mismatched"):
+        kv_divergence_summary([[1]], [[1], [2]])
+    assert "exact_match_fraction" in kv_divergence_section(ref_t, test_t)
+    assert kv_divergence_section([], []) == ""
+
+
+def test_engine_knobs_roundtrip():
+    k = EngineKnobs(engine="paged", kv_dtype="int8", page_size=16, spec_k=4,
+                    prefix_cache=True, tp=2)
+    again = EngineKnobs.from_dict(k.to_dict())
+    assert again == k
+    # unknown keys are ignored so old records stay loadable
+    assert EngineKnobs.from_dict({**k.to_dict(), "extra": 1}) == k
+    d = k.describe()
+    assert "kv_dtype=int8" in d and "prefix_cache=on" in d and "tp=2" in d
+    assert EngineKnobs().describe().startswith("engine=static kv_dtype=float32")
+
+
+def _bench_json(tmp_path, name, metrics):
+    p = tmp_path / name
+    p.write_text(json.dumps(metrics))
+    return str(p)
+
+
+def test_check_regression_lower_is_better(tmp_path):
+    import sys
+    from pathlib import Path
+
+    root = str(Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.check_regression import main as check
+
+    base = _bench_json(tmp_path, "base.json",
+                       {"div": 0.10, "zero": 0.0, "tps": 100.0})
+    # within ceiling: 0.12 <= 0.10 * 1.25
+    ok = _bench_json(tmp_path, "ok.json",
+                     {"div": 0.12, "zero": 0.0, "tps": 100.0})
+    assert check([ok, base, "--metric-lower", "div",
+                  "--metric-lower", "zero", "--metric", "tps"]) == 0
+    # rises past the ceiling -> regression
+    bad = _bench_json(tmp_path, "bad.json",
+                      {"div": 0.2, "zero": 0.0, "tps": 100.0})
+    assert check([bad, base, "--metric-lower", "div"]) == 1
+    # a zero baseline is a hard gate: any rise fails
+    nz = _bench_json(tmp_path, "nz.json",
+                     {"div": 0.1, "zero": 0.01, "tps": 100.0})
+    assert check([nz, base, "--metric-lower", "zero"]) == 1
+    # higher-is-better direction unchanged
+    slow = _bench_json(tmp_path, "slow.json",
+                       {"div": 0.1, "zero": 0.0, "tps": 50.0})
+    assert check([slow, base, "--metric", "tps"]) == 1

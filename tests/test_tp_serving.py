@@ -382,3 +382,26 @@ def test_serve_paged_tp4_fallback_still_identical(_served_model):
     by_id = {r.request_id: r for r in base.results}
     for r in got.results:
         np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
+
+
+@requires_devices(2)
+def test_serve_paged_tp2_int8_bit_identical(_served_model):
+    """Quantized pools shard their scale pools with the kv heads: the int8
+    engine at tp=2 must produce the same greedy tokens as int8 at tp=1
+    (quantization happens per kv head, so the heads split changes nothing)."""
+    cfg, model, params = _served_model
+    kwargs = dict(num_slots=3, page_size=8, num_pages=40)
+    base_eng = ServingEngine(
+        model, params, max_batch=3, max_seq=64, kv_dtype="int8"
+    )
+    base = base_eng.serve_paged(_requests(cfg), **kwargs)
+    eng = ServingEngine(
+        model, params, max_batch=3, max_seq=64, rules=_rules_for(2),
+        kv_dtype="int8",
+    )
+    assert eng.tp == 2
+    got = eng.serve_paged(_requests(cfg), **kwargs)
+    assert got.kv_dtype == "int8" and base.kv_dtype == "int8"
+    by_id = {r.request_id: r for r in base.results}
+    for r in got.results:
+        np.testing.assert_array_equal(r.tokens, by_id[r.request_id].tokens)
