@@ -1,0 +1,191 @@
+"""Fault-tolerant fleet serving: kill a worker mid-run, keep the answers.
+
+Three scenarios over one deterministic workload (reduced glm4-9b, greedy
+decode) drive the FleetRouter's whole failure model:
+
+* ``baseline`` — 3 fault-free workers; its per-request greedy tokens are
+  the bit-identity oracle for the faulted runs.
+* ``killone``  — the same workload with worker 1 crashing at its second
+  decode boundary (``crash@1:2``).  Every request the dead worker orphaned
+  is requeued onto the survivors and replayed from its prompt; greedy
+  decoding is deterministic, so every completed request must be
+  BIT-IDENTICAL to the baseline, anything else must carry an attributed
+  failure, and nothing may be silently lost (completed + failed +
+  rejected == submitted).  Goodput retained vs baseline is the headline
+  number; the ISSUE floor is (N-1)/N, the CI gate 0.75x baseline.
+* ``degrade``  — one worker, 28 requests: demand pressure walks the
+  degrade ladder to the shed level and the requests that never fit are
+  rejected EXPLICITLY (counted, attributed) instead of queueing forever.
+  Sequential dispatch makes the shed count deterministic.
+
+Wall-clock metrics (recovery time, tokens/sec) are recorded for the
+trajectory but not gated — the gated metrics are the robustness counters:
+zero lost requests, zero token mismatches, zero duplicate commits, the
+deterministic requeue count (gated from BOTH directions, so it is an
+equality check up to the CI tolerance), and a shed count that stays
+deterministic.
+
+Emits ``name,us_per_call,derived`` CSV rows plus ``BENCH_faults.json``
+(seed + git rev recorded).  ``--smoke`` keeps the same workload so
+baseline and CI numbers compare one-to-one.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .common import bench_meta, emit
+
+NUM_WORKERS = 3
+NUM_REQUESTS = 12
+PROMPT_LEN, GEN_TOKENS = 16, 6
+PAGE_SIZE, NUM_SLOTS, MAX_SEQ = 8, 4, 64
+DEGRADE_REQUESTS = 28
+
+
+def _scenario_row(stats, submitted: int) -> dict:
+    terminal = stats.completed + stats.failed + stats.rejected
+    return {
+        "submitted": submitted,
+        "completed": stats.completed,
+        "failed": stats.failed,
+        "rejected": stats.rejected,
+        "lost": submitted - terminal,
+        "deaths": stats.deaths,
+        "requeued": stats.requeued,
+        "duplicate_commits": stats.duplicate_commits,
+        "rounds": stats.rounds,
+        "goodput": stats.goodput,
+        "max_degrade_level": stats.max_degrade_level,
+        "tokens_per_s": stats.throughput_tps,
+        "wall_s": stats.wall_s,
+    }
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeRequest, ServingEngine
+    from repro.serve.faults import FaultPlan
+    from repro.serve.fleet import FleetConfig, FleetRouter
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (PROMPT_LEN,)).astype(np.int32)
+        for _ in range(max(NUM_REQUESTS, DEGRADE_REQUESTS))
+    ]
+
+    # workers share weights (read-only under serving); each engine owns its
+    # page pool.  The same engines serve every scenario so the jit caches
+    # stay warm across them.
+    engines = [
+        ServingEngine(model, params, max_batch=NUM_SLOTS, max_seq=MAX_SEQ,
+                      page_size=PAGE_SIZE)
+        for _ in range(NUM_WORKERS)
+    ]
+    kwargs = dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE, prefill_budget=32)
+
+    def reqs(n):
+        return [
+            ServeRequest(request_id=i, prompt=prompts[i],
+                         max_new_tokens=GEN_TOKENS)
+            for i in range(n)
+        ]
+
+    def fleet(workers, plan="", spec_k=0, **cfg_kw):
+        return FleetRouter(
+            workers,
+            FleetConfig(seed=seed, **cfg_kw),
+            engine_kwargs={**kwargs, "spec_k": spec_k},
+            fault_plan=FaultPlan.parse(plan) if plan else None,
+        )
+
+    out = {
+        "bench": "faults",
+        "smoke": smoke,
+        **bench_meta(seed),
+        "num_workers": NUM_WORKERS,
+        "num_requests": NUM_REQUESTS,
+        "prompt_len": PROMPT_LEN,
+        "gen_tokens": GEN_TOKENS,
+        "page_size": PAGE_SIZE,
+        "num_slots": NUM_SLOTS,
+    }
+
+    # -- baseline: fault-free fleet -> the bit-identity oracle --------------
+    base = fleet(engines).serve(reqs(NUM_REQUESTS))
+    oracle = {r.request_id: r.tokens for r in base.results
+              if r.status == "completed"}
+    row = _scenario_row(base, NUM_REQUESTS)
+    out["baseline"] = row
+    emit("faults/baseline", base.wall_s,
+         f"completed={base.completed};lost={row['lost']};"
+         f"rounds={base.rounds}")
+    assert row["lost"] == 0 and base.completed == NUM_REQUESTS, (
+        f"fault-free fleet must complete everything: {row}"
+    )
+
+    # -- killone: crash worker 1 mid-run, survivors replay its work --------
+    kill = fleet(engines, plan="crash@1:2").serve(reqs(NUM_REQUESTS))
+    mismatched = sum(
+        1 for r in kill.results
+        if r.status == "completed"
+        and not np.array_equal(r.tokens, oracle[r.request_id])
+    )
+    row = _scenario_row(kill, NUM_REQUESTS)
+    row["mismatched_tokens"] = mismatched
+    row["goodput_retained"] = (
+        kill.goodput / base.goodput if base.goodput else 0.0
+    )
+    row["recovery_max_s"] = max(kill.recovery_s) if kill.recovery_s else 0.0
+    out["killone"] = row
+    emit("faults/killone", kill.wall_s,
+         f"completed={kill.completed};deaths={kill.deaths};"
+         f"requeued={kill.requeued};mismatched={mismatched};"
+         f"retained={row['goodput_retained']:.2f};"
+         f"recovery={row['recovery_max_s'] * 1e3:.0f}ms")
+    assert row["lost"] == 0, f"killone lost requests silently: {row}"
+    assert mismatched == 0, (
+        f"{mismatched} replayed requests diverged from the fault-free run"
+    )
+    assert kill.deaths == 1 and kill.requeued > 0, (
+        f"the injected crash must kill one worker and requeue its work: {row}"
+    )
+    assert row["goodput_retained"] >= (NUM_WORKERS - 1) / NUM_WORKERS, (
+        f"goodput retained {row['goodput_retained']:.2f} below the "
+        f"(N-1)/N floor"
+    )
+
+    # -- degrade: demand pressure walks the ladder to explicit shed --------
+    deg = fleet(engines[:1], spec_k=2).serve(reqs(DEGRADE_REQUESTS))
+    row = _scenario_row(deg, DEGRADE_REQUESTS)
+    row["shed"] = deg.rejected
+    row["degrade_transitions"] = len(deg.degrade_transitions)
+    out["degrade"] = row
+    emit("faults/degrade", deg.wall_s,
+         f"completed={deg.completed};shed={deg.rejected};"
+         f"max_level={deg.max_degrade_level};lost={row['lost']}")
+    assert row["lost"] == 0, f"degrade lost requests silently: {row}"
+    assert deg.rejected > 0 and deg.max_degrade_level == 3, (
+        f"sustained overload must reach the shed level and reject "
+        f"explicitly: {row}"
+    )
+    assert deg.completed + deg.rejected == DEGRADE_REQUESTS, (
+        f"every request must end completed or explicitly rejected: {row}"
+    )
+
+    with open("BENCH_faults.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run, "faults")

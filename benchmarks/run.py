@@ -23,6 +23,7 @@ BENCHES = [
     ("prefix", "benchmarks.bench_prefix"),
     ("tp", "benchmarks.bench_tp"),
     ("kvquant", "benchmarks.bench_kvquant"),
+    ("faults", "benchmarks.bench_faults"),
 ]
 
 

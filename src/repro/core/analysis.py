@@ -359,6 +359,105 @@ def prefix_cache_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def fleet_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize a fault-tolerant fleet run from ``fleet:*``/``fault:*`` events.
+
+    The fleet router publishes one ``fleet:commit`` per terminal completion
+    (tagged ``duplicate`` / ``within_deadline`` / ``latency_s``), a
+    ``fleet:death`` per worker crash or lease expiry (tagged ``requeued``),
+    a ``fleet:recovered`` per drained death whose span duration IS the
+    recovery time (death observed -> every orphaned request terminal), plus
+    ``fleet:requeue`` / ``fleet:failed`` / ``fleet:shed`` / ``fleet:hedge``
+    / ``fleet:degrade`` transitions, and the fault injector publishes one
+    ``fault:*`` event per fired fault.  This aggregates them into the
+    robustness block of the analysis workflow: goodput (completed within
+    deadline over all admitted-and-terminal requests) says how much service
+    the fleet retained through the faults, and recovery time how quickly
+    orphaned work was replayed onto survivors."""
+    commits = 0
+    dups = 0
+    within = 0
+    failed = 0
+    shed = 0
+    requeued = 0
+    deaths = 0
+    hedged = 0
+    degrades = 0
+    max_level = 0
+    rounds = 0
+    peak_pressure = 0.0
+    recovery: List[float] = []
+    latencies: List[float] = []
+    faults: Dict[str, int] = {}
+    for s in spans:
+        if s.name == "fleet:commit":
+            if s.tags.get("duplicate"):
+                dups += 1
+            else:
+                commits += 1
+                within += int(bool(s.tags.get("within_deadline", 1)))
+                latencies.append(float(s.tags.get("latency_s", 0.0)))
+        elif s.name == "fleet:failed":
+            failed += 1
+        elif s.name == "fleet:shed":
+            shed += 1
+        elif s.name == "fleet:requeue":
+            requeued += 1
+        elif s.name == "fleet:death":
+            deaths += 1
+        elif s.name == "fleet:hedge":
+            hedged += 1
+        elif s.name == "fleet:recovered":
+            recovery.append(s.duration)
+        elif s.name == "fleet:degrade":
+            degrades += 1
+            max_level = max(max_level, int(s.tags.get("to", 0)))
+        elif s.name == "fleet:round":
+            rounds += 1
+            peak_pressure = max(
+                peak_pressure, float(s.tags.get("pressure", 0.0))
+            )
+        elif s.name.startswith("fault:") and s.name != "fault:pressure_release":
+            kind = s.name.split(":", 1)[1]
+            faults[kind] = faults.get(kind, 0) + 1
+    terminal = commits + failed
+    if not terminal and not deaths and not shed and not faults:
+        return {}
+    out = {
+        "rounds": float(rounds),
+        "completed": float(commits),
+        "failed": float(failed),
+        "shed": float(shed),
+        "goodput": within / terminal if terminal else 0.0,
+        "requeued": float(requeued),
+        "deaths": float(deaths),
+        "hedged": float(hedged),
+        "duplicate_commits": float(dups),
+        "degrade_transitions": float(degrades),
+        "max_degrade_level": float(max_level),
+        "peak_pressure": peak_pressure,
+    }
+    if latencies:
+        out["latency_p90_ms"] = percentile(latencies, 90.0) * 1e3
+    if recovery:
+        out["recoveries"] = float(len(recovery))
+        out["recovery_mean_s"] = sum(recovery) / len(recovery)
+        out["recovery_max_s"] = max(recovery)
+    for kind in sorted(faults):
+        out[f"faults_{kind}"] = float(faults[kind])
+    return out
+
+
+def fleet_section(spans: Iterable[Span]) -> str:
+    """Render the fleet-robustness block as a report section; empty string
+    when no fleet run was traced."""
+    summary = fleet_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def itl_summary(itls_s: Sequence[float]) -> Dict[str, float]:
     """Inter-token latency block: the serving-quality metric the paged
     decode loop optimizes (speculative boundaries emit several tokens at

@@ -50,6 +50,20 @@ class KVStore:
             e.value = value
             return True
 
+    def mutate(self, key: str, fn: Callable[[Dict[str, Any]], Dict[str, Any]]
+               ) -> bool:
+        """Atomic read-modify-write on a live entry: ``fn`` receives a copy
+        of the current value and returns the replacement, all under the
+        store lock — the race-free path for counters like agent load (a
+        get/modify/update_value sequence can lose concurrent updates)."""
+        with self._lock:
+            e = self._data.get(key)
+            if e is None or self._expired(e):
+                self._data.pop(key, None)
+                return False
+            e.value = fn(dict(e.value))
+            return True
+
     def renew(self, key: str, ttl: float) -> bool:
         """Heartbeat: extend a lease. Returns False if the key expired."""
         with self._lock:
@@ -68,20 +82,27 @@ class KVStore:
             if self._expired(e):
                 del self._data[key]
                 return None
-            return e.value
+            # a copy: callers must not mutate store state outside the lock
+            # (use mutate() for read-modify-write)
+            return dict(e.value)
 
     def delete(self, key: str) -> bool:
         with self._lock:
             return self._data.pop(key, None) is not None
 
     def scan(self, prefix: str) -> List[Tuple[str, Dict[str, Any]]]:
-        now = self._clock()
         with self._lock:
+            # expiry cutoff taken INSIDE the lock: a renew that wins the
+            # lock first extends the lease and the scan sees it live; one
+            # that loses sees the entry purged and returns False — no
+            # window where an expired agent is both renewable and listed
+            now = self._clock()
             dead = [k for k, e in self._data.items() if self._expired(e, now)]
             for k in dead:
                 del self._data[k]
             return sorted(
-                (k, e.value) for k, e in self._data.items() if k.startswith(prefix)
+                (k, dict(e.value))
+                for k, e in self._data.items() if k.startswith(prefix)
             )
 
     def _expired(self, e: Entry, now: Optional[float] = None) -> bool:
@@ -92,13 +113,16 @@ class KVStore:
     # -- optional shared-file persistence (single-host "distributed") ------
     def dump(self, path: str) -> None:
         with self._lock:
-            payload = {
+            # serialize INSIDE the lock: values are live dicts, and a
+            # concurrent mutate() mid-json.dump would tear the snapshot
+            # (the file write itself stays outside — atomic via rename)
+            payload_text = json.dumps({
                 k: {"value": e.value, "expires_at": e.expires_at}
                 for k, e in self._data.items()
-            }
+            })
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
+            f.write(payload_text)
         os.replace(tmp, path)
 
     def load(self, path: str) -> None:
@@ -199,10 +223,13 @@ class Registry:
         return [AgentRecord.from_dict(v) for _, v in self.store.scan("agents/")]
 
     def update_load(self, agent_id: str, delta: int) -> None:
-        rec = self.store.get(f"agents/{agent_id}")
-        if rec is not None:
+        def bump(rec: Dict[str, Any]) -> Dict[str, Any]:
             rec["load"] = max(0, int(rec.get("load", 0)) + delta)
-            self.store.update_value(f"agents/{agent_id}", rec)
+            return rec
+
+        # atomic RMW under the store lock: two concurrent dispatches must
+        # not lose a load increment (get -> modify -> update_value races)
+        self.store.mutate(f"agents/{agent_id}", bump)
 
     # -- resolution (server-side, §4.3 step 3) -------------------------------
     def resolve(

@@ -16,13 +16,14 @@ Scalability/fault-tolerance beyond the paper:
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from ..serve.scheduler import SchedulerConfig
+from ..serve.scheduler import SchedulerConfig, backoff_delay
 from .agent import Agent, EvaluationRequest
 from .analysis import (
     comparison_table,
@@ -51,7 +52,12 @@ class DispatchPolicy:
     max_attempts: int = 3              # re-dispatch on agent failure
     straggler_factor: float = 0.0      # >0: duplicate dispatch, first wins
     all_agents: bool = False           # fan out to every capable agent
-    timeout_s: Optional[float] = None
+    timeout_s: Optional[float] = None  # per-attempt wait (every attempt)
+    backoff_base_s: float = 0.0        # retry backoff base (0 = immediate,
+    #                                    the legacy behavior)
+    backoff_cap_s: float = 1.0         # retry backoff cap
+    backoff_jitter: float = 0.5        # ±fraction jitter on each delay
+    backoff_seed: int = 0              # jitter rng seed (determinism)
 
 
 class Server:
@@ -64,6 +70,7 @@ class Server:
         tracing_server: TracingServer,
         evaldb: EvalDB,
         max_workers: int = 8,
+        sleep: Callable[[float], None] = time.sleep,
     ) -> None:
         self.registry = registry
         self.tracing_server = tracing_server
@@ -71,6 +78,7 @@ class Server:
         self._agents: Dict[str, Agent] = {}
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._lock = threading.Lock()
+        self._sleep = sleep            # injectable for fake-clock tests
 
     # -- agent attachment -----------------------------------------------------
     def attach_agent(self, agent: Agent) -> None:
@@ -137,11 +145,23 @@ class Server:
         req: EvaluationRequest,
         policy: DispatchPolicy,
     ) -> Dict[str, Any]:
-        """Least-loaded-first dispatch with failover + straggler duplication."""
+        """Least-loaded-first dispatch with failover + straggler duplication.
+
+        ``timeout_s`` bounds EVERY attempt's wait (not just the first); a
+        timed-out attempt cancels its still-pending futures and counts as a
+        failure.  Between attempts the server backs off with capped
+        exponential delay + seeded jitter (``backoff_base_s = 0`` keeps the
+        legacy retry-immediately behavior)."""
         errors: List[str] = []
+        rng = random.Random(policy.backoff_seed)
         attempt = 0
         idx = 0
         while attempt < policy.max_attempts and idx < len(records):
+            if attempt > 0 and policy.backoff_base_s > 0:
+                self._sleep(backoff_delay(
+                    attempt, policy.backoff_base_s, policy.backoff_cap_s,
+                    policy.backoff_jitter, rng,
+                ))
             primary = records[idx]
             candidates = [primary]
             if policy.straggler_factor > 0 and idx + 1 < len(records):
@@ -164,6 +184,17 @@ class Server:
                 for fut in pending:
                     fut.cancel()
                 return winner
+            if not done:
+                # attempt timed out: give up on these candidates (cancel
+                # what hasn't started; a running dispatch is abandoned) and
+                # fail over to the next records
+                for fut in pending:
+                    fut.cancel()
+                errors.append(
+                    f"attempt {attempt + 1} timed out after "
+                    f"{policy.timeout_s}s on "
+                    f"{[r.agent_id for r in candidates]}"
+                )
             # all completed candidates failed -> advance past them
             idx += len(candidates)
             attempt += 1

@@ -42,6 +42,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..core.analysis import (
+    fleet_section,
     latency_summary,
     page_occupancy_section,
     prefill_saturation_section,
@@ -229,6 +230,82 @@ def _serve_paged(engine, cfg, args, load, prompts):
     return summary, stats.total_tokens, stats.wall_s
 
 
+def _serve_fleet(engines, cfg, args, load, prompts):
+    """Fault-tolerant fleet: N paged workers behind the FleetRouter."""
+    from ..serve.faults import FaultPlan
+    from ..serve.fleet import FleetConfig, FleetRouter
+
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=args.max_new_tokens)
+        for i, p in enumerate(prompts)
+    ]
+    server = TracingServer()
+    tracer = Tracer("serve-fleet", server)
+    plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else FaultPlan()
+    if plan:
+        print(f"[serve] fault plan: {plan.describe()}")
+    router = FleetRouter(
+        engines,
+        FleetConfig(
+            deadline_s=args.deadline_ms / 1e3,
+            max_retries=args.retries,
+            lease_ttl_s=args.lease_ttl_s,
+        ),
+        engine_kwargs=dict(
+            num_slots=args.engine_batch,
+            page_size=args.page_size,
+            num_pages=args.num_pages or None,
+            prefill_chunk=args.prefill_chunk or None,
+            overcommit=args.overcommit,
+            prefill_mode=args.prefill_mode,
+            prefill_budget=args.prefill_budget or None,
+            spec_k=args.spec_k,
+            spec_ngram=args.spec_ngram,
+            prefix_cache=args.prefix_cache == "on",
+        ),
+        fault_plan=plan,
+        tracer=tracer,
+    )
+    stats = router.serve(reqs)
+    for r in stats.results:
+        tail = (
+            f"{len(r.tokens)} tokens" if r.status == "completed"
+            else f"reason={r.reason}"
+        )
+        print(
+            f"[serve] req {r.request_id}: {r.status} on worker {r.worker} "
+            f"after {r.attempts} attempt(s), {tail}"
+        )
+    section = fleet_section(server.timeline("serve-fleet"))
+    if section:
+        print("[serve] fleet robustness:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    latencies = [
+        r.latency_s for r in stats.results if r.status == "completed"
+    ]
+    summary = latency_summary(latencies) if latencies else {}
+    summary.update(
+        {
+            "tokens_per_s": stats.throughput_tps,
+            "fleet_workers": float(stats.num_workers),
+            "rounds": float(stats.rounds),
+            "completed": float(stats.completed),
+            "failed": float(stats.failed),
+            "rejected": float(stats.rejected),
+            "deaths": float(stats.deaths),
+            "requeued": float(stats.requeued),
+            "hedged": float(stats.hedged),
+            "duplicate_commits": float(stats.duplicate_commits),
+            "goodput": stats.goodput,
+            "max_degrade_level": float(stats.max_degrade_level),
+        }
+    )
+    if stats.recovery_s:
+        summary["recovery_max_s"] = max(stats.recovery_s)
+    return summary, stats.total_tokens, stats.wall_s
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
@@ -292,6 +369,23 @@ def main(argv=None) -> int:
                     help="fraction of requests reusing a shared prefix")
     ap.add_argument("--prefix-groups", type=int, default=1,
                     help="distinct shared prefixes in the workload")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="fault-tolerant fleet: run N paged workers behind "
+                         "the FleetRouter (load balancing, requeue-on-death, "
+                         "graceful degradation; 0 = single engine)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="fleet per-request TTL from submit; a request past "
+                         "its deadline fails with attribution (0 = none)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="fleet requeues per request after a worker death "
+                         "before the request is failed")
+    ap.add_argument("--lease-ttl-s", type=float, default=30.0,
+                    help="fleet worker heartbeat lease TTL; a worker that "
+                         "misses renewal past the TTL is treated as dead")
+    ap.add_argument("--fault-plan", default="",
+                    help="scripted fault injection, e.g. "
+                         "'crash@1:2,stall@0:3:0.5,pressure@2:1:8x4' "
+                         "(kind@worker:step[:arg]; empty = no faults)")
     ap.add_argument("--evaldb", default="")
     args = ap.parse_args(argv)
 
@@ -318,11 +412,18 @@ def main(argv=None) -> int:
     if args.kv_dtype and args.engine != "paged":
         ap.error("--kv-dtype requires --engine paged (only the paged pool "
                  "stores quantized KV pages)")
-    engine = ServingEngine(
-        model, params, max_batch=args.engine_batch, max_seq=args.max_seq,
-        page_size=args.page_size, rules=rules,
-        kv_dtype=args.kv_dtype or None,
-    )
+    if args.fleet > 0 and args.engine != "paged":
+        ap.error("--fleet requires --engine paged (the fleet routes over "
+                 "paged workers)")
+
+    def make_engine():
+        return ServingEngine(
+            model, params, max_batch=args.engine_batch, max_seq=args.max_seq,
+            page_size=args.page_size, rules=rules,
+            kv_dtype=args.kv_dtype or None,
+        )
+
+    engine = make_engine()
     # report header: the engine knobs this evaluation ran under, so the run
     # is self-describing (same block lands in the evaldb record)
     knobs = EngineKnobs(
@@ -359,7 +460,12 @@ def main(argv=None) -> int:
             for _ in load
         ]
 
-    if args.engine == "continuous":
+    if args.fleet > 0:
+        # workers share model+params (weights are read-only under serving);
+        # each gets its own engine => its own KV page pool + slot state
+        engines = [engine] + [make_engine() for _ in range(args.fleet - 1)]
+        summary, generated, wall = _serve_fleet(engines, cfg, args, load, prompts)
+    elif args.engine == "continuous":
         summary, generated, wall = _serve_continuous(engine, cfg, args, load, prompts)
     elif args.engine == "paged":
         summary, generated, wall = _serve_paged(engine, cfg, args, load, prompts)
@@ -374,7 +480,8 @@ def main(argv=None) -> int:
             EvaluationRecord(
                 model=cfg.name, model_version="1.0.0", backend=args.backend,
                 backend_version="1.0.0", system="local",
-                scenario=f"serve-{args.engine}",
+                scenario=f"serve-fleet{args.fleet}" if args.fleet > 0
+                else f"serve-{args.engine}",
                 batch_size=args.engine_batch, trace_level="NONE",
                 agent_id="serve-driver",
                 metrics={**summary, "engine_knobs": knobs.to_dict()},

@@ -16,12 +16,23 @@ _EXPORTS = {
     "SchedulerQueueFull": ".scheduler",
     "ScheduledRequest": ".scheduler",
     "CompletionFuture": ".scheduler",
+    "DeadlineExceeded": ".scheduler",
+    "RetriesExhausted": ".scheduler",
+    "backoff_delay": ".scheduler",
     "SlotPool": ".scheduler",
     "PagedSlotPool": ".scheduler",
     "PrefillBudget": ".scheduler",
     "SpecLedger": ".scheduler",
     "PagePool": ".page_table",
     "PageTable": ".page_table",
+    "FaultPlan": ".faults",
+    "FaultSpec": ".faults",
+    "WorkerCrash": ".faults",
+    "FleetConfig": ".fleet",
+    "FleetRouter": ".fleet",
+    "FleetStats": ".fleet",
+    "FleetResult": ".fleet",
+    "DegradeLadder": ".fleet",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -62,6 +62,7 @@ from ..models.params import tree_map_defs
 from ..sharding.specs import (
     ShardingRules, param_pspecs, set_activation_rules, tp_degree,
 )
+from .faults import FaultContext, WorkerCrash
 from .page_table import PagePool, PageTable, PrefixCache, pages_needed
 from .scheduler import PagedSlotPool, PrefillBudget, SlotPool, SpecLedger
 
@@ -730,6 +731,7 @@ class ServingEngine:
         prefix_cache: bool = False,
         clock: Callable[[], float] = time.perf_counter,
         tracer=None,
+        fault_hook: Optional[Callable] = None,
     ) -> PagedStats:
         """Paged-KV continuous batching.
 
@@ -790,6 +792,17 @@ class ServingEngine:
         LRU tier reclaimed only when admission/growth/COW actually need
         pages; eviction never touches a referenced page, and preemption
         still works unchanged (shared pages just drop a reference).
+
+        ``fault_hook`` (None by default — the zero-cost path) is called once
+        per loop boundary with a :class:`~repro.serve.faults.FaultContext`
+        (step counter, page pool, clock, tracer): the fleet's fault
+        injection and heartbeat-lease hooks both ride it.  A hook that
+        raises :class:`~repro.serve.faults.WorkerCrash` kills the run, but
+        resumably: the exception is re-raised carrying ``results`` (every
+        request already finished — commit-worthy) and ``pending`` (every
+        request not yet finished — replayable from its prompt, exactly the
+        preemption-recompute contract), so a router can requeue the
+        worker's in-flight work onto survivors with zero silent losses.
         """
         if prefill_mode not in ("packed", "chunked"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
@@ -1101,6 +1114,25 @@ class ServingEngine:
 
         while queue or slots.num_active:
             progressed = False
+            # 0) boundary fault/heartbeat hook.  WorkerCrash can only be
+            #    raised here, so the resumable snapshot (finished results +
+            #    replayable pending requests) is attached at this one site.
+            if fault_hook is not None:
+                try:
+                    fault_hook(FaultContext(
+                        step=step, pool=pool, clock=clock, tracer=tracer,
+                    ))
+                except WorkerCrash as crash:
+                    crash.results = [
+                        finished[r.request_id] for r in requests
+                        if r.request_id in finished
+                    ]
+                    crash.pending = [
+                        r for r in requests if r.request_id not in finished
+                    ]
+                    if hasattr(fault_hook, "release"):
+                        fault_hook.release()   # return seized pressure pages
+                    raise
             # 1) retire finished sequences, returning their pages
             for slot in list(decoding):
                 req = slots.active[slot]
@@ -1543,6 +1575,8 @@ class ServingEngine:
             slots.record_occupancy(step)
             if not progressed and not prefilling and not decoding:
                 raise RuntimeError("paged serve loop stalled (admission deadlock)")
+        if fault_hook is not None and hasattr(fault_hook, "release"):
+            fault_hook.release()   # pressure seizures held past the last step
         jax.block_until_ready(cache["k_pages"])
         wall = clock() - t_start
         results = [finished[r.request_id] for r in requests]

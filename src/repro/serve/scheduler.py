@@ -29,6 +29,7 @@ boundaries (used by ``repro.serve.engine.ServingEngine.serve_continuous``).
 from __future__ import annotations
 
 import bisect
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -36,19 +37,48 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 __all__ = [
     "CompletionFuture",
+    "DeadlineExceeded",
     "PagedSlotPool",
     "PrefillBudget",
     "RequestScheduler",
+    "RetriesExhausted",
     "ScheduledRequest",
     "SchedulerConfig",
     "SchedulerQueueFull",
     "SlotPool",
     "SpecLedger",
+    "backoff_delay",
 ]
 
 
 class SchedulerQueueFull(RuntimeError):
     """Raised when a non-blocking submit finds the bounded queue full."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's deadline passed before it could execute (its completion
+    future raises this — a deadlined request is terminal, never silent)."""
+
+
+class RetriesExhausted(RuntimeError):
+    """A request failed and its retry budget is spent; carries the last
+    underlying error as ``__cause__``."""
+
+
+def backoff_delay(attempt: int, base_s: float, cap_s: float,
+                  jitter: float = 0.0,
+                  rng: Optional[random.Random] = None) -> float:
+    """Capped exponential backoff: ``min(cap, base * 2**(attempt-1))``,
+    optionally scaled by a symmetric ``±jitter`` fraction drawn from ``rng``
+    (a seeded :class:`random.Random` keeps retry schedules deterministic).
+    Shared by the scheduler retry path, the fleet requeue path and the
+    server's re-dispatch loop."""
+    if attempt < 1:
+        raise ValueError("attempt must be >= 1")
+    d = min(cap_s, base_s * (2.0 ** (attempt - 1)))
+    if jitter > 0.0 and rng is not None:
+        d *= 1.0 + jitter * (2.0 * rng.random() - 1.0)
+    return max(d, 0.0)
 
 
 @dataclass
@@ -68,6 +98,12 @@ class SchedulerConfig:
     spec_k: int = 0                # speculative draft depth (0 = disabled)
     spec_ngram: int = 3            # prompt-lookup n-gram match length
     prefix_cache: bool = False     # automatic prefix caching (paged engine)
+    deadline_ms: float = 0.0       # per-request TTL (0 = no deadline)
+    max_retries: int = 0           # batch-failure retry budget per request
+    backoff_base_ms: float = 10.0  # retry backoff: base delay
+    backoff_cap_ms: float = 1000.0 # retry backoff: cap
+    backoff_jitter: float = 0.0    # retry backoff: ±fraction (0 = none)
+    retry_seed: int = 0            # jitter RNG seed (determinism)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -82,6 +118,12 @@ class SchedulerConfig:
             "spec_k": self.spec_k,
             "spec_ngram": self.spec_ngram,
             "prefix_cache": self.prefix_cache,
+            "deadline_ms": self.deadline_ms,
+            "max_retries": self.max_retries,
+            "backoff_base_ms": self.backoff_base_ms,
+            "backoff_cap_ms": self.backoff_cap_ms,
+            "backoff_jitter": self.backoff_jitter,
+            "retry_seed": self.retry_seed,
         }
 
     @classmethod
@@ -104,6 +146,9 @@ class ScheduledRequest:
     submit_s: float = 0.0       # when submit() was called
     start_s: float = 0.0        # micro-batch execution start
     end_s: float = 0.0          # micro-batch execution end
+    deadline_s: Optional[float] = None  # absolute clock deadline (TTL)
+    attempts: int = 0           # failed executions so far (retry ledger)
+    status: str = "queued"      # queued | completed | failed
     future: "CompletionFuture" = None  # type: ignore[assignment]
 
     @property
@@ -200,6 +245,14 @@ class RequestScheduler:
         self.completed = 0
         self.rejected = 0
         self.batches = 0
+        self.retries = 0            # re-enqueues after a failed batch
+        self.deadline_failures = 0  # requests terminal via DeadlineExceeded
+        self.retry_failures = 0     # requests terminal via RetriesExhausted
+        # graceful degradation: the router flips this at its top degrade
+        # level so NEW admissions are shed with an explicit rejected status
+        # (already-queued work still drains)
+        self.shedding = False
+        self._retry_rng = random.Random(self.config.retry_seed)
 
     # -- submission ----------------------------------------------------------
     def submit(
@@ -208,6 +261,7 @@ class RequestScheduler:
         batch_size: int = 1,
         arrival_s: Optional[float] = None,
         block: bool = True,
+        deadline_s: Optional[float] = None,
     ) -> CompletionFuture:
         """Enqueue one request; returns its completion future.
 
@@ -215,9 +269,17 @@ class RequestScheduler:
         future arrivals turns the synchronous drive into a discrete-event
         simulation.  With ``block=False`` a full queue (counting only
         requests whose arrival has passed) raises :class:`SchedulerQueueFull`
-        — the admission-control path.
+        — the admission-control path.  ``deadline_s`` is an absolute clock
+        deadline (defaults to ``arrival + config.deadline_ms`` when the
+        config sets one); a request still queued past its deadline fails
+        with :class:`DeadlineExceeded` instead of executing.
         """
         with self._cond:
+            if self.shedding:
+                self.rejected += 1
+                raise SchedulerQueueFull(
+                    "admission shed: scheduler is in degraded (shedding) mode"
+                )
             if self._arrived_depth(self.clock()) >= self.config.queue_depth:
                 if not block:
                     self.rejected += 1
@@ -229,12 +291,15 @@ class RequestScheduler:
                         self._cond.wait()
             now = self.clock()
             arrival = now if arrival_s is None else arrival_s
+            if deadline_s is None and self.config.deadline_ms > 0:
+                deadline_s = arrival + self.config.deadline_ms / 1e3
             req = ScheduledRequest(
                 request_id=self._next_id,
                 batch_size=batch_size,
                 arrival_s=arrival,
                 payload=payload,
                 submit_s=now,
+                deadline_s=deadline_s,
             )
             self._next_id += 1
             req.future = CompletionFuture(self, req)
@@ -357,24 +422,81 @@ class RequestScheduler:
         start = self.clock()
         with self._cond:
             depth = self._arrived_depth(start)
+        # deadline enforcement BEFORE execution: a request whose TTL passed
+        # while queued is terminal (DeadlineExceeded), never silently run
+        # late and never left hanging
+        live: List[ScheduledRequest] = []
+        for req in batch:
+            if req.deadline_s is not None and start > req.deadline_s:
+                req.start_s = req.end_s = start
+                req.status = "failed"
+                self.deadline_failures += 1
+                req.future._set(None, DeadlineExceeded(
+                    f"request {req.request_id} missed deadline "
+                    f"({start - req.deadline_s:.3f}s late)"
+                ))
+            else:
+                live.append(req)
         error: Optional[BaseException] = None
         out: Any = None
-        try:
-            out = self.execute(batch)
-        except BaseException as e:  # noqa: BLE001 - propagated via futures
-            error = e
+        if live:
+            try:
+                out = self.execute(live)
+            except BaseException as e:  # noqa: BLE001 - propagated via futures
+                error = e
         end = self.clock()
-        results: Sequence[Any]
-        if isinstance(out, (list, tuple)) and len(out) == len(batch):
-            results = out
+        terminal = len(batch) - len(live)
+        if error is not None and self.config.max_retries > 0:
+            # failed batch with a retry budget: re-enqueue what still has
+            # budget (capped exponential backoff + jitter pushes the retry
+            # arrival into the future), fail the rest terminally
+            retried: List[ScheduledRequest] = []
+            for req in live:
+                req.attempts += 1
+                if req.attempts <= self.config.max_retries:
+                    delay = backoff_delay(
+                        req.attempts,
+                        self.config.backoff_base_ms / 1e3,
+                        self.config.backoff_cap_ms / 1e3,
+                        self.config.backoff_jitter,
+                        self._retry_rng,
+                    )
+                    req.arrival_s = end + delay
+                    retried.append(req)
+                    self.retries += 1
+                else:
+                    req.start_s, req.end_s = start, end
+                    req.status = "failed"
+                    self.retry_failures += 1
+                    terminal += 1
+                    exhausted = RetriesExhausted(
+                        f"request {req.request_id} failed after "
+                        f"{req.attempts} attempt(s): {error}"
+                    )
+                    exhausted.__cause__ = error
+                    req.future._set(None, exhausted)
+            if retried:
+                with self._cond:
+                    for req in retried:
+                        bisect.insort(
+                            self._queue, req,
+                            key=lambda r: (r.arrival_s, r.request_id),
+                        )
+                    self._cond.notify_all()
         else:
-            results = [out] * len(batch)
-        for req, value in zip(batch, results):
-            req.start_s = start
-            req.end_s = end
-            req.future._set(value, error)
+            results: Sequence[Any]
+            if isinstance(out, (list, tuple)) and len(out) == len(live):
+                results = out
+            else:
+                results = [out] * len(live)
+            for req, value in zip(live, results):
+                req.start_s = start
+                req.end_s = end
+                req.status = "failed" if error is not None else "completed"
+                req.future._set(value, error)
+            terminal += len(live)
         self.batches += 1
-        self.completed += len(batch)
+        self.completed += terminal
         self.queue_depth_series.append((start, depth))
         self.batch_occupancy_series.append((start, len(batch)))
         if self.tracer is not None:
@@ -399,6 +521,9 @@ class RequestScheduler:
             "submitted": float(self.submitted),
             "completed": float(self.completed),
             "rejected": float(self.rejected),
+            "retries": float(self.retries),
+            "deadline_failures": float(self.deadline_failures),
+            "retry_failures": float(self.retry_failures),
             "mean_batch_occupancy": sum(occ) / len(occ) if occ else 0.0,
             "max_queue_depth": float(max(dep)) if dep else 0.0,
             "mean_queue_depth": sum(dep) / len(dep) if dep else 0.0,

@@ -1,0 +1,467 @@
+"""Fault-tolerant serving fleet: fault injection, requeue-on-death,
+idempotent commits, graceful degradation.
+
+Two layers:
+
+* unit tests drive the FleetRouter over stub engines with a virtual clock —
+  deterministic discrete-event simulations of deaths, retries, deadlines
+  and the degrade ladder;
+* integration tests run the full fault matrix {crash, stall, pressure} x
+  {spec_k 0/2} x {prefix cache on/off} over real paged engines and require
+  every completed request to be BIT-IDENTICAL to the fault-free oracle
+  (greedy decoding is deterministic, so replay-from-prompt on a survivor
+  must reproduce the same tokens).
+"""
+import threading
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import fleet_summary
+from repro.core.tracing import Tracer, TracingServer
+from repro.serve.engine import ServeRequest
+from repro.serve.faults import FaultContext, FaultPlan, FaultSpec, WorkerCrash
+from repro.serve.fleet import (
+    DEGRADE_LEVELS,
+    DegradeLadder,
+    FleetConfig,
+    FleetRouter,
+)
+
+
+class VirtualTime:
+    def __init__(self):
+        self.t = 0.0
+        self._lock = threading.Lock()
+
+    def clock(self):
+        with self._lock:
+            return self.t
+
+    def sleep(self, dt):
+        with self._lock:
+            self.t += dt
+
+
+class StubEngine:
+    """A serve_paged stand-in: one request finishes per boundary, the fault
+    hook runs at every boundary, and a crash carries the same resumable
+    snapshot the real engine attaches (finished results + pending
+    requests)."""
+
+    def __init__(self, vt, max_seq=64, max_batch=4, page_size=8,
+                 boundary_s=0.0):
+        self.vt = vt
+        self.max_seq = max_seq
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.boundary_s = boundary_s
+        self.calls = 0
+
+    @staticmethod
+    def tokens_for(req):
+        # deterministic per request: the bit-identity oracle for stubs
+        return np.arange(req.max_new_tokens, dtype=np.int32) + req.request_id
+
+    def serve_paged(self, reqs, clock=None, tracer=None, fault_hook=None,
+                    **kwargs):
+        self.calls += 1
+        finished = []
+        pending = list(reqs)
+        step = 0
+        while pending:
+            if self.boundary_s:
+                self.vt.sleep(self.boundary_s)
+            if fault_hook is not None:
+                try:
+                    fault_hook(FaultContext(step=step, clock=self.vt.clock,
+                                            tracer=tracer))
+                except WorkerCrash as crash:
+                    crash.results = list(finished)
+                    crash.pending = list(pending)
+                    if hasattr(fault_hook, "release"):
+                        fault_hook.release()
+                    raise
+            req = pending.pop(0)
+            finished.append(SimpleNamespace(
+                request_id=req.request_id, tokens=self.tokens_for(req)
+            ))
+            step += 1
+        if fault_hook is not None and hasattr(fault_hook, "release"):
+            fault_hook.release()
+        return SimpleNamespace(results=finished)
+
+
+def _reqs(n, prompt_len=16, gen=6):
+    return [
+        ServeRequest(request_id=i,
+                     prompt=np.zeros((prompt_len,), np.int32),
+                     max_new_tokens=gen)
+        for i in range(n)
+    ]
+
+
+def _router(vt, n_workers, plan=None, cfg=None, **stub_kw):
+    engines = [StubEngine(vt, **stub_kw) for _ in range(n_workers)]
+    return FleetRouter(
+        engines, cfg or FleetConfig(), fault_plan=plan,
+        clock=vt.clock, sleep=vt.sleep,
+    )
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultSpec
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse_describe_roundtrip():
+    text = "crash@1:6,stall@0:3:0.05,pressure@2:4:6x2"
+    plan = FaultPlan.parse(text)
+    assert len(plan.specs) == 3
+    assert FaultPlan.parse(plan.describe()).describe() == plan.describe()
+    assert not FaultPlan.parse("")
+    assert not FaultPlan.parse("none")
+    with pytest.raises(ValueError, match="bad fault-plan item"):
+        FaultPlan.parse("explode@0:1")
+    with pytest.raises(ValueError, match="bad fault-plan item"):
+        FaultPlan.parse("crash@0")
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("explode", 0, 1)
+    with pytest.raises(ValueError):
+        FaultSpec("crash", -1, 1)
+    with pytest.raises(ValueError):
+        FaultSpec("pressure", 0, 1, pages=0)
+
+
+def test_fault_plan_generate_is_seed_deterministic():
+    a = FaultPlan.generate(4, seed=7, crashes=2, stalls=1, pressures=1)
+    b = FaultPlan.generate(4, seed=7, crashes=2, stalls=1, pressures=1)
+    c = FaultPlan.generate(4, seed=8, crashes=2, stalls=1, pressures=1)
+    assert a.describe() == b.describe()
+    assert a.describe() != c.describe()
+
+
+def test_hook_fires_once_and_only_for_its_worker():
+    plan = FaultPlan([FaultSpec("stall", 1, 2, duration_s=0.5)])
+    assert plan.hook_for(0) is None        # untouched workers keep the
+    vt = VirtualTime()                     # zero-cost default path
+    hook = plan.hook_for(1, sleep=vt.sleep)
+    for step in range(6):
+        hook(FaultContext(step=step, clock=vt.clock))
+    assert [s.step for s in hook.fired] == [2]
+    assert vt.t == pytest.approx(0.5)      # slept exactly once
+
+
+# ---------------------------------------------------------------------------
+# DegradeLadder
+# ---------------------------------------------------------------------------
+def test_degrade_ladder_hysteresis():
+    vt = VirtualTime()
+    ladder = DegradeLadder(high=0.8, low=0.5, clock=vt.clock)
+    seq = [ladder.update(p) for p in
+           (0.9, 0.9, 0.9, 0.9, 0.7, 0.4, 0.4, 0.4)]
+    # one step per crossing, hold inside the band (0.7), one step down per
+    # reading below low — and the top level saturates
+    assert seq == [1, 2, 3, 3, 3, 2, 1, 0]
+    assert ladder.max_level == 3
+    assert DEGRADE_LEVELS[3] == "shed"
+    assert len(ladder.transitions) == 6
+    with pytest.raises(ValueError):
+        DegradeLadder(high=0.4, low=0.5)
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter over stub engines (virtual clock)
+# ---------------------------------------------------------------------------
+def test_fault_free_fleet_completes_everything():
+    vt = VirtualTime()
+    router = _router(vt, 3)
+    stats = router.serve(_reqs(9))
+    assert stats.completed == 9
+    assert stats.failed == stats.rejected == stats.deaths == 0
+    assert stats.goodput == 1.0
+    for r in stats.results:
+        assert np.array_equal(r.tokens, StubEngine.tokens_for(
+            SimpleNamespace(request_id=r.request_id, max_new_tokens=6)))
+
+
+def test_requeue_on_death_replays_on_survivors():
+    vt = VirtualTime()
+    plan = FaultPlan([FaultSpec("crash", 1, 1)])
+    router = _router(vt, 3, plan=plan)
+    stats = router.serve(_reqs(9))
+    assert stats.deaths == 1
+    assert stats.requeued > 0
+    assert stats.completed == 9          # survivors replayed the orphans
+    assert stats.failed == stats.rejected == 0
+    assert len(stats.recovery_s) == 1    # the death drained
+    # requeued requests consumed extra attempts; tokens identical anyway
+    assert any(r.attempts == 2 for r in stats.results)
+    crashed = [w for w in router.workers if not w.alive]
+    assert [w.index for w in crashed] == [1]
+    # the crash committed what worker 1 finished pre-crash (step >= 1 means
+    # one request retired before the boundary fired)
+    assert all(np.array_equal(
+        r.tokens,
+        StubEngine.tokens_for(
+            SimpleNamespace(request_id=r.request_id, max_new_tokens=6))
+    ) for r in stats.results)
+
+
+def test_all_workers_dead_fails_attributed_not_hangs():
+    vt = VirtualTime()
+    plan = FaultPlan([FaultSpec("crash", 0, 0)])
+    router = _router(vt, 1, plan=plan)
+    stats = router.serve(_reqs(4))
+    assert stats.deaths == 1
+    assert stats.completed + stats.failed == 4
+    reasons = {r.reason for r in stats.results if r.status == "failed"}
+    assert reasons <= {"no-workers-left"}
+    assert stats.failed > 0
+
+
+def test_retries_exhausted_is_attributed():
+    vt = VirtualTime()
+    plan = FaultPlan([FaultSpec("crash", 0, 0), FaultSpec("crash", 1, 0)])
+    router = _router(vt, 3, plan=plan,
+                     cfg=FleetConfig(max_retries=1))
+    stats = router.serve(_reqs(1))
+    # dispatch 1: worker 0 crashes at once; requeue consumes the only retry;
+    # dispatch 2: worker 1 crashes too -> budget spent -> attributed failure
+    r = stats.results[0]
+    assert r.status == "failed"
+    assert r.reason == "retries-exhausted"
+    assert r.attempts == 2
+    assert stats.deaths == 2
+
+
+def test_deadline_enforced_and_goodput_accounted():
+    vt = VirtualTime()
+    router = _router(vt, 1, cfg=FleetConfig(deadline_s=1.5),
+                     max_batch=1, boundary_s=0.5)
+    # 1 slot -> 2 requests per round (2x num_slots queue bound); each
+    # boundary takes 0.5 virtual seconds and finishes one request
+    stats = router.serve(_reqs(5, gen=4))
+    assert stats.completed + stats.failed == 5
+    by_status = {}
+    for r in stats.results:
+        by_status.setdefault(r.status, []).append(r)
+    assert all(r.reason == "deadline" for r in by_status.get("failed", []))
+    assert len(by_status["failed"]) >= 1
+    late = [r for r in by_status["completed"] if not r.within_deadline]
+    assert late                            # finished but past TTL: counted
+    assert 0.0 < stats.goodput < 1.0       # out of goodput, not hidden
+
+
+def test_oversize_request_fails_up_front():
+    vt = VirtualTime()
+    router = _router(vt, 2, max_seq=32)
+    reqs = _reqs(3, prompt_len=16, gen=6)
+    reqs[1] = ServeRequest(request_id=1,
+                           prompt=np.zeros((40,), np.int32),
+                           max_new_tokens=8)
+    stats = router.serve(reqs)
+    assert stats.result_of(1).status == "failed"
+    assert stats.result_of(1).reason == "oversize"
+    assert stats.completed == 2
+
+
+def test_duplicate_request_ids_rejected():
+    vt = VirtualTime()
+    router = _router(vt, 1)
+    reqs = _reqs(2)
+    reqs[1] = ServeRequest(request_id=0, prompt=reqs[1].prompt,
+                           max_new_tokens=6)
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        router.serve(reqs)
+
+
+def test_commit_is_idempotent():
+    vt = VirtualTime()
+    router = _router(vt, 1)
+    stats = router.serve(_reqs(2))
+    assert stats.duplicate_commits == 0
+    # a late straggler re-committing a terminal request dedupes: first
+    # commit wins, the duplicate is counted, tokens/worker never change
+    t = router._by_id[0]
+    before = (t.result.tokens, t.result.worker)
+    assert router._commit(t, np.zeros((6,), np.int32), worker=0,
+                          now=vt.clock()) is False
+    assert router._dups == 1
+    assert t.result.tokens is before[0]
+    assert t.result.worker == before[1]
+
+
+def test_sustained_overload_sheds_explicitly():
+    vt = VirtualTime()
+    # one worker, 6 allocatable pages, 3 worst-case pages per request ->
+    # 2 requests per round; 10 queued keeps pressure over the high
+    # watermark for 3 rounds, walking the ladder to the shed level
+    engines = [StubEngine(vt)]
+    router = FleetRouter(
+        engines, FleetConfig(),
+        engine_kwargs={"num_pages": 7, "num_slots": 1, "page_size": 8},
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    stats = router.serve(_reqs(10))
+    assert stats.max_degrade_level == 3
+    assert stats.rejected > 0
+    shed = [r for r in stats.results if r.status == "rejected"]
+    assert all(r.reason == "shed" for r in shed)
+    # no silent loss: every request is terminal with a status
+    assert stats.completed + stats.failed + stats.rejected == 10
+    # the ladder walked up one level per round (hysteresis audit trail:
+    # (time, from_level, to_level, pressure) tuples)
+    assert [(frm, to) for _, frm, to, _ in stats.degrade_transitions] == \
+        [(0, 1), (1, 2), (2, 3)]
+
+
+def test_fleet_events_flow_to_analysis():
+    vt = VirtualTime()
+    server = TracingServer()
+    tracer = Tracer("t-fleet", server)
+    plan = FaultPlan([FaultSpec("crash", 1, 1)])
+    engines = [StubEngine(vt) for _ in range(3)]
+    router = FleetRouter(engines, FleetConfig(), fault_plan=plan,
+                         clock=vt.clock, sleep=vt.sleep, tracer=tracer)
+    stats = router.serve(_reqs(9))
+    summary = fleet_summary(server.timeline("t-fleet"))
+    assert summary["deaths"] == 1.0
+    assert summary["completed"] == float(stats.completed)
+    assert summary["requeued"] == float(stats.requeued)
+    assert summary["faults_crash"] == 1.0
+    assert summary["goodput"] == 1.0
+    assert summary["recoveries"] == 1.0
+    assert summary["rounds"] == float(stats.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Integration: real paged engines, full fault matrix, bit-identity
+# ---------------------------------------------------------------------------
+NUM_SLOTS, PAGE_SIZE, MAX_SEQ = 4, 8, 64
+N_REQS, PROMPT_LEN, GEN = 6, 12, 5
+
+FAULT_PLANS = {
+    "crash": "crash@1:1",
+    "stall": "stall@1:1:0.02",
+    "pressure": "pressure@1:1:4x2",
+}
+
+
+@pytest.fixture(scope="module")
+def engines():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServingEngine
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engines = [
+        ServingEngine(model, params, max_batch=NUM_SLOTS, max_seq=MAX_SEQ,
+                      page_size=PAGE_SIZE)
+        for _ in range(3)
+    ]
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [
+        np.concatenate([
+            shared,
+            rng.integers(0, cfg.vocab_size,
+                         (PROMPT_LEN - len(shared),)).astype(np.int32),
+        ])
+        for _ in range(N_REQS)
+    ]
+    return engines, prompts
+
+
+_oracles = {}
+
+
+def _fleet_serve(engines, prompts, plan_text, spec_k, prefix):
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=GEN)
+        for i, p in enumerate(prompts)
+    ]
+    router = FleetRouter(
+        engines, FleetConfig(),
+        engine_kwargs=dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE,
+                           spec_k=spec_k, prefix_cache=prefix),
+        fault_plan=FaultPlan.parse(plan_text) if plan_text else None,
+    )
+    return router.serve(reqs)
+
+
+@pytest.mark.parametrize("prefix", [True, False], ids=["prefix", "noprefix"])
+@pytest.mark.parametrize("spec_k", [0, 2], ids=["spec0", "spec2"])
+@pytest.mark.parametrize("kind", sorted(FAULT_PLANS))
+def test_fault_matrix_bit_identity(engines, kind, spec_k, prefix):
+    engs, prompts = engines
+    key = (spec_k, prefix)
+    if key not in _oracles:
+        base = _fleet_serve(engs, prompts, "", spec_k, prefix)
+        assert base.completed == N_REQS
+        _oracles[key] = {r.request_id: r.tokens for r in base.results}
+    oracle = _oracles[key]
+
+    stats = _fleet_serve(engs, prompts, FAULT_PLANS[kind], spec_k, prefix)
+    # zero silent loss: every submitted request is terminal
+    assert stats.completed + stats.failed + stats.rejected == N_REQS
+    # this matrix has survivors and no deadline: everything completes
+    assert stats.completed == N_REQS, (
+        f"{kind}/spec{spec_k}/prefix={prefix}: "
+        f"{[(r.request_id, r.status, r.reason) for r in stats.results]}"
+    )
+    for r in stats.results:
+        assert np.array_equal(r.tokens, oracle[r.request_id]), (
+            f"{kind}/spec{spec_k}/prefix={prefix}: request {r.request_id} "
+            f"diverged after replay"
+        )
+    if kind == "crash":
+        assert stats.deaths == 1 and stats.requeued > 0
+        assert len(stats.recovery_s) == 1
+    else:
+        assert stats.deaths == 0      # stall < TTL and pressure never kill
+    assert stats.duplicate_commits == 0   # sequential mode cannot duplicate
+
+
+def test_parallel_hedge_duplicates_dedupe(engines):
+    """A stall longer than the lease TTL in parallel mode: the router
+    detaches the straggler, re-dispatches its uncommitted work immediately,
+    and the straggler's late results dedupe at the idempotent commit."""
+    engs, prompts = engines
+    gens = [2, 2, 8, 2, 8, 2]     # worker 1 gets one short + one long req
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=g)
+        for i, (p, g) in enumerate(zip(prompts, gens))
+    ]
+    base = FleetRouter(
+        engs, FleetConfig(),
+        engine_kwargs=dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE),
+    ).serve([ServeRequest(request_id=r.request_id, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens) for r in reqs])
+    oracle = {r.request_id: r.tokens for r in base.results}
+
+    router = FleetRouter(
+        engs,
+        FleetConfig(parallel=True, hedge=True, lease_ttl_s=0.4),
+        engine_kwargs=dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE),
+        fault_plan=FaultPlan.parse("stall@1:4:1.5"),
+    )
+    stats = router.serve([
+        ServeRequest(request_id=r.request_id, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens) for r in reqs
+    ])
+    assert stats.completed == len(reqs)
+    assert stats.hedged > 0               # the straggler was detached
+    # the stalled worker either self-crashed on its expired lease (its
+    # pre-stall results arrive as late commits) or returned late — both
+    # paths dedupe instead of double-committing
+    assert stats.duplicate_commits >= 1
+    assert stats.completed + stats.failed + stats.rejected == len(reqs)
+    for r in stats.results:
+        assert np.array_equal(r.tokens, oracle[r.request_id])

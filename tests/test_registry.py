@@ -110,3 +110,61 @@ def test_kvstore_file_roundtrip(tmp_path, clock):
     store2.load(path)
     assert store2.get("k/a") == {"v": 1}
     assert [k for k, _ in store2.scan("k/")] == ["k/a", "k/b"]
+
+
+def test_renew_after_expiry_refused(clock):
+    store = KVStore(clock=clock)
+    store.put("lease", {"v": 1}, ttl=10)
+    clock.t = 5
+    assert store.renew("lease", ttl=10)       # mid-lease heartbeat extends
+    clock.t = 16                              # past the extended expiry
+    assert not store.renew("lease", ttl=10)   # refused, never resurrects
+    assert store.get("lease") is None
+    assert not store.renew("lease", ttl=10)   # stays refused
+
+
+def test_expired_entries_disappear_atomically_from_scan(clock):
+    store = KVStore(clock=clock)
+    store.put("a/1", {"v": 1}, ttl=10)
+    store.put("a/2", {"v": 2}, ttl=100)
+    clock.t = 50
+    assert [k for k, _ in store.scan("a/")] == ["a/2"]
+    # the expired entry was purged by the scan, not merely filtered
+    assert not store.renew("a/1", ttl=10)
+
+
+def test_lease_expiry_persists_across_dump_reload(tmp_path, clock):
+    store = KVStore(clock=clock)
+    store.put("lease/live", {"v": 1}, ttl=100)
+    store.put("lease/dying", {"v": 2}, ttl=10)
+    path = str(tmp_path / "reg.json")
+    store.dump(path)
+    clock.t = 50                    # between the two expiries
+    store2 = KVStore(clock=clock)
+    store2.load(path)
+    assert store2.get("lease/dying") is None    # expiry survives the file
+    assert store2.get("lease/live") == {"v": 1}
+    assert not store2.renew("lease/dying", ttl=10)
+
+
+def test_mutate_is_atomic_rmw(clock):
+    store = KVStore(clock=clock)
+    store.put("counter", {"n": 0})
+    for _ in range(10):
+        assert store.mutate("counter", lambda rec: {"n": rec["n"] + 1})
+    assert store.get("counter") == {"n": 10}
+    # mutate on an expired entry is refused (and purges it)
+    store.put("lease", {"n": 0}, ttl=10)
+    clock.t += 11
+    assert not store.mutate("lease", lambda rec: rec)
+    assert store.get("lease") is None
+
+
+def test_get_and_scan_return_copies(clock):
+    store = KVStore(clock=clock)
+    store.put("k", {"n": 1})
+    store.get("k")["n"] = 99
+    assert store.get("k") == {"n": 1}
+    for _, v in store.scan("k"):
+        v["n"] = 99
+    assert store.get("k") == {"n": 1}

@@ -11,10 +11,13 @@ from repro.core.scenarios import ScenarioSpec, run_scenario, scenario_kinds
 from repro.core.tracing import NullTracer, Tracer, TracingServer
 from repro.core.analysis import scheduler_summary, slo_attainment
 from repro.serve.scheduler import (
+    DeadlineExceeded,
     RequestScheduler,
+    RetriesExhausted,
     SchedulerConfig,
     SchedulerQueueFull,
     SlotPool,
+    backoff_delay,
 )
 
 
@@ -380,6 +383,130 @@ def test_server_scenario_shared_prefix_mix():
     assert m2["prefix_len"] == 16
     assert 0 <= m2["shared_prefix_requests"] <= 10
     assert m2["num_requests"] == 10
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, retries, backoff, shedding (fault-tolerance satellite)
+# ---------------------------------------------------------------------------
+def test_backoff_delay_caps_and_is_deterministic():
+    import random
+
+    assert [backoff_delay(a, 0.01, 0.05) for a in (1, 2, 3, 4)] == [
+        0.01, 0.02, 0.04, 0.05
+    ]
+    with pytest.raises(ValueError):
+        backoff_delay(0, 0.01, 0.05)
+    # seeded jitter: same rng seed -> same schedule, bounded by ±jitter
+    a = [backoff_delay(1, 0.01, 1.0, jitter=0.5, rng=random.Random(42))
+         for _ in range(3)]
+    assert a[0] == a[1] == a[2]
+    assert 0.005 <= a[0] <= 0.015
+
+
+def test_retry_budget_recovers_transient_failures():
+    vt = VirtualTime()
+    calls = []
+
+    def execute(batch):
+        calls.append(vt.t)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return [r.payload for r in batch]
+
+    sched = RequestScheduler(
+        execute,
+        SchedulerConfig(max_batch=1, max_retries=3, backoff_base_ms=10.0,
+                        backoff_cap_ms=1000.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    fut = sched.submit(payload=7)
+    sched.run_until_idle()
+    assert fut.result() == 7
+    assert sched.retries == 2
+    # deterministic backoff schedule (no jitter): retry arrivals land at
+    # +base, then +2x base after the failed-attempt times
+    assert calls == pytest.approx([0.0, 0.010, 0.030])
+
+
+def test_retries_exhausted_future_never_hangs():
+    vt = VirtualTime()
+    attempts = []
+
+    def execute(batch):
+        attempts.append(vt.t)
+        raise RuntimeError("kaboom")
+
+    sched = RequestScheduler(
+        execute,
+        SchedulerConfig(max_batch=1, max_retries=2, backoff_base_ms=10.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    fut = sched.submit()
+    sched.run_until_idle()                      # returns: the future is set
+    with pytest.raises(RetriesExhausted) as ei:
+        fut.result()
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert len(attempts) == 3                   # initial + 2 retries
+    assert sched.stats()["retry_failures"] == 1.0
+    assert sched.stats()["retries"] == 2.0
+
+
+def test_deadline_exceeded_is_terminal_not_silent():
+    vt = VirtualTime()
+
+    def execute(batch):
+        vt.t += 0.100                           # each batch takes 100 ms
+
+    sched = RequestScheduler(
+        execute, SchedulerConfig(max_batch=1, batch_timeout_ms=0.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    ok = sched.submit(arrival_s=0.0)
+    late = sched.submit(arrival_s=0.0, deadline_s=0.050)  # dies in queue
+    sched.run_until_idle()
+    assert ok.result() is None                  # executed fine
+    with pytest.raises(DeadlineExceeded):
+        late.result()
+    assert sched.stats()["deadline_failures"] == 1.0
+
+
+def test_config_deadline_ms_applies_to_submissions():
+    vt = VirtualTime()
+
+    def execute(batch):
+        vt.t += 0.100
+
+    sched = RequestScheduler(
+        execute,
+        SchedulerConfig(max_batch=1, batch_timeout_ms=0.0, deadline_ms=50.0),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    first = sched.submit(arrival_s=0.0)
+    second = sched.submit(arrival_s=0.0)        # queues behind the first
+    sched.run_until_idle()
+    assert first.request.status == "completed"
+    with pytest.raises(DeadlineExceeded):
+        second.result()
+
+
+def test_shedding_rejects_new_admissions_but_drains_queued():
+    vt = VirtualTime()
+    served = []
+    sched = RequestScheduler(
+        lambda b: served.extend(r.request_id for r in b),
+        SchedulerConfig(max_batch=1),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    queued = sched.submit()
+    sched.shedding = True
+    with pytest.raises(SchedulerQueueFull, match="shed"):
+        sched.submit()
+    assert sched.rejected == 1
+    sched.run_until_idle()                      # queued work still drains
+    assert queued.request.status == "completed"
+    assert served == [0]
+    sched.shedding = False
+    assert sched.submit() is not None
 
 
 def test_prefix_cache_scheduler_config_roundtrip():
