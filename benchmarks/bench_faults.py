@@ -67,6 +67,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     import jax
 
     from repro.configs import get_config
+    from repro.core.manifest import EngineKnobs
     from repro.models import build_model
     from repro.serve.engine import ServeRequest, ServingEngine
     from repro.serve.faults import FaultPlan
@@ -109,7 +110,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "faults",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=PAGE_SIZE)),
         "num_workers": NUM_WORKERS,
         "num_requests": NUM_REQUESTS,
         "prompt_len": PROMPT_LEN,

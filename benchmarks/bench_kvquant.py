@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.analysis import kv_divergence_summary, percentile
+from repro.core.manifest import EngineKnobs
 from repro.kernels import kvquant
 from repro.models import build_model
 from repro.serve.engine import ServeRequest, ServingEngine
@@ -124,7 +125,8 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "kvquant",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", kv_dtype="int8",
+                                       page_size=page_size)),
         "page_size": page_size,
         "num_slots": num_slots,
         "budget_bytes": budget_bytes,

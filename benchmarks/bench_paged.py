@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.manifest import EngineKnobs
 from repro.kernels import ref
 from repro.kernels.paged_attention import paged_attention as pallas_paged
 from repro.models import build_model
@@ -123,7 +124,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "paged",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=page_size)),
         "budget_tokens": budget_tokens,
         "max_seq": max_seq,
         "page_size": page_size,

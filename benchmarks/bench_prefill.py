@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.analysis import percentile
+from repro.core.manifest import EngineKnobs
 from repro.kernels import ref
 from repro.kernels.varlen_prefill import varlen_prefill as pallas_varlen
 from repro.models import build_model
@@ -172,7 +173,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "prefill",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=page_size)),
         "max_seq": max_seq,
         "page_size": page_size,
         "num_slots": num_slots,

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.analysis import percentile
+from repro.core.manifest import EngineKnobs
 from repro.models import build_model
 from repro.serve.engine import ServeRequest, ServingEngine
 
@@ -95,7 +96,8 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "prefix",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=page_size,
+                                       prefix_cache=True)),
         "max_seq": max_seq,
         "page_size": page_size,
         "num_slots": num_slots,

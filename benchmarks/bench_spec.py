@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.manifest import EngineKnobs
 from repro.kernels import ref
 from repro.kernels.spec_verify import spec_verify as pallas_spec
 from repro.models import build_model
@@ -256,7 +257,8 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "spec",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=page_size,
+                                       spec_k=spec_k)),
         "max_seq": max_seq,
         "page_size": page_size,
         "num_slots": num_slots,

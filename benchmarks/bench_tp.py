@@ -75,6 +75,7 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
 
     from repro.configs import get_config
     from repro.core.analysis import percentile, tp_summary
+    from repro.core.manifest import EngineKnobs
     from repro.core.tracing import Tracer, TracingServer
     from repro.launch.mesh import make_host_mesh
     from repro.models import build_model
@@ -130,7 +131,8 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     out = {
         "bench": "tp",
         "smoke": smoke,
-        **bench_meta(seed),
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=page_size,
+                                       tp=TP_SWEEP[-1])),
         "devices": jax.device_count(),
         "pages_per_shard": pages_per_shard,
         "page_size": page_size,

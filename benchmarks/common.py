@@ -19,10 +19,13 @@ import jax
 import numpy as np
 
 
-def bench_meta(seed: int) -> Dict[str, object]:
+def bench_meta(seed: int, knobs=None) -> Dict[str, object]:
     """Reproducibility block for every ``BENCH_*.json`` artifact: the RNG
     seed the run used plus the git revision it ran at, so perf trajectories
-    can be compared run-to-run (and regressions bisected)."""
+    can be compared run-to-run (and regressions bisected).  ``knobs`` is
+    the :class:`repro.core.manifest.EngineKnobs` the benchmark exercised —
+    stamped alongside, because engine configuration moves the measured
+    numbers as much as the code revision does."""
     try:
         rev = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"],
@@ -30,7 +33,10 @@ def bench_meta(seed: int) -> Dict[str, object]:
         ).stdout.strip() or "unknown"
     except (OSError, subprocess.SubprocessError):
         rev = "unknown"
-    return {"seed": int(seed), "git_rev": rev}
+    meta: Dict[str, object] = {"seed": int(seed), "git_rev": rev}
+    if knobs is not None:
+        meta["engine_knobs"] = knobs.to_dict()
+    return meta
 
 
 def time_call(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:

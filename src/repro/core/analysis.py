@@ -458,6 +458,100 @@ def fleet_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def jain_index(shares: Sequence[float]) -> float:
+    """Jain's fairness index over per-tenant shares: (Σx)² / (n·Σx²).
+
+    1.0 when every tenant got an equal share, 1/n when one tenant got
+    everything.  Defined as 1.0 for empty or all-zero inputs (no
+    contention — nothing was unfair)."""
+    xs = [float(x) for x in shares if x > 0]
+    if not xs:
+        return 1.0
+    total = sum(xs)
+    sq = sum(x * x for x in xs)
+    return total * total / (len(xs) * sq) if sq > 0 else 1.0
+
+
+def slo_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize a multi-tenant SLO run from ``sched:tenant`` events.
+
+    The scheduler and the paged engine publish one ``sched:tenant`` event
+    per terminal request, tagged ``tenant`` / ``priority`` / ``status``
+    (completed | failed | rejected) / ``latency_s`` / ``slo_ms`` /
+    ``slo_ok`` (completed within its SLO) / ``tokens`` (admission cost).
+    This aggregates them into the SLO block of the analysis workflow:
+    goodput-under-SLO (the headline — completed-within-SLO over all
+    terminal requests, so shed and late work both count against it),
+    per-tenant p99 latency (``<tenant>_p99_ms``), shed/defer counters and
+    Jain's fairness index over per-tenant *served* tokens — the number
+    token buckets + weighted fair dequeue are supposed to hold near 1.0
+    when tenants offer equal load."""
+    terminal = 0
+    completed = 0
+    rejected = 0
+    failed = 0
+    slo_ok = 0
+    deferred = 0
+    latencies: Dict[str, List[float]] = {}
+    served_tokens: Dict[str, float] = {}
+    shed_by: Dict[str, float] = {}
+    for s in spans:
+        if s.name == "sched:defer":
+            deferred += 1
+            continue
+        if s.name != "sched:tenant":
+            continue
+        tenant = str(s.tags.get("tenant", "default"))
+        status = str(s.tags.get("status", "completed"))
+        terminal += 1
+        if status == "completed":
+            completed += 1
+            latencies.setdefault(tenant, []).append(
+                float(s.tags.get("latency_s", 0.0))
+            )
+            served_tokens[tenant] = served_tokens.get(tenant, 0.0) + float(
+                s.tags.get("tokens", 0.0)
+            )
+            if s.tags.get("slo_ok", True):
+                slo_ok += 1
+        elif status == "rejected":
+            rejected += 1
+            shed_by[tenant] = shed_by.get(tenant, 0.0) + 1.0
+        else:
+            failed += 1
+    if not terminal:
+        return {}
+    out: Dict[str, float] = {
+        "requests": float(terminal),
+        "completed": float(completed),
+        "rejected": float(rejected),
+        "failed": float(failed),
+        "deferred": float(deferred),
+        "goodput_slo": slo_ok / terminal,
+        "slo_attainment": slo_ok / completed if completed else 0.0,
+        "jain_index": jain_index(list(served_tokens.values())),
+        "tenants": float(len(set(latencies) | set(shed_by))),
+    }
+    for tenant in sorted(latencies):
+        ls = latencies[tenant]
+        out[f"{tenant}_p99_ms"] = percentile(ls, 99.0) * 1e3
+        out[f"{tenant}_completed"] = float(len(ls))
+        out[f"{tenant}_served_tokens"] = served_tokens.get(tenant, 0.0)
+    for tenant in sorted(shed_by):
+        out[f"{tenant}_shed"] = shed_by[tenant]
+    return out
+
+
+def slo_section(spans: Iterable[Span]) -> str:
+    """Render the multi-tenant SLO block as a report section; empty string
+    when no tenant-tagged run was traced."""
+    summary = slo_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def itl_summary(itls_s: Sequence[float]) -> Dict[str, float]:
     """Inter-token latency block: the serving-quality metric the paged
     decode loop optimizes (speculative boundaries emit several tokens at

@@ -31,19 +31,23 @@ under a fake clock (the paper allows simulated time in traces).
 """
 from __future__ import annotations
 
+import random
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Type, Union
 
 from ..serve.scheduler import (
+    PRIORITY_TIERS,
     RequestScheduler,
     ScheduledRequest,
     SchedulerConfig,
+    TenantSpec,
 )
-from .analysis import latency_summary, percentile, slo_attainment
+from .analysis import jain_index, latency_summary, percentile, slo_attainment
 from .tracing import Tracer, TraceLevel
 from .workload import (
     BatchedLoad,
+    MultiTenantLoad,
     PoissonLoad,
     Request,
     SharedPrefixLoad,
@@ -71,6 +75,15 @@ class ScenarioSpec:
     prefix_share: float = 0.75      # fraction of requests reusing a prefix
     prefix_groups: int = 1          # distinct shared prefixes
     suffix_len: int = 16            # unique tail tokens per request
+    # multi-tenant SLO serving (server kind): tenant dicts become a
+    # MultiTenantLoad arrival mix plus per-tenant TenantSpec entries
+    # (priority tier, weight, token-bucket rate/burst) in the scheduler;
+    # priority_mix assigns tiers to a single-tenant load by fraction
+    # (e.g. {"best_effort": 0.25, "standard": 0.5, "premium": 0.25});
+    # fairness=False degrades dequeue to pure FIFO (the baseline)
+    tenants: Optional[List[Dict[str, Any]]] = None
+    priority_mix: Optional[Dict[str, float]] = None
+    fairness: bool = True
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -87,6 +100,9 @@ class ScenarioSpec:
             "prefix_share": self.prefix_share,
             "prefix_groups": self.prefix_groups,
             "suffix_len": self.suffix_len,
+            "tenants": self.tenants,
+            "priority_mix": self.priority_mix,
+            "fairness": self.fairness,
         }
 
     @classmethod
@@ -134,6 +150,11 @@ class Scenario:
         config: Optional[SchedulerConfig],
     ) -> RequestScheduler:
         cfg = config or self.default_scheduler
+        if not self.spec.fairness and cfg.fairness:
+            cfg = replace(cfg, fairness=False)
+        tenant_specs = [
+            TenantSpec.from_dict(t) for t in (self.spec.tenants or [])
+        ]
 
         def execute(batch: List[ScheduledRequest]) -> None:
             total = sum(r.batch_size for r in batch)
@@ -147,7 +168,8 @@ class Scenario:
                 predict(total)
 
         return RequestScheduler(
-            execute, cfg, clock=clock, sleep=sleep, tracer=_SchedulerTrace(tracer)
+            execute, cfg, clock=clock, sleep=sleep,
+            tracer=_SchedulerTrace(tracer), tenants=tenant_specs,
         )
 
     def warmup(self, predict: PredictFn, tracer: Tracer, batch: int) -> None:
@@ -352,7 +374,18 @@ class ServerScenario(Scenario):
         spec = self.spec
         self.warmup(predict, tracer, 1)
         sched = self.make_scheduler(predict, tracer, clock, sleep, scheduler)
-        if spec.prefix_len > 0:
+        multi = bool(spec.tenants or spec.priority_mix)
+        if spec.tenants:
+            # multi-tenant mix: superposed per-tenant Poisson streams whose
+            # tags carry each tenant's identity, tier, SLO and token shape
+            tdicts = [dict(t) for t in spec.tenants]
+            for t in tdicts:
+                t.setdefault("rate_hz", spec.rate_hz / len(tdicts))
+                t.setdefault("slo_ms", spec.slo_ms)
+            load = MultiTenantLoad(
+                spec.num_requests, tdicts, seed=spec.seed
+            )
+        elif spec.prefix_len > 0:
             # shared-prefix server mix: Poisson arrivals whose requests
             # carry prompt-composition tags (prefix group / lengths) so the
             # scheduler path — and the paged engine behind it — sees the
@@ -368,6 +401,37 @@ class ServerScenario(Scenario):
             )
         else:
             load = PoissonLoad(spec.num_requests, spec.rate_hz, seed=spec.seed)
+        mix_rng = random.Random(spec.seed) if spec.priority_mix else None
+        tiers: List[int] = []
+        weights: List[float] = []
+        if spec.priority_mix:
+            for name, frac in spec.priority_mix.items():
+                tiers.append(
+                    PRIORITY_TIERS.index(name)
+                    if name in PRIORITY_TIERS else int(name)
+                )
+                weights.append(float(frac))
+
+        def submit_kwargs(req: Request) -> Dict[str, Any]:
+            if spec.tenants:
+                tags = req.tags
+                cost = float(
+                    int(tags.get("prompt_len", 0))
+                    + int(tags.get("gen_tokens", 0))
+                )
+                return {
+                    "tenant": str(tags.get("tenant", "default")),
+                    "priority": int(tags.get("priority", 1)),
+                    "slo_ms": float(tags.get("slo_ms") or spec.slo_ms),
+                    "cost_tokens": cost if cost > 0 else None,
+                }
+            if mix_rng is not None:
+                return {
+                    "priority": mix_rng.choices(tiers, weights)[0],
+                    "slo_ms": spec.slo_ms,
+                }
+            return {}
+
         with tracer.span("scenario:server", TraceLevel.MODEL, rate_hz=spec.rate_hz):
             t0 = clock()
             futs = [
@@ -375,31 +439,56 @@ class ServerScenario(Scenario):
                     payload=req.tags or None,
                     batch_size=1,
                     arrival_s=t0 + req.arrival_s,
+                    **submit_kwargs(req),
                 )
                 for req in load.requests()
             ]
             sched.run_until_idle()
         reqs = [f.request for f in futs]
+        done = [r for r in reqs if r.status == "completed"] if multi else reqs
         # end-to-end latency including queueing: completion - arrival
-        lat = [r.latency_s for r in reqs]
+        lat = [r.latency_s for r in done]
         makespan = max(r.end_s for r in reqs) - t0
         n = len(reqs)
-        p99 = percentile(lat, 99.0) * 1e3
+        p99 = percentile(lat, 99.0) * 1e3 if lat else float("nan")
         metrics = latency_summary(lat)
         metrics.update(
             {
                 "scenario": "server",
                 "num_requests": n,
                 "p99_ms": p99,
-                "achieved_qps": n / makespan if makespan > 0 else float("inf"),
+                "achieved_qps": (
+                    len(done) / makespan if makespan > 0 else float("inf")
+                ),
                 "offered_qps": spec.rate_hz,
                 "slo_ms": spec.slo_ms,
-                "slo_met": p99 <= spec.slo_ms,
-                "mean_queue_s": sum(r.queue_s for r in reqs) / n,
+                "slo_met": bool(lat) and p99 <= spec.slo_ms,
+                "mean_queue_s": (
+                    sum(r.queue_s for r in done) / len(done) if done else 0.0
+                ),
                 **slo_attainment(lat, spec.slo_ms),
                 **self.scheduler_metrics(sched),
             }
         )
+        if multi:
+            ledger = sched.ledger.stats()
+            metrics.update(
+                {
+                    "fairness": spec.fairness,
+                    "completed": len(done),
+                    "rejected": sum(
+                        1 for r in reqs if r.status == "rejected"
+                    ),
+                    "jain_index": jain_index(
+                        [v["tokens_admitted"] for v in ledger.values()]
+                    ),
+                    "tenant_stats": ledger,
+                }
+            )
+            for tname in sorted(ledger):
+                tl = [r.latency_s for r in done if r.tenant == tname]
+                if tl:
+                    metrics[f"{tname}_p99_ms"] = percentile(tl, 99.0) * 1e3
         if spec.prefix_len > 0:
             shared = sum(
                 1

@@ -81,6 +81,151 @@ class UniformLoad(WorkloadGenerator):
             )
 
 
+class BurstyLoad(WorkloadGenerator):
+    """On/off-modulated Poisson arrivals (interrupted Poisson process).
+
+    Time alternates between an ``on_s``-long burst phase at
+    ``rate_hz * burst_factor`` and an ``off_s``-long quiet phase at
+    ``rate_hz``.  With ``burst_factor=1`` this degenerates to plain
+    Poisson.  The overload story's arrival process: short bursts that
+    exceed sustainable capacity while the long-run average does not."""
+
+    name = "bursty"
+
+    def __init__(self, num_requests: int, rate_hz: float,
+                 burst_factor: float = 3.0, on_s: float = 1.0,
+                 off_s: float = 4.0, seed: int = 0) -> None:
+        if rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        if burst_factor < 1.0:
+            raise ValueError("burst_factor must be >= 1")
+        if on_s <= 0 or off_s < 0:
+            raise ValueError("need on_s > 0 and off_s >= 0")
+        self.num_requests = num_requests
+        self.rate_hz = rate_hz
+        self.burst_factor = burst_factor
+        self.on_s = on_s
+        self.off_s = off_s
+        self.seed = seed
+
+    def requests(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed)
+        period = self.on_s + self.off_s
+        t = 0.0
+        for i in range(self.num_requests):
+            while True:
+                phase = t % period
+                in_burst = phase < self.on_s
+                rate = self.rate_hz * (self.burst_factor if in_burst else 1.0)
+                dt = float(rng.exponential(1.0 / rate))
+                # an arrival drawn past the current phase boundary is
+                # discarded and the clock restarts at the boundary with the
+                # next phase's rate (standard piecewise-constant thinning)
+                boundary = self.on_s if in_burst else period
+                if phase + dt <= boundary:
+                    t += dt
+                    break
+                t += boundary - phase
+            yield Request(
+                request_id=i, arrival_s=t, batch_size=1,
+                tags={"burst": bool((t % period) < self.on_s)},
+            )
+
+
+class DiurnalLoad(WorkloadGenerator):
+    """Sinusoidally rate-modulated Poisson arrivals (diurnal cycle).
+
+    Instantaneous rate ``rate_hz * (1 + amplitude * sin(2*pi*t/period_s))``
+    sampled by Lewis-Shedler thinning against the peak rate, so the
+    arrival process is an exact non-homogeneous Poisson process."""
+
+    name = "diurnal"
+
+    def __init__(self, num_requests: int, rate_hz: float,
+                 period_s: float = 60.0, amplitude: float = 0.8,
+                 seed: int = 0) -> None:
+        if rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        if not 0.0 <= amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        if period_s <= 0:
+            raise ValueError("period_s must be positive")
+        self.num_requests = num_requests
+        self.rate_hz = rate_hz
+        self.period_s = period_s
+        self.amplitude = amplitude
+        self.seed = seed
+
+    def _rate(self, t: float) -> float:
+        return self.rate_hz * (
+            1.0 + self.amplitude * math.sin(2.0 * math.pi * t / self.period_s)
+        )
+
+    def requests(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed)
+        peak = self.rate_hz * (1.0 + self.amplitude)
+        t = 0.0
+        for i in range(self.num_requests):
+            while True:
+                t += float(rng.exponential(1.0 / peak))
+                if rng.random() < self._rate(t) / peak:
+                    break
+            yield Request(request_id=i, arrival_s=t, batch_size=1)
+
+
+class MultiTenantLoad(WorkloadGenerator):
+    """Superposition of independent per-tenant Poisson streams.
+
+    Each tenant is a dict with at least ``name`` and ``rate_hz``; optional
+    keys ``num_requests`` (default ``num_requests`` split evenly),
+    ``priority``, ``slo_ms``, ``prompt_len``, ``gen_tokens`` ride along in
+    each request's tags so scheduler-level scenarios can submit with the
+    tenant's identity and shape (prefill-heavy vs decode-heavy mixes are
+    just different prompt_len/gen_tokens per tenant).  Streams are merged
+    by arrival time and re-numbered globally."""
+
+    name = "multi_tenant"
+
+    def __init__(self, num_requests: int,
+                 tenants: List[Dict[str, object]], seed: int = 0) -> None:
+        if not tenants:
+            raise ValueError("need at least one tenant")
+        for t in tenants:
+            if "name" not in t or float(t.get("rate_hz", 0.0)) <= 0:
+                raise ValueError(
+                    "each tenant needs a name and a positive rate_hz"
+                )
+        self.num_requests = num_requests
+        self.tenants = [dict(t) for t in tenants]
+        self.seed = seed
+
+    def requests(self) -> Iterator[Request]:
+        per_default = max(1, self.num_requests // len(self.tenants))
+        merged: List[Request] = []
+        for k, spec in enumerate(self.tenants):
+            rng = np.random.default_rng((self.seed, k))
+            n = int(spec.get("num_requests", per_default))
+            rate = float(spec["rate_hz"])
+            tags = {
+                "tenant": str(spec["name"]),
+                "priority": int(spec.get("priority", 1)),
+                "slo_ms": float(spec.get("slo_ms", 0.0)),
+                "prompt_len": int(spec.get("prompt_len", 0)),
+                "gen_tokens": int(spec.get("gen_tokens", 0)),
+            }
+            t = 0.0
+            for _ in range(n):
+                t += float(rng.exponential(1.0 / rate))
+                merged.append(Request(
+                    request_id=0, arrival_s=t, batch_size=1,
+                    tags=dict(tags),
+                ))
+        merged.sort(key=lambda r: r.arrival_s)
+        for i, req in enumerate(merged):
+            req.request_id = i
+            yield req
+
+
 class SingleStreamLoad(BatchedLoad):
     """MLPerf single-stream: back-to-back batch-1 requests (latency-bound)."""
 
@@ -212,6 +357,10 @@ _GENERATORS: Dict[str, Callable[..., WorkloadGenerator]] = {
     "server": PoissonLoad,
     # shared-prefix request mixes (system prompts / few-shot templates)
     "shared_prefix": SharedPrefixLoad,
+    # overload / multi-tenant arrival processes
+    "bursty": BurstyLoad,
+    "diurnal": DiurnalLoad,
+    "multi_tenant": MultiTenantLoad,
 }
 
 

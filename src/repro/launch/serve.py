@@ -47,16 +47,86 @@ from ..core.analysis import (
     page_occupancy_section,
     prefill_saturation_section,
     prefix_cache_section,
+    slo_section,
     spec_decode_section,
     tp_section,
 )
 from ..core.evaldb import EvalDB, EvaluationRecord
 from ..core.manifest import EngineKnobs
 from ..core.tracing import Tracer, TracingServer
-from ..core.workload import PoissonLoad, SharedPrefixLoad, shared_prefix_prompts
+from ..core.workload import (
+    MultiTenantLoad,
+    PoissonLoad,
+    SharedPrefixLoad,
+    shared_prefix_prompts,
+)
 from ..models import build_model
 from ..serve.engine import ServeRequest, ServingEngine
-from ..serve.scheduler import RequestScheduler, SchedulerConfig
+from ..serve.scheduler import (
+    PRIORITY_TIERS,
+    RequestScheduler,
+    SchedulerConfig,
+    TenantSpec,
+)
+
+
+def _parse_tenants(s: str):
+    """Parse ``--tenants``: semicolon-separated tenants, each
+    ``name[,key=value...]`` with keys ``prio`` (tier index or name),
+    ``weight``, ``rate`` (bucket refill tokens/s), ``burst`` (bucket
+    depth), ``hz`` (arrival rate), ``slo`` (ms), ``prompt``/``gen``
+    (token shape).  Example::
+
+        --tenants "prem,prio=2,weight=2,hz=20;best,prio=0,rate=400,burst=120"
+    """
+    out = []
+    for chunk in s.split(";"):
+        chunk = chunk.strip()
+        if not chunk:
+            continue
+        parts = [p.strip() for p in chunk.split(",")]
+        t = {"name": parts[0]}
+        for kv in parts[1:]:
+            k, _, v = kv.partition("=")
+            k = k.strip()
+            v = v.strip()
+            field, conv = _TENANT_KEYS.get(k, (None, None))
+            if field is None:
+                raise ValueError(f"unknown tenant key {k!r} in {chunk!r}")
+            try:
+                t[field] = conv(v)
+            except ValueError:
+                raise ValueError(
+                    f"bad tenant value {k}={v!r} in {chunk!r}") from None
+        out.append(t)
+    return out
+
+
+def _parse_priority(v: str) -> int:
+    return PRIORITY_TIERS.index(v) if v in PRIORITY_TIERS else int(v)
+
+
+_TENANT_KEYS = {
+    "prio": ("priority", _parse_priority),
+    "priority": ("priority", _parse_priority),
+    "weight": ("weight", float),
+    "rate": ("rate_tokens_per_s", float),
+    "burst": ("burst_tokens", float),
+    "hz": ("rate_hz", float),
+    "slo": ("slo_ms", float),
+    "prompt": ("prompt_len", int),
+    "gen": ("gen_tokens", int),
+}
+
+
+def _parse_priority_mix(s: str):
+    """Parse ``--priority-mix``: ``tier=frac`` pairs, e.g.
+    ``best_effort=0.25,standard=0.5,premium=0.25``."""
+    out = {}
+    for kv in s.split(","):
+        k, _, v = kv.partition("=")
+        out[k.strip()] = float(v)
+    return out
 
 
 def _serve_static(engine, cfg, args, load, prompts):
@@ -135,12 +205,24 @@ def _serve_continuous(engine, cfg, args, load, prompts):
     return summary, stats.total_tokens, stats.wall_s
 
 
+def _tagged_requests(args, load, prompts):
+    """Build engine requests carrying each workload request's tenant tags."""
+    reqs = []
+    for i, (req, p) in enumerate(zip(load, prompts)):
+        tags = getattr(req, "tags", None) or {}
+        reqs.append(ServeRequest(
+            request_id=i, prompt=p, max_new_tokens=args.max_new_tokens,
+            tenant=str(tags.get("tenant", "default")),
+            priority=int(tags.get("priority", 1)),
+            slo_ms=float(tags.get("slo_ms", 0.0) or args.slo_ms),
+        ))
+    return reqs
+
+
 def _serve_paged(engine, cfg, args, load, prompts):
     """Offline paged-KV continuous batching with chunked prefill."""
-    reqs = [
-        ServeRequest(request_id=i, prompt=p, max_new_tokens=args.max_new_tokens)
-        for i, p in enumerate(prompts)
-    ]
+    reqs = _tagged_requests(args, load, prompts)
+    tenant_dicts = _parse_tenants(args.tenants) if args.tenants else []
     server = TracingServer()
     tracer = Tracer("serve-paged", server)
     stats = engine.serve_paged(
@@ -155,9 +237,15 @@ def _serve_paged(engine, cfg, args, load, prompts):
         spec_k=args.spec_k,
         spec_ngram=args.spec_ngram,
         prefix_cache=args.prefix_cache == "on",
+        deadline_ms=args.deadline_ms,
+        tenants=[TenantSpec.from_dict(t) for t in tenant_dicts] or None,
+        fairness=args.fairness == "on",
         tracer=tracer,
     )
     for r in stats.results:
+        if r.status != "completed":
+            print(f"[serve] req {r.request_id}: {r.status} ({r.reason})")
+            continue
         print(
             f"[serve] req {r.request_id}: slot {r.slot} "
             f"(admitted step {r.admit_step}), ttft {r.ttft_s*1e3:.1f} ms, "
@@ -188,14 +276,24 @@ def _serve_paged(engine, cfg, args, load, prompts):
         print("[serve] tensor-parallel collectives:")
         for line in section.splitlines():
             print(f"[serve]   {line}")
-    latencies = [r.latency_s for r in stats.results]
+    section = slo_section(server.timeline("serve-paged"))
+    if section:
+        print("[serve] multi-tenant SLO:")
+        for line in section.splitlines():
+            print(f"[serve]   {line}")
+    done = [r for r in stats.results if r.status == "completed"]
+    latencies = [r.latency_s for r in done]
     summary = latency_summary(latencies) if latencies else {}
     summary.update(
         {
             "tokens_per_s": stats.throughput_tps,
             "ttft_mean_ms": float(
-                np.mean([r.ttft_s for r in stats.results]) * 1e3
-            ),
+                np.mean([r.ttft_s for r in done]) * 1e3
+            ) if done else 0.0,
+            "completed": float(stats.completed),
+            "rejected": float(stats.rejected),
+            "deferred": float(stats.deferred),
+            "goodput": stats.goodput,
             "mean_slot_occupancy": stats.mean_slot_occupancy,
             "peak_slot_occupancy": float(stats.peak_slot_occupancy),
             "decode_steps": stats.steps,
@@ -235,10 +333,8 @@ def _serve_fleet(engines, cfg, args, load, prompts):
     from ..serve.faults import FaultPlan
     from ..serve.fleet import FleetConfig, FleetRouter
 
-    reqs = [
-        ServeRequest(request_id=i, prompt=p, max_new_tokens=args.max_new_tokens)
-        for i, p in enumerate(prompts)
-    ]
+    reqs = _tagged_requests(args, load, prompts)
+    tenant_dicts = _parse_tenants(args.tenants) if args.tenants else []
     server = TracingServer()
     tracer = Tracer("serve-fleet", server)
     plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else FaultPlan()
@@ -250,7 +346,9 @@ def _serve_fleet(engines, cfg, args, load, prompts):
             deadline_s=args.deadline_ms / 1e3,
             max_retries=args.retries,
             lease_ttl_s=args.lease_ttl_s,
+            fairness=args.fairness == "on",
         ),
+        tenants=[TenantSpec.from_dict(t) for t in tenant_dicts],
         engine_kwargs=dict(
             num_slots=args.engine_batch,
             page_size=args.page_size,
@@ -374,8 +472,30 @@ def main(argv=None) -> int:
                          "the FleetRouter (load balancing, requeue-on-death, "
                          "graceful degradation; 0 = single engine)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
-                    help="fleet per-request TTL from submit; a request past "
-                         "its deadline fails with attribution (0 = none)")
+                    help="per-request TTL from submit (fleet AND single-"
+                         "engine paged): late completions fall out of "
+                         "goodput, work expired before execution is "
+                         "rejected with attribution (0 = none)")
+    ap.add_argument("--tenants", default="",
+                    help="multi-tenant serving mix: semicolon-separated "
+                         "'name[,prio=T][,weight=W][,rate=TOK/S][,burst=TOK]"
+                         "[,hz=QPS][,slo=MS][,prompt=N][,gen=N]' entries; "
+                         "rate/burst arm a per-tenant token bucket, prio "
+                         "picks the tier (0=best_effort 1=standard "
+                         "2=premium), weight the fair share "
+                         "(requires --engine paged)")
+    ap.add_argument("--priority-mix", default="",
+                    help="tier fractions for a single-tenant load, e.g. "
+                         "'best_effort=0.25,standard=0.5,premium=0.25' "
+                         "(ignored when --tenants is set)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request latency SLO for goodput accounting "
+                         "and SLO-aware admission shedding (0 = none; "
+                         "distinct from --deadline-ms, which is a hard TTL)")
+    ap.add_argument("--fairness", default="on", choices=["on", "off"],
+                    help="tenant-fair scheduling (token buckets + priority "
+                         "tiers + weighted fair dequeue); off = pure FIFO "
+                         "baseline for A/B comparison")
     ap.add_argument("--retries", type=int, default=2,
                     help="fleet requeues per request after a worker death "
                          "before the request is failed")
@@ -415,6 +535,19 @@ def main(argv=None) -> int:
     if args.fleet > 0 and args.engine != "paged":
         ap.error("--fleet requires --engine paged (the fleet routes over "
                  "paged workers)")
+    if args.tenants and args.engine != "paged":
+        ap.error("--tenants requires --engine paged (tenant-aware admission "
+                 "lives in the paged engine and the fleet router)")
+    if args.tenants:
+        try:
+            _parse_tenants(args.tenants)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.priority_mix:
+        try:
+            _parse_priority_mix(args.priority_mix)
+        except ValueError as e:
+            ap.error(f"bad --priority-mix {args.priority_mix!r}: {e}")
 
     def make_engine():
         return ServingEngine(
@@ -440,7 +573,26 @@ def main(argv=None) -> int:
               f"effective tp={engine.tp} "
               f"({'heads split' if engine.tp > 1 else 'replication fallback'})")
     rng = np.random.default_rng(0)
-    if args.prefix_len > 0:
+    if args.tenants:
+        # multi-tenant mix: superposed per-tenant Poisson streams carrying
+        # tenant identity / tier / SLO / token shape in each request's tags
+        tenant_dicts = _parse_tenants(args.tenants)
+        for t in tenant_dicts:
+            t.setdefault("rate_hz", args.rate_hz / len(tenant_dicts))
+            t.setdefault("slo_ms", args.slo_ms)
+            t.setdefault("prompt_len", args.prompt_len)
+            t.setdefault("gen_tokens", args.max_new_tokens)
+        load = list(
+            MultiTenantLoad(args.requests, tenant_dicts, seed=0).requests()
+        )
+        prompts = [
+            rng.integers(
+                0, cfg.vocab_size,
+                (int(r.tags.get("prompt_len") or args.prompt_len),),
+            ).astype(np.int32)
+            for r in load
+        ]
+    elif args.prefix_len > 0:
         # shared-prefix serving mix: same-group prompts share their first
         # prefix_len tokens bit-for-bit — the workload the prefix cache eats
         load = list(
@@ -459,6 +611,18 @@ def main(argv=None) -> int:
             rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
             for _ in load
         ]
+
+    if args.priority_mix and not args.tenants:
+        # stamp tiers onto a single-tenant load by fraction (seeded draw)
+        import random as _random
+
+        mix = _parse_priority_mix(args.priority_mix)
+        tiers = [PRIORITY_TIERS.index(k) if k in PRIORITY_TIERS else int(k)
+                 for k in mix]
+        weights = [float(v) for v in mix.values()]
+        mrng = _random.Random(0)
+        for r in load:
+            r.tags["priority"] = mrng.choices(tiers, weights)[0]
 
     if args.fleet > 0:
         # workers share model+params (weights are read-only under serving);

@@ -64,7 +64,10 @@ from ..sharding.specs import (
 )
 from .faults import FaultContext, WorkerCrash
 from .page_table import PagePool, PageTable, PrefixCache, pages_needed
-from .scheduler import PagedSlotPool, PrefillBudget, SlotPool, SpecLedger
+from .scheduler import (
+    PagedSlotPool, PrefillBudget, SlotPool, SpecLedger, TenantLedger,
+    TenantSpec,
+)
 
 
 def _named_shardings(mesh, pspecs):
@@ -132,6 +135,11 @@ class ServeRequest:
     request_id: int
     prompt: np.ndarray
     max_new_tokens: int
+    # multi-tenant serving: tenant identity, priority tier and latency SLO
+    # (defaults keep single-tenant callers unchanged)
+    tenant: str = "default"
+    priority: int = 1
+    slo_ms: float = 0.0
 
 
 @dataclass
@@ -154,6 +162,14 @@ class RequestResult:
     # -- speculative-decoding ledger (0s when spec_k == 0) ------------------
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # -- terminal status (fleet-parity semantics): every request ends
+    # "completed" or "rejected"; a completed request past the run deadline
+    # stays completed but falls out of goodput (within_deadline=False) ------
+    status: str = "completed"
+    reason: str = ""
+    tenant: str = "default"
+    priority: int = 1
+    within_deadline: bool = True
 
 
 @dataclass
@@ -219,6 +235,12 @@ class PagedStats:
     # -- quantized KV pages -------------------------------------------------
     kv_dtype: str = "float32"   # pool storage mode (int8/fp8 = quantized)
     kv_bytes_per_token: float = 0.0  # pool bytes per token incl. scales
+    # -- SLO / multi-tenant admission ---------------------------------------
+    completed: int = 0          # terminal completed (== len(results) w/o TTL)
+    rejected: int = 0           # terminal rejected (deadline / SLO shed)
+    deferred: int = 0           # tenant-boundary deferrals (bucket ran dry)
+    goodput: float = 1.0        # completed within deadline / submitted
+    deadline_ms: float = 0.0    # run TTL handed to serve_paged (0 = none)
 
 
 class ServingEngine:
@@ -732,6 +754,9 @@ class ServingEngine:
         clock: Callable[[], float] = time.perf_counter,
         tracer=None,
         fault_hook: Optional[Callable] = None,
+        deadline_ms: float = 0.0,
+        tenants: Optional[List[TenantSpec]] = None,
+        fairness: bool = True,
     ) -> PagedStats:
         """Paged-KV continuous batching.
 
@@ -803,6 +828,22 @@ class ServingEngine:
         request not yet finished — replayable from its prompt, exactly the
         preemption-recompute contract), so a router can requeue the
         worker's in-flight work onto survivors with zero silent losses.
+
+        ``deadline_ms > 0`` sets a run TTL (fleet-parity semantics): a
+        request still queued past the deadline is terminally ``rejected``
+        (never silently dropped), and a request that finishes late stays
+        ``completed`` but falls out of ``goodput``.  With a warm decode-rate
+        estimate, admission also sheds queued work whose deadline is
+        already unmeetable given the queue's prompt tokens ahead, the
+        per-boundary prefill budget, and the measured decode tok/s.
+        ``tenants`` registers :class:`~repro.serve.scheduler.TenantSpec`
+        contracts (priority tier, fair-share weight, token bucket charged
+        in prompt+decode tokens); admission then dequeues by priority tier
+        and weighted fair share instead of FIFO (work-conserving: dry
+        tenants are deprioritized, never starved), and preemption evicts
+        the lowest-priority youngest slot first.  ``fairness=False`` keeps
+        strict FIFO admission (the baseline the SLO benchmark compares
+        against).
         """
         if prefill_mode not in ("packed", "chunked"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
@@ -874,6 +915,25 @@ class ServingEngine:
                 ),
             )
         queue = deque(requests)
+        # -- SLO / multi-tenant admission state ---------------------------
+        tenant_ledger = TenantLedger(tenants or ())
+        fair = fairness and (
+            bool(tenants)
+            or any(getattr(r, "tenant", "default") != "default"
+                   or getattr(r, "priority", 1) != 1 for r in requests)
+        )
+
+        def req_cost(r) -> float:
+            # bucket charge: prompt + worst-case decode tokens
+            return float(len(r.prompt) + r.max_new_tokens)
+
+        def req_prio(r) -> int:
+            p = getattr(r, "priority", None)
+            return 1 if p is None else int(p)
+
+        rejected_n = 0
+        deferred_n = 0
+        decode_tokens_emitted = 0
         nxt = np.zeros((num_slots,), np.int32)
         lengths = np.zeros((num_slots,), np.int32)   # live tokens per slot
         slot_tokens: Dict[int, List[int]] = {}
@@ -898,6 +958,7 @@ class ServingEngine:
         finished: Dict[int, RequestResult] = {}
         t_start = clock()
         submit_s = {r.request_id: t_start for r in requests}
+        deadline = t_start + deadline_ms / 1e3 if deadline_ms > 0 else None
         step = 0
         occupancy_sum = 0
         peak_occupancy = 0
@@ -1042,13 +1103,18 @@ class ServingEngine:
             return req
 
         def preempt_one() -> Optional[int]:
-            """Evict the globally youngest request (recompute-style): free
-            its pages and push it back to the queue front.  The youngest may
+            """Evict the lowest-priority youngest request (recompute-style):
+            free its pages and push it back to the queue front.  Within one
+            priority tier this is the globally youngest slot; best-effort
+            work is always evicted before any higher tier.  The victim may
             be the very slot that asked to grow — self-preemption parks it
             back in the queue rather than evicting older work for it."""
             if not admit_order:
                 return None
-            victim = max(admit_order, key=lambda s: admit_order[s])
+            victim = min(
+                admit_order,
+                key=lambda s: (req_prio(slots.active[s]), -admit_order[s]),
+            )
             queue.appendleft(release_slot(victim, preempted=True))
             return victim
 
@@ -1112,6 +1178,81 @@ class ServingEngine:
                 tracer.event("prefix:cow", t0c, clock(), slot=s, page=fresh[0])
             return True
 
+        def emit_tenant(req, status: str, now: float, latency: float) -> None:
+            if tracer is None:
+                return
+            slo = getattr(req, "slo_ms", 0.0) or deadline_ms
+            slo_ok = (status == "completed"
+                      and (slo <= 0 or latency * 1e3 <= slo))
+            tracer.event(
+                "sched:tenant", now, now,
+                tenant=getattr(req, "tenant", "default"),
+                priority=req_prio(req),
+                status=status,
+                latency_s=latency,
+                slo_ms=slo,
+                slo_ok=slo_ok,
+                tokens=req_cost(req),
+            )
+
+        def reject(req, reason: str) -> None:
+            """Terminal ``rejected`` result — fleet parity, never silent."""
+            nonlocal rejected_n
+            now_r = clock()
+            latency = now_r - submit_s[req.request_id]
+            finished[req.request_id] = RequestResult(
+                request_id=req.request_id,
+                tokens=np.zeros((0,), np.int32),
+                slot=-1,
+                admit_step=-1,
+                finish_step=step,
+                ttft_s=0.0,
+                latency_s=latency,
+                tokens_per_s=0.0,
+                status="rejected",
+                reason=reason,
+                tenant=getattr(req, "tenant", "default"),
+                priority=req_prio(req),
+                within_deadline=False,
+            )
+            rejected_n += 1
+            emit_tenant(req, "rejected", now_r, latency)
+
+        def unmeetable(req, queued_prompt_ahead: int, now: float) -> bool:
+            """SLO-aware admission estimate: the queue's prompt tokens ahead
+            flow through the per-boundary prefill budget, then the request
+            decodes at the measured per-slot tok/s — shed it when even that
+            optimistic finish lands past the deadline."""
+            if deadline is None or step == 0 or decode_s <= 0:
+                return False
+            decode_tps = decode_tokens_emitted / decode_s
+            if decode_tps <= 0:
+                return False
+            boundary_s = (prefill_s + decode_s) / step
+            prefill_wait = (
+                (queued_prompt_ahead + len(req.prompt)) / t_pack * boundary_s
+                if packed else 0.0
+            )
+            per_slot_tps = decode_tps / max(1, slots.num_active)
+            est_finish = now + prefill_wait + req.max_new_tokens / per_slot_tps
+            return est_finish > deadline
+
+        def pick_admission(now: float) -> int:
+            """Index of the next admission candidate: priority tier first,
+            then weighted fair share across tenants (dry buckets sink the
+            tenant — work-conserving rate limiting), then FIFO order."""
+            if not fair or len(queue) == 1:
+                return 0
+            best, best_key = 0, None
+            for i, r in enumerate(queue):
+                tname = getattr(r, "tenant", "default")
+                dry = 1 if tenant_ledger.dry(tname, req_cost(r), now) else 0
+                key = (dry, -req_prio(r),
+                       tenant_ledger.vtime.get(tname, 0.0), i)
+                if best_key is None or key < best_key:
+                    best, best_key = i, key
+            return best
+
         while queue or slots.num_active:
             progressed = False
             # 0) boundary fault/heartbeat hook.  WorkerCrash can only be
@@ -1145,6 +1286,7 @@ class ServingEngine:
                     ]
                     itl_all.extend(itls)
                     prop, acc = ledger.of(req.request_id) if ledger else (0, 0)
+                    latency = now - submit_s[req.request_id]
                     finished[req.request_id] = RequestResult(
                         request_id=req.request_id,
                         tokens=np.asarray(slot_tokens[slot], np.int32),
@@ -1152,16 +1294,22 @@ class ServingEngine:
                         admit_step=req._admit_step,  # type: ignore[attr-defined]
                         finish_step=step,
                         ttft_s=req._ttft_s,          # type: ignore[attr-defined]
-                        latency_s=now - submit_s[req.request_id],
+                        latency_s=latency,
                         tokens_per_s=(
-                            req.max_new_tokens / (now - submit_s[req.request_id])
+                            req.max_new_tokens / latency
                             if now > submit_s[req.request_id] else float("inf")
                         ),
                         itl_p50_s=percentile(itls, 50.0) if itls else 0.0,
                         itl_p99_s=percentile(itls, 99.0) if itls else 0.0,
                         draft_proposed=prop,
                         draft_accepted=acc,
+                        tenant=getattr(req, "tenant", "default"),
+                        priority=req_prio(req),
+                        # late completions stay completed but fall out of
+                        # goodput — the fleet's within_deadline semantics
+                        within_deadline=deadline is None or now <= deadline,
                     )
+                    emit_tenant(req, "completed", now, latency)
                     release_slot(slot)
                     progressed = True
             # 2) admission keyed on free pages: a request enters only when a
@@ -1173,8 +1321,25 @@ class ServingEngine:
             #    counts each shared page ONCE globally (plus one COW page
             #    for a full hit), and cached-unreferenced pages are evicted
             #    on demand before admission gives up
+            if deadline is not None and queue and clock() > deadline:
+                # TTL passed while still queued: terminal rejected (fleet
+                # parity) — expired work leaves the queue, it never runs
+                while queue:
+                    reject(queue.popleft(), "deadline")
+                progressed = True
             while queue:
-                req0 = queue[0]
+                now_adm = clock()
+                idx0 = pick_admission(now_adm)
+                req0 = queue[idx0]
+                if unmeetable(
+                    req0,
+                    sum(len(r.prompt) for r in queue) - len(req0.prompt),
+                    now_adm,
+                ):
+                    del queue[idx0]
+                    reject(req0, "slo-unmeetable")
+                    progressed = True
+                    continue
                 hit_pages: List[int] = []
                 cached = 0
                 if pcache is not None:
@@ -1205,7 +1370,13 @@ class ServingEngine:
                     if hit_pages:
                         pool.free(hit_pages)
                     break
-                req = queue.popleft()
+                req = req0
+                del queue[idx0]
+                if fair:
+                    tenant_ledger.on_admit(
+                        getattr(req, "tenant", "default"), req_cost(req),
+                        now_adm,
+                    )
                 if pcache is not None:
                     pcache.record(len(req.prompt), hit_pages)
                 slot, pages = slots.admit_paged(req, npages, step=step)
@@ -1250,6 +1421,21 @@ class ServingEngine:
                         hit_pages=len(hit_pages), full_hit=int(full_hit),
                     )
                 progressed = True
+            if fair and queue:
+                # tenants whose arrived work was passed over because their
+                # bucket ran dry: one deferral per tenant per boundary
+                now_d = clock()
+                seen_dry: set = set()
+                for r in queue:
+                    tname = getattr(r, "tenant", "default")
+                    if tname not in seen_dry and tenant_ledger.dry(
+                            tname, req_cost(r), now_d):
+                        seen_dry.add(tname)
+                        tenant_ledger.note_defer(tname)
+                        deferred_n += 1
+                        if tracer is not None:
+                            tracer.event("sched:defer", now_d, now_d,
+                                         tenant=tname)
             # 3) prefill at the boundary, interleaved with decode.
             #    packed: coalesce every prefilling slot's next span into ONE
             #    token-packed varlen launch (oldest first, capped by the
@@ -1535,6 +1721,7 @@ class ServingEngine:
                     slot_tokens[s].extend(int(t) for t in emitted)
                     nxt[s] = int(emitted[-1])
                     lengths[s] += a + 1
+                    decode_tokens_emitted += a + 1
                     slot_times[s].extend([now] * (a + 1))
                     if s in replay_first:
                         # full cache hit: the first token came from this
@@ -1581,6 +1768,11 @@ class ServingEngine:
         wall = clock() - t_start
         results = [finished[r.request_id] for r in requests]
         total_tokens = sum(len(r.tokens) for r in results)
+        completed_n = sum(1 for r in results if r.status == "completed")
+        in_goodput = sum(
+            1 for r in results
+            if r.status == "completed" and r.within_deadline
+        )
         return PagedStats(
             results=results,
             steps=step,
@@ -1621,4 +1813,9 @@ class ServingEngine:
                 sum(v.nbytes for v in cache.values())
                 / (num_pages * page_size)
             ),
+            completed=completed_n,
+            rejected=rejected_n,
+            deferred=deferred_n,
+            goodput=in_goodput / len(results) if results else 1.0,
+            deadline_ms=deadline_ms,
         )

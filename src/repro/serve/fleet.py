@@ -23,7 +23,14 @@ instances, each with its own page pool — behind one admission queue:
 * **graceful degradation** — a :class:`DegradeLadder` steps through
   pressure levels with hysteresis: first disable spec decode, then shrink
   the prefill budget, then shed new admissions with an explicit
-  ``rejected`` status.
+  ``rejected`` status.  Shedding is priority-aware: only the lowest tier
+  present among the shed candidates is dropped each round, so best-effort
+  work absorbs the overload before any higher tier loses a request;
+* **tenant fairness** — with per-request ``tenant``/``priority`` tags
+  (and optional :class:`~repro.serve.scheduler.TenantSpec` token buckets)
+  the per-round packing order follows the same policy as the scheduler:
+  bucket-dry tenants sink, higher tiers first, then weighted fair share
+  by admitted tokens.  Untagged workloads keep exact FIFO packing.
 
 Every submitted request ends in exactly one attributed terminal status —
 ``completed``, ``failed`` (with a reason) or ``rejected`` — zero silent
@@ -42,7 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from ..core.registry import KVStore
 from .faults import FaultPlan, WorkerCrash
 from .page_table import pages_needed
-from .scheduler import backoff_delay
+from .scheduler import TenantLedger, TenantSpec, backoff_delay
 
 __all__ = [
     "DEGRADE_LEVELS",
@@ -119,6 +126,7 @@ class FleetConfig:
     lease_ttl_s: float = 30.0      # worker heartbeat lease TTL
     high_watermark: float = 0.85   # pressure above -> degrade one level
     low_watermark: float = 0.60    # pressure below -> recover one level
+    fairness: bool = True          # tenant-fair packing order (off: FIFO)
     parallel: bool = False         # threads per round (else deterministic
     #                                sequential rounds — same commits/tokens)
     hedge: bool = True             # parallel mode: detach a lease-expired
@@ -231,6 +239,7 @@ class FleetRouter:
         clock: Callable[[], float] = time.perf_counter,
         sleep: Callable[[float], None] = time.sleep,
         tracer: Any = None,
+        tenants: Sequence[TenantSpec] = (),
     ) -> None:
         if not engines:
             raise ValueError("need at least one engine")
@@ -254,6 +263,8 @@ class FleetRouter:
             self.config.high_watermark, self.config.low_watermark,
             tracer=tracer, clock=clock,
         )
+        self.tenant_ledger = TenantLedger(tenants)
+        self._has_tenants = bool(tenants)
         # detached stragglers (parallel mode): worker index -> holder dict
         # with the still-running thread and, once done, its outcome
         self._inflight: Dict[int, Dict[str, Any]] = {}
@@ -350,16 +361,52 @@ class FleetRouter:
         return n
 
     # -- dispatch ------------------------------------------------------------
-    def _balance(self, ready: List[_Tracked],
-                 alive: List[_Worker]) -> Dict[int, List[_Tracked]]:
-        """Pack ready requests (FIFO) onto alive workers by free worst-case
-        page budget + assigned queue depth; a request that fits no worker
-        this round waits for the next one."""
+    @staticmethod
+    def _req_tenant(t: _Tracked) -> str:
+        return getattr(t.req, "tenant", "default")
+
+    @staticmethod
+    def _req_prio(t: _Tracked) -> int:
+        return int(getattr(t.req, "priority", 1))
+
+    @staticmethod
+    def _req_cost(t: _Tracked) -> float:
+        return float(len(t.req.prompt) + t.req.max_new_tokens)
+
+    def _fair_order(self, ready: List[_Tracked],
+                    now: float) -> List[_Tracked]:
+        """Packing order: the scheduler's dequeue policy applied per round —
+        bucket-dry tenants last, then priority tier, then weighted fair
+        share (per-tenant virtual time), then submission order.  Untagged
+        workloads (single default tenant, uniform priority, no buckets)
+        reduce to the identity: exact FIFO, byte-for-byte the old order."""
+        if not self.config.fairness:
+            return ready
+        if not self._has_tenants and all(
+            self._req_tenant(t) == "default" and self._req_prio(t) == 1
+            for t in ready
+        ):
+            return ready
+        led = self.tenant_ledger
+
+        def key(pair: Tuple[int, _Tracked]):
+            i, t = pair
+            name = self._req_tenant(t)
+            return (led.dry(name, self._req_cost(t), now),
+                    -self._req_prio(t), led.vtime.get(name, 0.0), i)
+
+        return [t for _, t in sorted(enumerate(ready), key=key)]
+
+    def _balance(self, ready: List[_Tracked], alive: List[_Worker],
+                 now: float = 0.0) -> Dict[int, List[_Tracked]]:
+        """Pack ready requests (fair order; FIFO when untagged) onto alive
+        workers by free worst-case page budget + assigned queue depth; a
+        request that fits no worker this round waits for the next one."""
         load = {w.index: 0 for w in alive}       # assigned worst-case pages
         count = {w.index: 0 for w in alive}      # assigned queue depth
         out: Dict[int, List[_Tracked]] = {w.index: [] for w in alive}
         by_index = {w.index: w for w in alive}
-        for t in ready:
+        for t in self._fair_order(ready, now):
             best = None
             best_score = None
             for i, w in by_index.items():
@@ -375,6 +422,13 @@ class FleetRouter:
             out[best].append(t)
             load[best] += t.worst_pages
             count[best] += 1
+            if self.config.fairness and (
+                self._has_tenants or self._req_tenant(t) != "default"
+                or self._req_prio(t) != 1
+            ):
+                self.tenant_ledger.on_admit(
+                    self._req_tenant(t), self._req_cost(t), now
+                )
         return {i: ts for i, ts in out.items() if ts}
 
     def _degraded_kwargs(self) -> Dict[str, Any]:
@@ -493,14 +547,25 @@ class FleetRouter:
                 continue
             # 4) pack ready work onto workers; at the shed level, ready
             #    requests that did not fit this round AND were never
-            #    dispatched before are rejected (shed), not queued forever
-            assignment = self._balance(ready, alive)
+            #    dispatched before are rejected (shed), not queued forever.
+            #    Shedding is priority-aware: only the lowest tier present
+            #    among the candidates drops this round, so best-effort
+            #    work absorbs overload before any higher tier is touched
+            #    (liveness holds — a surviving tier becomes the lowest
+            #    present next round and sheds then if still unplaceable)
+            assignment = self._balance(ready, alive, now)
             assigned = {t.req.request_id
                         for ts in assignment.values() for t in ts}
             if level >= 3:
-                for t in ready:
-                    if t.req.request_id not in assigned and not t.dispatched:
-                        self._fail(t, "shed", now, status="rejected")
+                victims = [t for t in ready
+                           if t.req.request_id not in assigned
+                           and not t.dispatched]
+                if victims:
+                    floor = min(self._req_prio(t) for t in victims)
+                    for t in victims:
+                        if self._req_prio(t) == floor:
+                            self.tenant_ledger.note_shed(self._req_tenant(t))
+                            self._fail(t, "shed", now, status="rejected")
             if not assignment:
                 # every candidate exceeded the per-round bounds (can only
                 # happen transiently while stragglers hold workers busy)
@@ -563,6 +628,21 @@ class FleetRouter:
         return stats
 
     # -- outcome folding -----------------------------------------------------
+    def _fold_result(self, rr: Any, worker: int, tnow: float) -> None:
+        """Fold one engine-level result into router state.  Completed
+        results commit (idempotently); an engine that itself rejected a
+        request (its own deadline/SLO shed) propagates that terminal
+        status instead of being mistaken for a commit."""
+        t = self._by_id[rr.request_id]
+        status = getattr(rr, "status", "completed")
+        if status == "completed":
+            self._commit(t, rr.tokens, worker, tnow)
+        else:
+            reason = getattr(rr, "reason", "") or status
+            self._fail(t, reason, tnow,
+                       status="rejected" if status == "rejected"
+                       else "failed")
+
     def _process_outcomes(self, outcomes: Dict[int, Tuple[str, Any]],
                           stats: FleetStats) -> None:
         for i, (kind, payload) in sorted(outcomes.items()):
@@ -570,8 +650,7 @@ class FleetRouter:
             tnow = self.clock()
             if kind == "ok":
                 for rr in payload.results:
-                    self._commit(self._by_id[rr.request_id], rr.tokens, i,
-                                 tnow)
+                    self._fold_result(rr, i, tnow)
                 w.served += len(payload.results)
                 # a worker that returned cleanly is demonstrably responsive:
                 # refresh its lease (a detached straggler's lease lapsed,
@@ -584,8 +663,7 @@ class FleetRouter:
                 w.deaths += 1
                 stats.deaths += 1
                 for rr in crash.results:
-                    self._commit(self._by_id[rr.request_id], rr.tokens, i,
-                                 tnow)
+                    self._fold_result(rr, i, tnow)
                 w.served += len(crash.results)
                 orphans = [self._by_id[r.request_id] for r in crash.pending]
                 orphans = [t for t in orphans if not t.terminal]

@@ -1,12 +1,26 @@
 """Continuous-batching request scheduler (the shared serving hot path).
 
 Every benchmarking scenario and the serving engine issue work through one
-asynchronous :class:`RequestScheduler`: a bounded FIFO request queue with
+asynchronous :class:`RequestScheduler`: a bounded request queue with
 dynamic micro-batching (coalesce up to ``max_batch`` requests that arrive
 within a ``batch_timeout_ms`` admission window) and per-request completion
 futures.  This is the layer the paper's cloud-serving scenarios exercise —
 queueing, batching and admission effects all happen here, not inside the
 model executor.
+
+Dequeue order is SLO- and tenant-aware rather than strictly FIFO: every
+request carries a ``tenant``/``priority``/``slo_ms`` triple, tenants are
+rate-limited by token buckets (refill rate + burst, charged in
+prompt+decode tokens), and batch formation picks work by priority tier
+first, then weighted fair share across tenants (start-time virtual
+clocks), then arrival order.  Selection is *work-conserving*: a tenant
+that has drained its bucket is deprioritized, never starved, so the
+scheduler keeps serving when only over-budget work is queued.  Requests
+whose SLO is already unmeetable (estimated from queue depth and the
+measured batch service rate) are shed with a terminal ``rejected`` status
+instead of wasting capacity — every request still reaches exactly one
+terminal status.  With a single default tenant the policy degenerates to
+the original FIFO order, byte for byte.
 
 Two drive modes share the same batch-formation logic:
 
@@ -38,6 +52,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 __all__ = [
     "CompletionFuture",
     "DeadlineExceeded",
+    "PRIORITY_TIERS",
     "PagedSlotPool",
     "PrefillBudget",
     "RequestScheduler",
@@ -47,8 +62,14 @@ __all__ = [
     "SchedulerQueueFull",
     "SlotPool",
     "SpecLedger",
+    "TenantLedger",
+    "TenantSpec",
+    "TokenBucket",
     "backoff_delay",
 ]
+
+# priority tiers, lowest first: tier 0 is shed first and preempted first
+PRIORITY_TIERS = ("best_effort", "standard", "premium")
 
 
 class SchedulerQueueFull(RuntimeError):
@@ -82,6 +103,182 @@ def backoff_delay(attempt: int, base_s: float, cap_s: float,
 
 
 @dataclass
+class TenantSpec:
+    """One tenant's contract: priority tier, fair-share weight, and an
+    optional token-bucket rate limit (charged in prompt+decode tokens).
+
+    ``burst_tokens`` is the bucket capacity; 0 defaults to one second of
+    refill.  ``slo_ms`` is the tenant's default latency SLO, applied to
+    submissions that do not override it.
+    """
+
+    name: str
+    priority: int = 1                 # index into PRIORITY_TIERS (higher wins)
+    weight: float = 1.0               # fair-share weight within the tier
+    rate_tokens_per_s: float = 0.0    # bucket refill rate (0 = unlimited)
+    burst_tokens: float = 0.0         # bucket capacity (0 = 1s of refill)
+    slo_ms: float = 0.0               # default per-request SLO (0 = none)
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("tenant name must be non-empty")
+        if self.weight <= 0:
+            raise ValueError("tenant weight must be > 0")
+        if self.priority < 0:
+            raise ValueError("tenant priority must be >= 0")
+        if self.rate_tokens_per_s < 0 or self.burst_tokens < 0:
+            raise ValueError("tenant rate/burst must be >= 0")
+
+    @property
+    def tier(self) -> str:
+        return PRIORITY_TIERS[min(self.priority, len(PRIORITY_TIERS) - 1)]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "priority": self.priority,
+            "weight": self.weight,
+            "rate_tokens_per_s": self.rate_tokens_per_s,
+            "burst_tokens": self.burst_tokens,
+            "slo_ms": self.slo_ms,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TenantSpec":
+        return cls(**{k: v for k, v in d.items() if k in cls.__dataclass_fields__})
+
+
+class TokenBucket:
+    """Classic token bucket, driven by caller-supplied clock readings so an
+    injected fake clock yields deterministic admission decisions.
+
+    Charges clamp at zero (leaky, work-conserving): a tenant served while
+    over budget does not accumulate unbounded debt, it just stays *dry*
+    (``available < cost``) until the refill catches up with its demand.
+    """
+
+    def __init__(self, rate_per_s: float, burst: float) -> None:
+        if rate_per_s <= 0 or burst <= 0:
+            raise ValueError("token bucket needs rate > 0 and burst > 0")
+        self.rate = float(rate_per_s)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._last: Optional[float] = None
+        self.charged_total = 0.0
+
+    def _refill(self, now: float) -> None:
+        if self._last is not None and now > self._last:
+            self.tokens = min(self.burst, self.tokens + (now - self._last) * self.rate)
+        self._last = now if self._last is None else max(self._last, now)
+
+    def available(self, now: float) -> float:
+        self._refill(now)
+        return self.tokens
+
+    def dry(self, cost: float, now: float) -> bool:
+        return self.available(now) < cost
+
+    def charge(self, cost: float, now: float) -> None:
+        """Deduct ``cost`` tokens (floored at zero — see class docstring)."""
+        self._refill(now)
+        self.tokens = max(0.0, self.tokens - cost)
+        self.charged_total += cost
+
+    def time_until(self, cost: float, now: float) -> float:
+        """Seconds until ``cost`` tokens will be available (0 if already)."""
+        have = self.available(now)
+        if have >= cost:
+            return 0.0
+        return (min(cost, self.burst) - have) / self.rate
+
+
+class TenantLedger:
+    """Per-tenant admission state: token buckets, fair-share virtual
+    clocks, and the shed/defer audit counters.
+
+    Fair dequeue is start-time weighted fair queuing: each admission
+    advances the tenant's virtual time by ``cost/weight``; the scheduler
+    picks the queued request with the smallest ``(dry, -priority, vtime)``
+    key, so rate limits bind first, then tiers, then fair share.  A tenant
+    returning from idle resumes at the ledger's current virtual time — no
+    banked backlog advantage.
+    """
+
+    def __init__(self, specs: Sequence[TenantSpec] = ()) -> None:
+        self.specs: Dict[str, TenantSpec] = {}
+        self.buckets: Dict[str, TokenBucket] = {}
+        self.vtime: Dict[str, float] = {}
+        self.admitted: Dict[str, int] = {}
+        self.tokens_admitted: Dict[str, float] = {}
+        self.shed: Dict[str, int] = {}
+        self.deferred: Dict[str, int] = {}
+        self._vnow = 0.0
+        for spec in specs:
+            self.register(spec)
+
+    def register(self, spec: TenantSpec) -> TenantSpec:
+        self.specs[spec.name] = spec
+        if spec.rate_tokens_per_s > 0:
+            burst = spec.burst_tokens or spec.rate_tokens_per_s
+            self.buckets[spec.name] = TokenBucket(spec.rate_tokens_per_s, burst)
+        for ledger in (self.admitted, self.shed, self.deferred):
+            ledger.setdefault(spec.name, 0)
+        self.tokens_admitted.setdefault(spec.name, 0.0)
+        self.vtime.setdefault(spec.name, self._vnow)
+        return spec
+
+    def spec_of(self, name: str) -> TenantSpec:
+        """The tenant's spec, auto-registering an unlimited default one."""
+        spec = self.specs.get(name)
+        if spec is None:
+            spec = self.register(TenantSpec(name=name))
+        return spec
+
+    def dry(self, name: str, cost: float, now: float) -> bool:
+        bucket = self.buckets.get(name)
+        return bucket is not None and bucket.dry(cost, now)
+
+    def refill_in(self, name: str, cost: float, now: float) -> float:
+        bucket = self.buckets.get(name)
+        return 0.0 if bucket is None else bucket.time_until(cost, now)
+
+    def on_admit(self, name: str, cost: float, now: float) -> None:
+        """Charge the bucket and advance the fair-share virtual clock."""
+        spec = self.spec_of(name)
+        bucket = self.buckets.get(name)
+        if bucket is not None:
+            bucket.charge(cost, now)
+        base = max(self.vtime.get(name, 0.0), self._vnow)
+        self.vtime[name] = base + cost / spec.weight
+        self._vnow = base
+        self.admitted[name] = self.admitted.get(name, 0) + 1
+        self.tokens_admitted[name] = self.tokens_admitted.get(name, 0.0) + cost
+
+    def note_shed(self, name: str) -> None:
+        self.spec_of(name)
+        self.shed[name] = self.shed.get(name, 0) + 1
+
+    def note_defer(self, name: str) -> None:
+        self.spec_of(name)
+        self.deferred[name] = self.deferred.get(name, 0) + 1
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for name, spec in self.specs.items():
+            bucket = self.buckets.get(name)
+            out[name] = {
+                "priority": float(spec.priority),
+                "weight": float(spec.weight),
+                "admitted": float(self.admitted.get(name, 0)),
+                "tokens_admitted": float(self.tokens_admitted.get(name, 0.0)),
+                "shed": float(self.shed.get(name, 0)),
+                "deferred": float(self.deferred.get(name, 0)),
+                "bucket_charged": bucket.charged_total if bucket else 0.0,
+            }
+        return out
+
+
+@dataclass
 class SchedulerConfig:
     """Knobs for the request scheduler (part of the user input; the server
     threads this through dispatch so an evaluation can select the
@@ -104,6 +301,8 @@ class SchedulerConfig:
     backoff_cap_ms: float = 1000.0 # retry backoff: cap
     backoff_jitter: float = 0.0    # retry backoff: ±fraction (0 = none)
     retry_seed: int = 0            # jitter RNG seed (determinism)
+    fairness: bool = True          # tier + weighted-fair dequeue (off = FIFO)
+    slo_shed: bool = True          # shed work whose SLO is already unmeetable
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -124,6 +323,8 @@ class SchedulerConfig:
             "backoff_cap_ms": self.backoff_cap_ms,
             "backoff_jitter": self.backoff_jitter,
             "retry_seed": self.retry_seed,
+            "fairness": self.fairness,
+            "slo_shed": self.slo_shed,
         }
 
     @classmethod
@@ -148,7 +349,11 @@ class ScheduledRequest:
     end_s: float = 0.0          # micro-batch execution end
     deadline_s: Optional[float] = None  # absolute clock deadline (TTL)
     attempts: int = 0           # failed executions so far (retry ledger)
-    status: str = "queued"      # queued | completed | failed
+    status: str = "queued"      # queued | completed | failed | rejected
+    tenant: str = "default"     # owning tenant (fairness + rate limiting)
+    priority: int = 1           # tier (index into PRIORITY_TIERS)
+    slo_ms: float = 0.0         # latency SLO for goodput (0 = none)
+    cost_tokens: float = 1.0    # bucket charge (prompt+decode tokens)
     future: "CompletionFuture" = None  # type: ignore[assignment]
 
     @property
@@ -221,6 +426,7 @@ class RequestScheduler:
         clock: Callable[[], float] = time.perf_counter,
         sleep: Callable[[float], None] = time.sleep,
         tracer=None,
+        tenants: Sequence[TenantSpec] = (),
     ) -> None:
         self.execute = execute
         self.config = config or SchedulerConfig()
@@ -253,6 +459,11 @@ class RequestScheduler:
         # (already-queued work still drains)
         self.shedding = False
         self._retry_rng = random.Random(self.config.retry_seed)
+        # tenant-aware admission: buckets, fair-share clocks, audit counters
+        self.ledger = TenantLedger(tenants)
+        self.shed = 0        # requests terminal via SLO-unmeetable admission
+        self.deferred = 0    # tenant-boundary deferrals (bucket ran dry)
+        self._service_ewma = 0.0  # measured per-batch service time (s)
 
     # -- submission ----------------------------------------------------------
     def submit(
@@ -262,6 +473,10 @@ class RequestScheduler:
         arrival_s: Optional[float] = None,
         block: bool = True,
         deadline_s: Optional[float] = None,
+        tenant: str = "default",
+        priority: Optional[int] = None,
+        slo_ms: Optional[float] = None,
+        cost_tokens: Optional[float] = None,
     ) -> CompletionFuture:
         """Enqueue one request; returns its completion future.
 
@@ -273,6 +488,11 @@ class RequestScheduler:
         deadline (defaults to ``arrival + config.deadline_ms`` when the
         config sets one); a request still queued past its deadline fails
         with :class:`DeadlineExceeded` instead of executing.
+
+        ``tenant``/``priority``/``slo_ms`` place the request in the
+        fairness policy (defaults come from the tenant's registered
+        :class:`TenantSpec`); ``cost_tokens`` is the token-bucket charge —
+        prompt + expected decode tokens — defaulting to ``batch_size``.
         """
         with self._cond:
             if self.shedding:
@@ -293,6 +513,7 @@ class RequestScheduler:
             arrival = now if arrival_s is None else arrival_s
             if deadline_s is None and self.config.deadline_ms > 0:
                 deadline_s = arrival + self.config.deadline_ms / 1e3
+            spec = self.ledger.spec_of(tenant)
             req = ScheduledRequest(
                 request_id=self._next_id,
                 batch_size=batch_size,
@@ -300,6 +521,11 @@ class RequestScheduler:
                 payload=payload,
                 submit_s=now,
                 deadline_s=deadline_s,
+                tenant=tenant,
+                priority=spec.priority if priority is None else priority,
+                slo_ms=spec.slo_ms if slo_ms is None else slo_ms,
+                cost_tokens=float(batch_size) if cost_tokens is None
+                else float(cost_tokens),
             )
             self._next_id += 1
             req.future = CompletionFuture(self, req)
@@ -346,35 +572,140 @@ class RequestScheduler:
                     f"request {future.request.request_id} unreachable: queue idle"
                 )
 
+    # -- tenant-aware selection ---------------------------------------------
+    def _policy_key(self, req: ScheduledRequest, now: float) -> tuple:
+        """Dequeue order: rate limits bind first (dry tenants sink), then
+        priority tier, then weighted fair share, then arrival order."""
+        dry = 1 if self.ledger.dry(req.tenant, req.cost_tokens, now) else 0
+        return (dry, -req.priority, self.ledger.vtime.get(req.tenant, 0.0),
+                req.arrival_s, req.request_id)
+
+    def _pop_policy(self, now: float) -> Optional[ScheduledRequest]:
+        """Pop the next arrived request under the fairness policy (caller
+        holds the lock).  Work-conserving: when every arrived tenant is
+        dry, the best-ranked request is still served."""
+        n = self._arrived_depth(now)
+        if n == 0:
+            return None
+        if n == 1 or not self.config.fairness:
+            idx = 0
+        else:
+            idx = min(range(n),
+                      key=lambda i: self._policy_key(self._queue[i], now))
+        req = self._queue.pop(idx)
+        self.ledger.on_admit(req.tenant, req.cost_tokens, now)
+        return req
+
+    def _shed_sweep(self, now: float) -> None:
+        """Shed arrived requests whose SLO is already unmeetable, estimated
+        from queue position and the measured batch service time (caller
+        holds the lock).  Terminal ``rejected`` status — never silent."""
+        if not self.config.slo_shed or self.batches == 0:
+            return
+        est = self._service_ewma
+        if est <= 0.0:
+            return
+        idxs = list(range(self._arrived_depth(now)))
+        if self.config.fairness:
+            # service order is the POLICY order, not arrival order: a
+            # high-priority or under-budget tenant deep in the arrival
+            # queue will be served early and must not be shed for the
+            # backlog in front of it (stable sort: untagged queues keep
+            # their arrival ranks exactly)
+            idxs.sort(key=lambda i: self._policy_key(self._queue[i], now))
+        doomed: List[ScheduledRequest] = []
+        for rank, i in enumerate(idxs):
+            req = self._queue[i]
+            if req.slo_ms <= 0:
+                continue
+            # rank/max_batch batches ahead of this request, plus its own
+            est_finish = now + est * (1.0 + rank / self.config.max_batch)
+            if est_finish > req.arrival_s + req.slo_ms / 1e3:
+                doomed.append(req)
+        for req in doomed:
+            self._queue.remove(req)
+            req.start_s = req.end_s = now
+            req.status = "rejected"
+            self.shed += 1
+            self.ledger.note_shed(req.tenant)
+            req.future._set(None, DeadlineExceeded(
+                f"request {req.request_id} shed at admission: "
+                f"{req.slo_ms:.0f}ms SLO unmeetable"
+            ))
+            self._emit_tenant(req)
+
+    def _note_defers(self, now: float) -> None:
+        """Count tenants whose arrived work was passed over because their
+        bucket ran dry — one deferral per tenant per batch formation."""
+        if not self.config.fairness:
+            return
+        seen: set = set()
+        for i in range(self._arrived_depth(now)):
+            req = self._queue[i]
+            if req.tenant in seen:
+                continue
+            if self.ledger.dry(req.tenant, req.cost_tokens, now):
+                seen.add(req.tenant)
+                self.ledger.note_defer(req.tenant)
+                self.deferred += 1
+                if self.tracer is not None:
+                    self.tracer.event("sched:defer", now, now,
+                                      tenant=req.tenant)
+
+    def _emit_tenant(self, req: ScheduledRequest) -> None:
+        """Publish one ``sched:tenant`` event per terminal request."""
+        if self.tracer is None:
+            return
+        latency = max(0.0, req.end_s - req.arrival_s)
+        slo_ok = (req.status == "completed"
+                  and (req.slo_ms <= 0 or latency * 1e3 <= req.slo_ms))
+        self.tracer.event(
+            "sched:tenant",
+            req.start_s,
+            req.end_s,
+            tenant=req.tenant,
+            priority=req.priority,
+            status=req.status,
+            latency_s=latency,
+            slo_ms=req.slo_ms,
+            slo_ok=slo_ok,
+            tokens=req.cost_tokens,
+        )
+
     def _form_batch_sync(self) -> List[ScheduledRequest]:
-        with self._cond:
-            if not self._queue:
-                return []
-            first = self._queue[0]
-        now = self.clock()
-        if first.arrival_s > now:
-            self.sleep(first.arrival_s - now)
-            now = self.clock()
         timeout_s = self.config.batch_timeout_ms / 1e3
-        deadline = now + timeout_s
-        batch: List[ScheduledRequest] = []
-        with self._cond:
-            if not self._queue:
-                return []
-            batch.append(self._queue.pop(0))
-            while len(batch) < self.config.max_batch and self._queue:
-                nxt = self._queue[0]
-                if nxt.arrival_s <= now:
-                    batch.append(self._queue.pop(0))
-                elif timeout_s > 0 and nxt.arrival_s <= deadline:
-                    # hold the batch open until the straggler arrives
-                    self.sleep(nxt.arrival_s - now)
-                    now = self.clock()
-                    batch.append(self._queue.pop(0))
-                else:
-                    break
-            self._cond.notify_all()
-        return batch
+        while True:
+            with self._cond:
+                if not self._queue:
+                    return []
+                first = self._queue[0]
+            now = self.clock()
+            if first.arrival_s > now:
+                self.sleep(first.arrival_s - now)
+                now = self.clock()
+            deadline = now + timeout_s
+            batch: List[ScheduledRequest] = []
+            with self._cond:
+                self._shed_sweep(now)
+                while len(batch) < self.config.max_batch:
+                    req = self._pop_policy(now)
+                    if req is not None:
+                        batch.append(req)
+                        continue
+                    if not batch or not self._queue:
+                        break
+                    nxt = self._queue[0]
+                    if timeout_s > 0 and nxt.arrival_s <= deadline:
+                        # hold the batch open until the straggler arrives
+                        self.sleep(nxt.arrival_s - now)
+                        now = self.clock()
+                    else:
+                        break
+                self._note_defers(now)
+                self._cond.notify_all()
+                if batch or not self._queue:
+                    return batch
+            # everything arrived was shed; loop on to the next arrival
 
     # -- threaded drive ------------------------------------------------------
     def start(self) -> "RequestScheduler":
@@ -393,6 +724,16 @@ class RequestScheduler:
             self._thread.join()
             self._thread = None
 
+    def _pop_threaded(self) -> ScheduledRequest:
+        """Policy pop for the worker thread: prefer the fairness ranking
+        over arrived requests, fall back to the queue head (caller holds
+        the lock and has checked the queue is non-empty)."""
+        req = self._pop_policy(self.clock())
+        if req is None:
+            req = self._queue.pop(0)
+            self.ledger.on_admit(req.tenant, req.cost_tokens, self.clock())
+        return req
+
     def _worker(self) -> None:
         timeout_s = self.config.batch_timeout_ms / 1e3
         while True:
@@ -402,11 +743,11 @@ class RequestScheduler:
                     self._cond.wait()
                 if not self.running and not self._queue:
                     return
-                batch.append(self._queue.pop(0))
+                batch.append(self._pop_threaded())
                 deadline = time.monotonic() + timeout_s
                 while len(batch) < self.config.max_batch:
                     if self._queue:
-                        batch.append(self._queue.pop(0))
+                        batch.append(self._pop_threaded())
                         continue
                     remaining = deadline - time.monotonic()
                     if remaining <= 0 or not self.running:
@@ -435,6 +776,7 @@ class RequestScheduler:
                     f"request {req.request_id} missed deadline "
                     f"({start - req.deadline_s:.3f}s late)"
                 ))
+                self._emit_tenant(req)
             else:
                 live.append(req)
         error: Optional[BaseException] = None
@@ -475,6 +817,7 @@ class RequestScheduler:
                     )
                     exhausted.__cause__ = error
                     req.future._set(None, exhausted)
+                    self._emit_tenant(req)
             if retried:
                 with self._cond:
                     for req in retried:
@@ -494,7 +837,13 @@ class RequestScheduler:
                 req.end_s = end
                 req.status = "failed" if error is not None else "completed"
                 req.future._set(value, error)
+                self._emit_tenant(req)
             terminal += len(live)
+        if live:
+            # measured batch service time feeds the SLO-shed estimator
+            dt = end - start
+            self._service_ewma = (dt if self._service_ewma <= 0.0
+                                  else 0.5 * dt + 0.5 * self._service_ewma)
         self.batches += 1
         self.completed += terminal
         self.queue_depth_series.append((start, depth))
@@ -524,6 +873,8 @@ class RequestScheduler:
             "retries": float(self.retries),
             "deadline_failures": float(self.deadline_failures),
             "retry_failures": float(self.retry_failures),
+            "shed": float(self.shed),
+            "deferred": float(self.deferred),
             "mean_batch_occupancy": sum(occ) / len(occ) if occ else 0.0,
             "max_queue_depth": float(max(dep)) if dep else 0.0,
             "mean_queue_depth": sum(dep) / len(dep) if dep else 0.0,

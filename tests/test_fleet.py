@@ -465,3 +465,68 @@ def test_parallel_hedge_duplicates_dedupe(engines):
     assert stats.completed + stats.failed + stats.rejected == len(reqs)
     for r in stats.results:
         assert np.array_equal(r.tokens, oracle[r.request_id])
+
+
+# ---------------------------------------------------------------------------
+# DegradeLadder x priority-aware shedding
+# ---------------------------------------------------------------------------
+def test_degrade_hysteresis_never_oscillates_within_a_crossing():
+    vt = VirtualTime()
+    ladder = DegradeLadder(high=0.85, low=0.60, clock=vt.clock)
+    assert ladder.update(0.9) == 1        # ONE crossing of the high mark
+    # pressure now oscillates anywhere inside the [low, high) band: the
+    # hysteresis must hold the level — zero additional transitions until
+    # the signal actually crosses a watermark again
+    for p in (0.84, 0.61, 0.70, 0.84, 0.60, 0.75) * 5:
+        vt.sleep(0.01)
+        ladder.update(p)
+    assert ladder.level == 1
+    assert len(ladder.transitions) == 1
+    assert ladder.update(0.59) == 0       # and one crossing steps back down
+    assert len(ladder.transitions) == 2
+
+
+def test_priority_aware_shed_drops_best_effort_tier_first():
+    vt = VirtualTime()
+    # same sustained-overload setup that walks the ladder to the shed
+    # level, but with a mixed-priority population: ids 0-4 best-effort
+    # (tier 0), ids 5-9 premium (tier 2)
+    reqs = _reqs(10)
+    for r in reqs[:5]:
+        r.priority = 0
+    for r in reqs[5:]:
+        r.priority = 2
+    engines = [StubEngine(vt)]
+    router = FleetRouter(
+        engines, FleetConfig(),
+        engine_kwargs={"num_pages": 7, "num_slots": 1, "page_size": 8},
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    stats = router.serve(reqs)
+    assert stats.max_degrade_level == 3
+    assert stats.completed + stats.failed + stats.rejected == 10
+    shed = [r for r in stats.results if r.status == "rejected"]
+    assert shed and all(r.reason == "shed" for r in shed)
+    best_effort = {r.request_id for r in reqs if r.priority == 0}
+    premium = {r.request_id for r in reqs if r.priority == 2}
+    # shedding only ever drops the lowest tier present: best-effort
+    # absorbs the whole overload, premium never loses a request
+    assert {r.request_id for r in shed} <= best_effort
+    done = {r.request_id for r in stats.results if r.status == "completed"}
+    assert premium <= done
+    assert router.tenant_ledger.stats()["default"]["shed"] == len(shed)
+
+
+def test_fleet_fairness_off_keeps_fifo_packing():
+    vt = VirtualTime()
+    reqs = _reqs(6)
+    for r in reqs[:3]:
+        r.priority = 0                    # tags present but fairness off
+    router = FleetRouter(
+        [StubEngine(vt) for _ in range(2)],
+        FleetConfig(fairness=False),
+        clock=vt.clock, sleep=vt.sleep,
+    )
+    stats = router.serve(reqs)
+    assert stats.completed == 6
+    assert router.tenant_ledger.stats() == {}   # no admissions charged

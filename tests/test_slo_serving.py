@@ -1,0 +1,377 @@
+"""SLO-aware multi-tenant scheduling: token buckets, fair dequeue,
+priority tiers, SLO shedding, and the goodput analysis pipeline.
+
+Unit layer drives RequestScheduler/TokenBucket/TenantLedger over a virtual
+clock (deterministic discrete-event simulations); the property tests for
+``backoff_delay`` run under hypothesis (or the offline stub in conftest).
+"""
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import jain_index, slo_summary
+from repro.core.tracing import Tracer, TracingServer
+from repro.core.workload import BurstyLoad, DiurnalLoad, MultiTenantLoad
+from repro.serve.scheduler import (
+    PRIORITY_TIERS,
+    DeadlineExceeded,
+    RequestScheduler,
+    SchedulerConfig,
+    TenantLedger,
+    TenantSpec,
+    TokenBucket,
+    backoff_delay,
+)
+
+
+class VirtualTime:
+    def __init__(self):
+        self.t = 0.0
+        self._lock = threading.Lock()
+
+    def clock(self):
+        with self._lock:
+            return self.t
+
+    def sleep(self, dt):
+        with self._lock:
+            self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# backoff_delay properties
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(min_value=1, max_value=40),
+    st.floats(min_value=1e-4, max_value=1.0),
+    st.floats(min_value=1e-3, max_value=10.0),
+)
+@settings(max_examples=40)
+def test_backoff_delay_monotone_and_capped(attempt, base, cap):
+    a = backoff_delay(attempt, base, cap)
+    b = backoff_delay(attempt + 1, base, cap)
+    assert 0.0 <= a <= b          # non-decreasing in attempt
+    assert a <= cap + 1e-12       # hard cap respected
+    assert b <= cap + 1e-12
+
+
+@given(
+    st.integers(min_value=1, max_value=12),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=40)
+def test_backoff_delay_jitter_bounded_and_deterministic(attempt, jitter, seed):
+    base, cap = 0.01, 0.5
+    nojit = backoff_delay(attempt, base, cap)
+    d1 = backoff_delay(attempt, base, cap, jitter=jitter,
+                       rng=random.Random(seed))
+    d2 = backoff_delay(attempt, base, cap, jitter=jitter,
+                       rng=random.Random(seed))
+    assert d1 == d2                                    # seeded determinism
+    assert abs(d1 - nojit) <= jitter * nojit + 1e-12   # bounded jitter
+    assert d1 >= 0.0
+
+
+def test_backoff_delay_expectation_monotone_under_jitter():
+    # jitter is symmetric, so the EXPECTED delay must still be monotone
+    # non-decreasing in the attempt number (cap high enough not to bind)
+    base, cap, jitter = 0.01, 100.0, 0.5
+    means = []
+    for attempt in range(1, 8):
+        rng = random.Random(123)
+        xs = [backoff_delay(attempt, base, cap, jitter=jitter, rng=rng)
+              for _ in range(500)]
+        means.append(sum(xs) / len(xs))
+    assert all(b >= a for a, b in zip(means, means[1:]))
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket / TenantLedger
+# ---------------------------------------------------------------------------
+def test_token_bucket_refill_clamp_and_dry():
+    with pytest.raises(ValueError):
+        TokenBucket(0.0, 10.0)
+    with pytest.raises(ValueError):
+        TokenBucket(10.0, 0.0)
+    b = TokenBucket(rate_per_s=100.0, burst=50.0)
+    assert b.available(0.0) == 50.0
+    b.charge(80.0, 0.0)                       # clamps at zero: no debt
+    assert b.tokens == 0.0
+    assert b.charged_total == 80.0
+    assert b.dry(1.0, 0.0)
+    assert b.available(0.25) == pytest.approx(25.0)
+    assert not b.dry(20.0, 0.25)
+    assert b.available(10.0) == 50.0          # refill capped at burst
+    assert b.time_until(40.0, 10.0) == 0.0
+    b.charge(50.0, 10.0)
+    assert b.time_until(40.0, 10.0) == pytest.approx(0.4)
+    # a cost above burst is satisfiable once the bucket is full again
+    assert b.time_until(500.0, 10.0) == pytest.approx(0.5)
+
+
+def test_tenant_ledger_weighted_vtime_and_stats():
+    led = TenantLedger([
+        TenantSpec("heavy", weight=2.0),
+        TenantSpec("light"),
+        TenantSpec("limited", rate_tokens_per_s=100.0),
+    ])
+    led.on_admit("heavy", 100.0, 0.0)
+    led.on_admit("light", 100.0, 0.0)
+    # vtime advances by cost/weight — double weight, half the advance
+    assert led.vtime["heavy"] == pytest.approx(50.0)
+    assert led.vtime["light"] == pytest.approx(100.0)
+    # burst defaults to one second of refill when only a rate is given
+    assert led.buckets["limited"].burst == pytest.approx(100.0)
+    assert not led.dry("light", 1e9, 0.0)     # no bucket -> never dry
+    led.note_shed("light")
+    led.note_defer("limited")
+    st_ = led.stats()
+    assert st_["heavy"]["tokens_admitted"] == 100.0
+    assert st_["light"]["shed"] == 1
+    assert st_["limited"]["deferred"] == 1
+    # unknown tenants auto-register with defaults
+    spec = led.spec_of("walkin")
+    assert spec.priority == 1 and spec.weight == 1.0
+
+
+def test_tenant_spec_validation_and_tiers():
+    assert TenantSpec("t", priority=0).tier == "best_effort"
+    assert TenantSpec("t", priority=2).tier == "premium"
+    assert PRIORITY_TIERS == ("best_effort", "standard", "premium")
+    with pytest.raises(ValueError):
+        TenantSpec("")
+    with pytest.raises(ValueError):
+        TenantSpec("t", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("t", priority=-1)
+    d = TenantSpec("t", priority=2, weight=3.0, rate_tokens_per_s=10.0,
+                   burst_tokens=5.0, slo_ms=100.0).to_dict()
+    assert TenantSpec.from_dict(d) == TenantSpec.from_dict({**d, "junk": 1})
+
+
+# ---------------------------------------------------------------------------
+# RequestScheduler: fairness policy
+# ---------------------------------------------------------------------------
+def _sched(vt, execute, tenants=(), **cfg_kw):
+    cfg = SchedulerConfig(batch_timeout_ms=0.0, **cfg_kw)
+    return RequestScheduler(execute, cfg, clock=vt.clock, sleep=vt.sleep,
+                            tenants=tenants)
+
+
+def test_untagged_requests_degenerate_to_exact_fifo():
+    orders = {}
+    for fairness in (True, False):
+        vt = VirtualTime()
+        served = []
+        sched = _sched(vt, lambda b: served.extend(r.request_id for r in b),
+                       max_batch=2, fairness=fairness)
+        for i in range(8):
+            sched.submit(arrival_s=0.01 * i)
+        sched.run_until_idle()
+        orders[fairness] = list(served)
+    # fairness on with default tenant/priority is byte-identical to FIFO
+    assert orders[True] == orders[False] == list(range(8))
+
+
+def test_priority_tiers_dequeue_premium_first():
+    vt = VirtualTime()
+    served = []
+    sched = _sched(vt, lambda b: served.extend(r.request_id for r in b),
+                   max_batch=1,
+                   tenants=[TenantSpec("be", priority=0),
+                            TenantSpec("std", priority=1),
+                            TenantSpec("prem", priority=2)])
+    for tenant in ("be", "be", "std", "prem", "std", "prem"):
+        sched.submit(arrival_s=0.0, tenant=tenant)
+    sched.run_until_idle()
+    # ids by tenant: be=0,1  std=2,4  prem=3,5
+    assert served[:2] == [3, 5]            # premium drains first
+    assert set(served[2:4]) == {2, 4}      # then standard
+    assert served[4:] == [0, 1]            # best-effort last
+
+
+def test_weighted_fair_share_tracks_weights():
+    vt = VirtualTime()
+    served = []
+    sched = _sched(vt, lambda b: served.extend(r.tenant for r in b),
+                   max_batch=1,
+                   tenants=[TenantSpec("a", weight=2.0), TenantSpec("b")])
+    for _ in range(6):
+        sched.submit(arrival_s=0.0, tenant="a", cost_tokens=10.0)
+    for _ in range(3):
+        sched.submit(arrival_s=0.0, tenant="b", cost_tokens=10.0)
+    sched.run_until_idle()
+    # start-time WFQ: a's virtual time advances at half b's rate (weight
+    # 2), so a is admitted twice per b admission over the whole drain
+    assert served == ["a", "b", "a", "a", "b", "a", "a", "b", "a"]
+
+
+def test_token_bucket_contains_noisy_neighbor():
+    vt = VirtualTime()
+    served = []
+
+    def execute(batch):
+        served.extend(r.tenant for r in batch)
+        vt.sleep(0.01)   # 10ms service: far below the bucket refill horizon
+
+    sched = _sched(vt, execute, max_batch=1,
+                   tenants=[TenantSpec("noisy", rate_tokens_per_s=10.0,
+                                       burst_tokens=10.0),
+                            TenantSpec("victim")])
+    for _ in range(5):
+        sched.submit(arrival_s=0.0, tenant="noisy", cost_tokens=10.0)
+    for _ in range(2):
+        sched.submit(arrival_s=0.0, tenant="victim", cost_tokens=10.0)
+    sched.run_until_idle()
+    # first admission drains the noisy burst; dry tenants sink below the
+    # victim, which then drains ahead of the backlog.  Work-conserving:
+    # the dry tenant is still served afterwards, never starved.
+    assert served[0] == "noisy"
+    assert served[1:3] == ["victim", "victim"]
+    assert served.count("noisy") == 5
+    assert sched.deferred > 0
+    assert sched.ledger.stats()["noisy"]["deferred"] > 0
+
+
+def test_slo_shed_is_terminal_and_conserves_requests():
+    vt = VirtualTime()
+
+    def execute(batch):
+        vt.sleep(0.05)   # measured service: 50ms per batch
+
+    sched = _sched(vt, execute, max_batch=1)
+    futs = [sched.submit(arrival_s=0.0, slo_ms=60.0) for _ in range(6)]
+    sched.run_until_idle()
+    statuses = [f.request.status for f in futs]
+    # the first batch calibrates the EWMA; everything behind it is doomed
+    # (queue position pushes est_finish past the 60ms SLO) and is shed
+    # with a terminal rejected status — zero silent loss
+    assert statuses.count("completed") >= 1
+    assert statuses.count("rejected") >= 1
+    assert statuses.count("completed") + statuses.count("rejected") == 6
+    assert sched.shed == statuses.count("rejected")
+    assert sched.stats()["shed"] == float(sched.shed)
+    for f in futs:
+        if f.request.status == "rejected":
+            with pytest.raises(DeadlineExceeded, match="SLO unmeetable"):
+                f.result()
+        else:
+            f.result()
+
+
+def test_slo_shed_off_serves_everything_late():
+    vt = VirtualTime()
+    sched = _sched(vt, lambda b: vt.sleep(0.05), max_batch=1, slo_shed=False)
+    futs = [sched.submit(arrival_s=0.0, slo_ms=60.0) for _ in range(6)]
+    sched.run_until_idle()
+    assert all(f.request.status == "completed" for f in futs)
+    assert sched.shed == 0
+
+
+# ---------------------------------------------------------------------------
+# tracer events -> slo_summary / jain_index
+# ---------------------------------------------------------------------------
+def test_jain_index_bounds():
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0]) == 1.0
+    assert jain_index([5.0, 5.0, 5.0]) == pytest.approx(1.0)
+    # one tenant hogging everything: index -> 1/n over the active set
+    assert jain_index([10.0, 10.0, 80.0]) < 0.7
+    assert 0.0 < jain_index([1.0, 2.0, 3.0]) <= 1.0
+
+
+def test_sched_tenant_events_feed_slo_summary():
+    vt = VirtualTime()
+    server = TracingServer()
+    tracer = Tracer("slo-test", server, clock=vt.clock)
+
+    def execute(batch):
+        vt.sleep(0.05)
+
+    cfg = SchedulerConfig(max_batch=1, batch_timeout_ms=0.0)
+    sched = RequestScheduler(execute, cfg, clock=vt.clock, sleep=vt.sleep,
+                             tracer=tracer,
+                             tenants=[TenantSpec("a", slo_ms=1000.0),
+                                      TenantSpec("b", slo_ms=1000.0,
+                                                 rate_tokens_per_s=1.0,
+                                                 burst_tokens=1.0)])
+    for i in range(4):
+        sched.submit(arrival_s=0.0, tenant="a" if i % 2 == 0 else "b",
+                     cost_tokens=5.0)
+    sched.run_until_idle()
+    summary = slo_summary(server.timeline("slo-test"))
+    assert summary["requests"] == 4
+    assert summary["completed"] == 4
+    assert summary["rejected"] == 0
+    assert summary["deferred"] >= 1          # b's bucket ran dry
+    assert summary["goodput_slo"] == pytest.approx(1.0)
+    assert summary["tenants"] == 2.0
+    assert summary["a_completed"] == 2
+    assert summary["a_p99_ms"] > 0.0
+    assert 0.0 < summary["jain_index"] <= 1.0
+
+
+def test_slo_summary_counts_shed_and_missed_slo():
+    vt = VirtualTime()
+    server = TracingServer()
+    tracer = Tracer("slo-shed", server, clock=vt.clock)
+    cfg = SchedulerConfig(max_batch=1, batch_timeout_ms=0.0)
+    sched = RequestScheduler(lambda b: vt.sleep(0.05), cfg,
+                             clock=vt.clock, sleep=vt.sleep, tracer=tracer)
+    futs = [sched.submit(arrival_s=0.0, slo_ms=60.0) for _ in range(5)]
+    sched.run_until_idle()
+    summary = slo_summary(server.timeline("slo-shed"))
+    rejected = sum(1 for f in futs if f.request.status == "rejected")
+    assert summary["rejected"] == rejected >= 1
+    assert summary["requests"] == 5          # terminal events conserve
+    assert summary["goodput_slo"] < 1.0      # shed work is not goodput
+    assert slo_summary([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+def test_bursty_load_is_modulated_and_deterministic():
+    a = list(BurstyLoad(num_requests=200, rate_hz=50.0, burst_factor=4.0,
+                        on_s=1.0, off_s=4.0, seed=3).requests())
+    b = list(BurstyLoad(num_requests=200, rate_hz=50.0, burst_factor=4.0,
+                        on_s=1.0, off_s=4.0, seed=3).requests())
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(a, a[1:]))
+    on = [r for r in a if r.tags.get("burst")]
+    off = [r for r in a if not r.tags.get("burst")]
+    assert on and off
+    # burst phases are 1s of every 5s yet carry the majority of arrivals
+    assert len(on) > len(off)
+
+
+def test_diurnal_load_thins_against_peak():
+    reqs = list(DiurnalLoad(num_requests=300, rate_hz=20.0, period_s=10.0,
+                            amplitude=0.8, seed=1).requests())
+    assert len(reqs) == 300
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(reqs, reqs[1:]))
+    assert reqs == list(DiurnalLoad(num_requests=300, rate_hz=20.0,
+                                    period_s=10.0, amplitude=0.8,
+                                    seed=1).requests())
+
+
+def test_multi_tenant_load_tags_and_merges():
+    reqs = list(MultiTenantLoad(num_requests=60, tenants=[
+        {"name": "prem", "rate_hz": 20.0, "priority": 2, "slo_ms": 100.0},
+        {"name": "be", "rate_hz": 10.0, "priority": 0},
+    ], seed=0).requests())
+    assert len(reqs) == 60
+    assert [r.request_id for r in reqs] == list(range(60))
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(reqs, reqs[1:]))
+    tenants = {r.tags["tenant"] for r in reqs}
+    assert tenants == {"prem", "be"}
+    prem = [r for r in reqs if r.tags["tenant"] == "prem"]
+    assert all(r.tags["priority"] == 2 for r in prem)
+    assert all(r.tags["slo_ms"] == 100.0 for r in prem)
+    with pytest.raises(ValueError):
+        MultiTenantLoad(num_requests=10, tenants=[{"name": "x"}])
+    with pytest.raises(ValueError):
+        MultiTenantLoad(num_requests=10, tenants=[])
