@@ -1,0 +1,274 @@
+"""Live KV page migration: O(bytes) failover vs O(tokens) replay.
+
+Five scenarios over one deterministic workload (reduced glm4-9b, greedy
+decode) drive the fleet's second recovery path end to end:
+
+* ``baseline``        — 3 fault-free workers WITH periodic checkpointing
+  armed: clean runs must never miss a checksum, and checkpointing must not
+  perturb tokens (its per-request greedy tokens are the bit-identity
+  oracle for every other scenario).
+* ``killone_replay``  — worker 1 crashes at its second decode boundary
+  (``crash@1:2``) under ``recovery="replay"``: every orphan re-prefills
+  from its prompt.  The recompute bill is the orphans' prompt tokens.
+* ``killone_migrate`` — the same crash under ``recovery="migrate"`` with
+  ``checkpoint_every=1``: every orphan restores its checkpointed KV pages
+  on a survivor and continues decoding.  Zero recomputed prefill tokens,
+  and the continuation is BIT-IDENTICAL to the undisturbed run — the
+  O(bytes) contract.  The headline gate: replay recomputes >= 5x more
+  prefill tokens than migrate at equal goodput.
+* ``corrupt``         — ``corrupt@1:4`` flips bytes in worker 1's latest
+  checkpoint (checksums left stale), then ``crash@1:5`` orphans it before
+  the next periodic refresh.  The survivor's import-side verify MUST
+  detect the corruption (counted), never serve it, and downgrade that
+  request to replay-from-prompt — still bit-identical.
+* ``drain_join``      — planned elasticity: worker 1 drains at boundary 2
+  (every live slot snapshots fresh and migrates with zero recompute; a
+  drain is not a death) while a fourth engine joins mid-serve and picks up
+  work.
+
+Wall-clock metrics (restore time, tokens/sec) are recorded for the
+trajectory but not gated — the gated metrics are the recovery counters:
+zero lost or mismatched tokens everywhere, zero clean-run checksum
+failures, the >= 5x recompute ratio, the migrated-token fraction, and
+corruption detected exactly (never served).
+
+Emits ``name,us_per_call,derived`` CSV rows plus ``BENCH_recovery.json``
+(seed + git rev + recovery knobs recorded).  ``--smoke`` keeps the same
+workload so baseline and CI numbers compare one-to-one.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .common import bench_meta, emit
+
+NUM_WORKERS = 3
+NUM_REQUESTS = 12
+PROMPT_LEN, GEN_TOKENS = 16, 8
+PAGE_SIZE, NUM_SLOTS, MAX_SEQ = 8, 4, 64
+CKPT_EVERY = 1
+# the corrupt scenario needs a cadence GAP between the corruption and the
+# crash (a periodic refresh between them would heal the snapshot — which
+# is correct behavior, but not what this scenario measures)
+CORRUPT_CKPT_EVERY = 3
+CORRUPT_PLAN = "corrupt@1:4,crash@1:5"
+
+
+def _scenario_row(stats, submitted: int) -> dict:
+    terminal = stats.completed + stats.failed + stats.rejected
+    return {
+        "submitted": submitted,
+        "completed": stats.completed,
+        "failed": stats.failed,
+        "rejected": stats.rejected,
+        "lost": submitted - terminal,
+        "deaths": stats.deaths,
+        "drains": stats.drains,
+        "joins": stats.joins,
+        "requeued": stats.requeued,
+        "migrated": stats.migrated,
+        "migrated_tokens": stats.migrated_tokens,
+        "recomputed_prefill_tokens": stats.recomputed_prefill_tokens,
+        "bytes_moved": stats.bytes_moved,
+        "checkpoints_saved": stats.checkpoints_saved,
+        "checkpoint_bytes": stats.checkpoint_bytes,
+        "checksum_failures": stats.checksum_failures,
+        "goodput": stats.goodput,
+        "tokens_per_s": stats.throughput_tps,
+        "wall_s": stats.wall_s,
+        "recovery_max_s": max(stats.recovery_s) if stats.recovery_s else 0.0,
+    }
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.manifest import EngineKnobs
+    from repro.models import build_model
+    from repro.serve.engine import ServeRequest, ServingEngine
+    from repro.serve.faults import FaultPlan
+    from repro.serve.fleet import FleetConfig, FleetRouter
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (PROMPT_LEN,)).astype(np.int32)
+        for _ in range(NUM_REQUESTS)
+    ]
+
+    # one spare engine for the join scenario; workers share weights
+    # (read-only under serving), each engine owns its page pool, and the
+    # same engines serve every scenario so the jit caches stay warm
+    engines = [
+        ServingEngine(model, params, max_batch=NUM_SLOTS, max_seq=MAX_SEQ,
+                      page_size=PAGE_SIZE)
+        for _ in range(NUM_WORKERS + 1)
+    ]
+    kwargs = dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE, prefill_budget=32)
+
+    def reqs():
+        return [
+            ServeRequest(request_id=i, prompt=prompts[i],
+                         max_new_tokens=GEN_TOKENS)
+            for i in range(NUM_REQUESTS)
+        ]
+
+    def fleet(plan="", **cfg_kw):
+        return FleetRouter(
+            engines[:NUM_WORKERS],
+            FleetConfig(seed=seed, **cfg_kw),
+            engine_kwargs=dict(kwargs),
+            fault_plan=FaultPlan.parse(plan) if plan else None,
+        )
+
+    out = {
+        "bench": "recovery",
+        "smoke": smoke,
+        **bench_meta(seed, EngineKnobs(engine="paged", page_size=PAGE_SIZE,
+                                       recovery="migrate",
+                                       checkpoint_every=CKPT_EVERY)),
+        "num_workers": NUM_WORKERS,
+        "num_requests": NUM_REQUESTS,
+        "prompt_len": PROMPT_LEN,
+        "gen_tokens": GEN_TOKENS,
+        "page_size": PAGE_SIZE,
+        "num_slots": NUM_SLOTS,
+        "checkpoint_every": CKPT_EVERY,
+    }
+
+    def check_identity(stats, name: str) -> int:
+        mismatched = sum(
+            1 for r in stats.results
+            if r.status == "completed"
+            and not np.array_equal(r.tokens, oracle[r.request_id])
+        )
+        assert mismatched == 0, (
+            f"{name}: {mismatched} requests diverged from the fault-free run"
+        )
+        return mismatched
+
+    # -- baseline: fault-free, checkpointing armed -> the oracle ------------
+    base = fleet(recovery="migrate",
+                 checkpoint_every=CKPT_EVERY).serve(reqs())
+    oracle = {r.request_id: r.tokens for r in base.results
+              if r.status == "completed"}
+    row = _scenario_row(base, NUM_REQUESTS)
+    out["baseline"] = row
+    emit("recovery/baseline", base.wall_s,
+         f"completed={base.completed};ckpts={base.checkpoints_saved};"
+         f"checksum_failures={base.checksum_failures}")
+    assert row["lost"] == 0 and base.completed == NUM_REQUESTS, (
+        f"fault-free fleet must complete everything: {row}"
+    )
+    assert base.checksum_failures == 0, (
+        f"clean run must never miss a checksum: {row}"
+    )
+    assert base.checkpoints_saved > 0, (
+        f"checkpointing was armed but never fired: {row}"
+    )
+
+    # -- killone under replay: the O(prompt-tokens) recompute bill ----------
+    rep = fleet(plan="crash@1:2", recovery="replay").serve(reqs())
+    row = _scenario_row(rep, NUM_REQUESTS)
+    row["mismatched_tokens"] = check_identity(rep, "killone_replay")
+    out["killone_replay"] = row
+    emit("recovery/killone_replay", rep.wall_s,
+         f"completed={rep.completed};deaths={rep.deaths};"
+         f"recomputed={rep.recomputed_prefill_tokens};"
+         f"migrated={rep.migrated}")
+    assert row["lost"] == 0 and rep.deaths == 1, row
+    assert rep.migrated == 0 and rep.recomputed_prefill_tokens > 0, (
+        f"replay recovery must recompute prompts, not migrate: {row}"
+    )
+
+    # -- killone under migrate: the O(bytes) failover -----------------------
+    mig = fleet(plan="crash@1:2", recovery="migrate",
+                checkpoint_every=CKPT_EVERY).serve(reqs())
+    row = _scenario_row(mig, NUM_REQUESTS)
+    row["mismatched_tokens"] = check_identity(mig, "killone_migrate")
+    total = mig.migrated_tokens + mig.recomputed_prefill_tokens
+    row["migrated_token_fraction"] = (
+        mig.migrated_tokens / total if total else 0.0
+    )
+    out["killone_migrate"] = row
+    emit("recovery/killone_migrate", mig.wall_s,
+         f"completed={mig.completed};migrated={mig.migrated};"
+         f"migrated_tokens={mig.migrated_tokens};"
+         f"recomputed={mig.recomputed_prefill_tokens};"
+         f"bytes_moved={mig.bytes_moved}")
+    assert row["lost"] == 0 and mig.deaths == 1, row
+    assert mig.migrated > 0 and mig.bytes_moved > 0, (
+        f"migrate recovery must restore checkpointed pages: {row}"
+    )
+    assert mig.checksum_failures == 0, (
+        f"clean migration must never miss a checksum: {row}"
+    )
+
+    # headline: recompute ratio at equal goodput
+    ratio = (rep.recomputed_prefill_tokens
+             / max(mig.recomputed_prefill_tokens, 1))
+    out["recovery"] = {
+        "recompute_ratio": ratio,
+        "goodput_vs_replay": (mig.goodput / rep.goodput
+                              if rep.goodput else 0.0),
+    }
+    emit("recovery/ratio", 0.0,
+         f"recompute_ratio={ratio:.1f};"
+         f"goodput_vs_replay={out['recovery']['goodput_vs_replay']:.2f}")
+    assert ratio >= 5.0, (
+        f"migrate must recompute >=5x fewer prefill tokens than replay "
+        f"(got {ratio:.1f}x)"
+    )
+    assert out["recovery"]["goodput_vs_replay"] >= 1.0, (
+        f"migrate must not trade goodput for the recompute win: {out}"
+    )
+
+    # -- corrupt: detected, never served, downgraded to replay --------------
+    cor = fleet(plan=CORRUPT_PLAN, recovery="migrate",
+                checkpoint_every=CORRUPT_CKPT_EVERY).serve(reqs())
+    row = _scenario_row(cor, NUM_REQUESTS)
+    row["mismatched_tokens"] = check_identity(cor, "corrupt")
+    row["checksum_detected"] = cor.checksum_failures
+    out["corrupt"] = row
+    emit("recovery/corrupt", cor.wall_s,
+         f"completed={cor.completed};detected={cor.checksum_failures};"
+         f"migrated={cor.migrated};mismatched={row['mismatched_tokens']}")
+    assert row["lost"] == 0, row
+    assert cor.checksum_failures >= 1, (
+        f"the injected corruption must be DETECTED at restore: {row}"
+    )
+
+    # -- drain + join: planned elasticity with zero recompute ---------------
+    router = fleet(recovery="migrate")   # checkpoint_every=0: drains only
+    router.drain(1, at_step=2)
+    router.join(engines[NUM_WORKERS], at_round=1)
+    drn = router.serve(reqs())
+    row = _scenario_row(drn, NUM_REQUESTS)
+    row["mismatched_tokens"] = check_identity(drn, "drain_join")
+    out["drain_join"] = row
+    emit("recovery/drain_join", drn.wall_s,
+         f"completed={drn.completed};drains={drn.drains};joins={drn.joins};"
+         f"migrated={drn.migrated};recomputed={drn.recomputed_prefill_tokens}")
+    assert row["lost"] == 0 and drn.completed == NUM_REQUESTS, row
+    assert drn.drains == 1 and drn.deaths == 0, (
+        f"a drain is planned elasticity, not a death: {row}"
+    )
+    assert drn.joins == 1, f"the joined worker never entered the fleet: {row}"
+    assert drn.migrated > 0 and drn.recomputed_prefill_tokens == 0, (
+        f"drain must migrate every live slot with zero recompute: {row}"
+    )
+
+    with open("BENCH_recovery.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run, "recovery")

@@ -61,8 +61,28 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         base = json.load(f)
     failed = False
+
+    def pair(metric: str):
+        """Resolve ``metric`` in both documents; a missing path is a named
+        failure (which file, which metric), never a KeyError traceback —
+        a renamed bench field must fail CI legibly."""
+        out = []
+        for name, doc in (("current", args.current), ("baseline", args.baseline)):
+            src = cur if name == "current" else base
+            try:
+                out.append(lookup(src, metric))
+            except KeyError as e:
+                print(f"[bench-check] MISSING METRIC: {metric!r} not in "
+                      f"{name} file {doc}: {e.args[0]}")
+                return None
+        return out
+
     for metric in args.metric:
-        c, b = lookup(cur, metric), lookup(base, metric)
+        got = pair(metric)
+        if got is None:
+            failed = True
+            continue
+        c, b = got
         if b <= 0:
             print(f"[bench-check] {metric}: baseline {b} <= 0, skipping")
             continue
@@ -75,7 +95,11 @@ def main(argv=None) -> int:
               f"ratio={ratio:.2f} (floor {1.0 - args.max_regression:.2f}) "
               f"[{status}]")
     for metric in args.metric_lower:
-        c, b = lookup(cur, metric), lookup(base, metric)
+        got = pair(metric)
+        if got is None:
+            failed = True
+            continue
+        c, b = got
         if b < 0:
             print(f"[bench-check] {metric}: baseline {b} < 0, skipping")
             continue
@@ -96,7 +120,7 @@ def main(argv=None) -> int:
               f"lower is better) [{status}]")
     if failed:
         print(f"[bench-check] FAILED: regression beyond "
-              f"{args.max_regression:.0%} vs {args.baseline} "
+              f"{args.max_regression:.0%} (or missing metric) vs {args.baseline} "
               f"(baseline rev {base.get('git_rev', '?')}, "
               f"seed {base.get('seed', '?')})")
         return 1

@@ -458,6 +458,89 @@ def fleet_section(spans: Iterable[Span]) -> str:
     return comparison_table(rows, ("metric", "value"))
 
 
+def recovery_summary(spans: Iterable[Span]) -> Dict[str, float]:
+    """Summarize KV-migration recovery from ``ckpt:*``/``migrate:*`` events.
+
+    The engine publishes one ``ckpt:save`` per slot snapshot (tagged
+    ``bytes``/``pages``/``tokens``), one ``migrate:restore`` per orphan
+    rebuilt from a snapshot on a survivor (the O(bytes) failover path) and
+    one ``migrate:checksum_fail`` per snapshot whose per-page checksums
+    failed verification (downgraded to replay — corrupted state is never
+    served).  The router tags each ``fleet:death``/``fleet:drain`` with how
+    many orphans are migrating vs how many prompt tokens the replay path
+    must recompute.  Together: migrated vs recomputed tokens, bytes moved,
+    and recovery time — the ledger deciding whether failover cost scales
+    with bytes moved or tokens recomputed."""
+    ckpts = 0
+    ckpt_bytes = 0
+    migrated = 0
+    migrated_tokens = 0
+    bytes_moved = 0
+    checksum_failures = 0
+    recomputed_tokens = 0
+    drains = 0
+    joins = 0
+    recovery: List[float] = []
+    restore_s: List[float] = []
+    saw = False
+    for s in spans:
+        if s.name == "ckpt:save":
+            saw = True
+            ckpts += 1
+            ckpt_bytes += int(s.tags.get("bytes", 0))
+        elif s.name == "migrate:restore":
+            saw = True
+            migrated += 1
+            migrated_tokens += int(s.tags.get("length", 0))
+            bytes_moved += int(s.tags.get("bytes", 0))
+            restore_s.append(s.duration)
+        elif s.name == "migrate:checksum_fail":
+            saw = True
+            checksum_failures += 1
+        elif s.name in ("fleet:death", "fleet:drain"):
+            saw = saw or s.name == "fleet:drain"
+            recomputed_tokens += int(s.tags.get("recompute_tokens", 0))
+            if s.name == "fleet:drain":
+                drains += 1
+        elif s.name == "fleet:join":
+            saw = True
+            joins += 1
+        elif s.name == "fleet:recovered":
+            recovery.append(s.duration)
+    if not saw:
+        return {}
+    out = {
+        "checkpoints_saved": float(ckpts),
+        "checkpoint_bytes": float(ckpt_bytes),
+        "migrated": float(migrated),
+        "migrated_tokens": float(migrated_tokens),
+        "recomputed_prefill_tokens": float(recomputed_tokens),
+        "bytes_moved": float(bytes_moved),
+        "checksum_failures": float(checksum_failures),
+        "drains": float(drains),
+        "joins": float(joins),
+    }
+    total = migrated_tokens + recomputed_tokens
+    if total:
+        out["migrated_token_fraction"] = migrated_tokens / total
+    if restore_s:
+        out["restore_mean_s"] = sum(restore_s) / len(restore_s)
+    if recovery:
+        out["recovery_mean_s"] = sum(recovery) / len(recovery)
+        out["recovery_max_s"] = max(recovery)
+    return out
+
+
+def recovery_section(spans: Iterable[Span]) -> str:
+    """Render the KV-migration recovery block as a report section; empty
+    string when no checkpoint/migration activity was traced."""
+    summary = recovery_summary(spans)
+    if not summary:
+        return ""
+    rows = [{"metric": k, "value": v} for k, v in summary.items()]
+    return comparison_table(rows, ("metric", "value"))
+
+
 def jain_index(shares: Sequence[float]) -> float:
     """Jain's fairness index over per-tenant shares: (Σx)² / (n·Σx²).
 

@@ -298,6 +298,8 @@ class EngineKnobs:
     spec_k: int = 0                 # speculative draft depth (0 = off)
     prefix_cache: bool = False      # automatic prefix caching on?
     tp: int = 1                     # tensor-parallel degree
+    recovery: str = "replay"        # fleet orphan recovery: replay | migrate
+    checkpoint_every: int = 0       # decode steps between KV checkpoints
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -307,6 +309,8 @@ class EngineKnobs:
             "spec_k": int(self.spec_k),
             "prefix_cache": bool(self.prefix_cache),
             "tp": int(self.tp),
+            "recovery": self.recovery,
+            "checkpoint_every": int(self.checkpoint_every),
         }
 
     @classmethod
@@ -315,9 +319,14 @@ class EngineKnobs:
 
     def describe(self) -> str:
         """One-line report header, e.g.
-        ``engine=paged kv_dtype=int8 page_size=16 spec_k=0 prefix_cache=on tp=1``."""
-        return (
+        ``engine=paged kv_dtype=int8 page_size=16 spec_k=0 prefix_cache=on tp=1``.
+        Recovery knobs print only when armed (old headers stay byte-stable)."""
+        out = (
             f"engine={self.engine} kv_dtype={self.kv_dtype} "
             f"page_size={self.page_size} spec_k={self.spec_k} "
             f"prefix_cache={'on' if self.prefix_cache else 'off'} tp={self.tp}"
         )
+        if self.recovery != "replay" or self.checkpoint_every:
+            out += (f" recovery={self.recovery}"
+                    f" checkpoint_every={self.checkpoint_every}")
+        return out

@@ -632,6 +632,60 @@ def copy_pages(
 
 
 # ---------------------------------------------------------------------------
+# Page export / import (live KV migration between page pools)
+# ---------------------------------------------------------------------------
+def export_pages(
+    k_pages: jnp.ndarray,      # (L, num_pages, page_size, kvh, d)
+    v_pages: jnp.ndarray,
+    idx: jnp.ndarray,          # (n,) int32 physical pages to export
+    k_scales: Optional[jnp.ndarray] = None,  # (L, num_pages, page_size, kvh)
+    v_scales: Optional[jnp.ndarray] = None,
+):
+    """Gather a request's live pages out of the pool into a CONTIGUOUS
+    snapshot ``(L, n, page_size, kvh, d)`` — the transferable half of live
+    KV migration.  Duplicate indices are legal (callers pow2-pad ``idx``
+    with repeats to bound jit variants; the padded rows are sliced off on
+    the host).  With a quantized pool the per-page scale rows travel with
+    their pages (4-tuple return), so the snapshot is exact stored bytes —
+    no dequantize/requantize round trip on the migration path."""
+    idx = jnp.asarray(idx, jnp.int32)
+    out = (k_pages[:, idx], v_pages[:, idx])
+    if k_scales is None:
+        return out
+    return out + (k_scales[:, idx], v_scales[:, idx])
+
+
+def import_pages(
+    k_pages: jnp.ndarray,      # (L, num_pages, page_size, kvh, d)
+    v_pages: jnp.ndarray,
+    dst: jnp.ndarray,          # (n,) int32 freshly allocated destination pages
+    k_snap: jnp.ndarray,       # (L, n, page_size, kvh, d) exported snapshot
+    v_snap: jnp.ndarray,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
+    k_scale_snap: Optional[jnp.ndarray] = None,  # (L, n, page_size, kvh)
+    v_scale_snap: Optional[jnp.ndarray] = None,
+):
+    """Scatter an :func:`export_pages` snapshot into a destination pool's
+    freshly allocated pages (donation-safe on the pools, like
+    :func:`copy_pages`).  Duplicate ``dst`` indices are legal when the
+    matching snapshot rows are identical (the pow2-padding contract:
+    callers repeat the LAST real page in both ``dst`` and the snapshot, so
+    the duplicate write is idempotent)."""
+    dst = jnp.asarray(dst, jnp.int32)
+    out = (
+        k_pages.at[:, dst].set(k_snap),
+        v_pages.at[:, dst].set(v_snap),
+    )
+    if k_scales is None:
+        return out
+    return out + (
+        k_scales.at[:, dst].set(k_scale_snap),
+        v_scales.at[:, dst].set(v_scale_snap),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Speculative-decoding verification (k+1-token windows vs a paged KV pool)
 # ---------------------------------------------------------------------------
 def spec_verify_jnp(

@@ -44,6 +44,7 @@ from ..configs import get_config
 from ..core.analysis import (
     fleet_section,
     latency_summary,
+    recovery_section,
     page_occupancy_section,
     prefill_saturation_section,
     prefix_cache_section,
@@ -347,6 +348,8 @@ def _serve_fleet(engines, cfg, args, load, prompts):
             max_retries=args.retries,
             lease_ttl_s=args.lease_ttl_s,
             fairness=args.fairness == "on",
+            recovery=args.recovery,
+            checkpoint_every=args.checkpoint_every,
         ),
         tenants=[TenantSpec.from_dict(t) for t in tenant_dicts],
         engine_kwargs=dict(
@@ -364,6 +367,16 @@ def _serve_fleet(engines, cfg, args, load, prompts):
         fault_plan=plan,
         tracer=tracer,
     )
+    if args.drain_at:
+        for item in args.drain_at.split(","):
+            try:
+                wtok, stok = item.strip().split(":")
+                router.drain(int(wtok), int(stok))
+            except ValueError:
+                raise SystemExit(
+                    f"[serve] bad --drain-at item {item!r} "
+                    f"(expected worker:step)"
+                )
     stats = router.serve(reqs)
     for r in stats.results:
         tail = (
@@ -378,6 +391,11 @@ def _serve_fleet(engines, cfg, args, load, prompts):
     if section:
         print("[serve] fleet robustness:")
         for line in section.splitlines():
+            print(f"[serve]   {line}")
+    rsection = recovery_section(server.timeline("serve-fleet"))
+    if rsection:
+        print("[serve] KV-migration recovery:")
+        for line in rsection.splitlines():
             print(f"[serve]   {line}")
     latencies = [
         r.latency_s for r in stats.results if r.status == "completed"
@@ -397,6 +415,15 @@ def _serve_fleet(engines, cfg, args, load, prompts):
             "duplicate_commits": float(stats.duplicate_commits),
             "goodput": stats.goodput,
             "max_degrade_level": float(stats.max_degrade_level),
+            "migrated": float(stats.migrated),
+            "migrated_tokens": float(stats.migrated_tokens),
+            "recomputed_prefill_tokens": float(
+                stats.recomputed_prefill_tokens),
+            "bytes_moved": float(stats.bytes_moved),
+            "checkpoints_saved": float(stats.checkpoints_saved),
+            "checksum_failures": float(stats.checksum_failures),
+            "drains": float(stats.drains),
+            "joins": float(stats.joins),
         }
     )
     if stats.recovery_s:
@@ -505,7 +532,25 @@ def main(argv=None) -> int:
     ap.add_argument("--fault-plan", default="",
                     help="scripted fault injection, e.g. "
                          "'crash@1:2,stall@0:3:0.5,pressure@2:1:8x4' "
-                         "(kind@worker:step[:arg]; empty = no faults)")
+                         "(kind@worker:step[:arg]; corrupt@W:S flips bytes "
+                         "in worker W's latest KV checkpoint at step S; "
+                         "empty = no faults)")
+    ap.add_argument("--recovery", default="migrate",
+                    choices=["replay", "migrate"],
+                    help="fleet orphan recovery: migrate restores the "
+                         "latest KV checkpoint on a survivor (O(bytes) "
+                         "failover, bit-identical continuation); replay "
+                         "re-prefills from the prompt (also the fallback "
+                         "when no checkpoint exists or checksums fail)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="decode steps between KV page checkpoints on each "
+                         "fleet worker (0 = none: only planned drains "
+                         "migrate; requires --recovery migrate to matter)")
+    ap.add_argument("--drain-at", default="",
+                    help="planned elasticity: comma-separated worker:step "
+                         "items, e.g. '1:4' drains worker 1 at boundary "
+                         "step 4 — every live slot migrates with zero "
+                         "recompute before the worker is removed")
     ap.add_argument("--evaldb", default="")
     args = ap.parse_args(argv)
 
@@ -566,6 +611,10 @@ def main(argv=None) -> int:
         spec_k=args.spec_k if args.engine == "paged" else 0,
         prefix_cache=args.engine == "paged" and args.prefix_cache == "on",
         tp=engine.tp,
+        # recovery knobs are fleet-level: single-engine runs keep the
+        # pre-fleet header byte-for-byte
+        recovery=args.recovery if args.fleet else "replay",
+        checkpoint_every=args.checkpoint_every if args.fleet else 0,
     )
     print(f"[serve] {knobs.describe()}")
     if args.tp > 1:

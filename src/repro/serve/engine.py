@@ -62,8 +62,11 @@ from ..models.params import tree_map_defs
 from ..sharding.specs import (
     ShardingRules, param_pspecs, set_activation_rules, tp_degree,
 )
-from .faults import FaultContext, WorkerCrash
-from .page_table import PagePool, PageTable, PrefixCache, pages_needed
+from .faults import FaultContext, WorkerCrash, WorkerDrain
+from .page_table import (
+    PagePool, PageSnapshot, PageTable, PrefixCache, page_checksums,
+    pages_needed,
+)
 from .scheduler import (
     PagedSlotPool, PrefillBudget, SlotPool, SpecLedger, TenantLedger,
     TenantSpec,
@@ -241,6 +244,13 @@ class PagedStats:
     deferred: int = 0           # tenant-boundary deferrals (bucket ran dry)
     goodput: float = 1.0        # completed within deadline / submitted
     deadline_ms: float = 0.0    # run TTL handed to serve_paged (0 = none)
+    # -- live KV migration (checkpoint / restore) ---------------------------
+    checkpoints_saved: int = 0  # slot snapshots taken this run
+    checkpoint_bytes: int = 0   # bytes gathered into snapshots
+    restored_requests: int = 0  # requests resumed from a snapshot
+    restored_tokens: int = 0    # KV positions restored without recompute
+    restore_bytes: int = 0      # bytes scattered back into the pool
+    checksum_failures: int = 0  # snapshots rejected by verify -> replayed
 
 
 class ServingEngine:
@@ -320,6 +330,14 @@ class ServingEngine:
         self._cow_copy = jax.jit(ops.copy_pages, donate_argnums=(0, 1))
         self._cow_copy_q = jax.jit(ops.copy_pages, donate_argnums=(0, 1, 4, 5))
         self._cow_shapes: set = set()
+        # live KV migration: checkpoint gathers a request's pages into a
+        # contiguous snapshot (no donation — the pool stays live), restore
+        # scatters a snapshot into freshly allocated pages (donated pools,
+        # like COW).  The quantized variants move the scale pools too.
+        self._export = jax.jit(ops.export_pages)
+        self._import = jax.jit(ops.import_pages, donate_argnums=(0, 1))
+        self._import_q = jax.jit(ops.import_pages, donate_argnums=(0, 1, 5, 6))
+        self._xfer_shapes: set = set()
         self._paged_prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self._packed_prefill_fns: Dict[Tuple[int, int, int, int], Callable] = {}
         self._slot_writers: Dict[int, Callable] = {}
@@ -367,6 +385,7 @@ class ServingEngine:
             "spec_decode": len(self._spec_decode_fns),
             "mirror_patch": len(self._mirror_patch_shapes),
             "cow_copy": len(self._cow_shapes),
+            "page_xfer": len(self._xfer_shapes),
         }
 
     def _compile_delta(self, before: Dict[str, int]) -> Dict[str, int]:
@@ -757,6 +776,9 @@ class ServingEngine:
         deadline_ms: float = 0.0,
         tenants: Optional[List[TenantSpec]] = None,
         fairness: bool = True,
+        checkpoint_every: int = 0,
+        checkpoints: Optional[Dict[int, PageSnapshot]] = None,
+        restores: Optional[Dict[int, PageSnapshot]] = None,
     ) -> PagedStats:
         """Paged-KV continuous batching.
 
@@ -844,6 +866,27 @@ class ServingEngine:
         the lowest-priority youngest slot first.  ``fairness=False`` keeps
         strict FIFO admission (the baseline the SLO benchmark compares
         against).
+
+        ``checkpoint_every=K > 0`` (with a ``checkpoints`` dict) makes
+        in-flight KV state a transferable artifact: every K decode steps,
+        each decoding slot's live pages are gathered into a contiguous
+        :class:`~repro.serve.page_table.PageSnapshot` (exact stored bytes —
+        quantized pools snapshot codes + scales — plus per-page checksums,
+        lengths and emitted tokens) and written to ``checkpoints`` keyed by
+        request id.  The checkpoint runs at the boundary top, BEFORE the
+        fault hook, so a crash at boundary S leaves checkpoints as-of S
+        (staleness is bounded by the cadence K).  A
+        :class:`~repro.serve.faults.WorkerDrain` raised by the hook
+        additionally snapshots every live decoding slot fresh before the
+        crash re-raises — planned handoff loses zero tokens.  ``restores``
+        maps request ids to snapshots a previous worker checkpointed: at
+        admission such a request skips prefill entirely — checksums are
+        verified, pages scatter into freshly allocated pages, lengths and
+        emitted tokens rebuild the slot, and decoding continues
+        bit-identically to an undisturbed run.  A failed verify counts a
+        ``checksum_failure``, drops the snapshot, and the request falls
+        back to ordinary prefill (replay-from-prompt) — corrupted state is
+        never served.
         """
         if prefill_mode not in ("packed", "chunked"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
@@ -851,6 +894,10 @@ class ServingEngine:
             raise ValueError("spec_k must be >= 0")
         if spec_ngram < 1:
             raise ValueError("spec_ngram must be >= 1")
+        if checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if checkpoint_every > 0 and checkpoints is None:
+            raise ValueError("checkpoint_every > 0 needs a checkpoints dict")
         if not requests:
             return PagedStats([], 0, 0.0, 0, 0.0, 0.0, 0, self.page_size, 0,
                               0.0, 0, 0, 0, {}, prefill_mode=prefill_mode,
@@ -950,6 +997,10 @@ class ServingEngine:
         slot_cached: Dict[int, int] = {}
         slot_prefilled: Dict[int, int] = {}
         replay_first: set = set()
+        # slots rebuilt from a migrated snapshot: their prompt was never
+        # admitted to THIS worker's prefill ledger, so a later preemption
+        # must not charge it as dropped prefill debt
+        restored_slots: set = set()
         # pages slots mapped FROM the cache (not allocated themselves): the
         # commitment ledger counts each of these once globally, no matter
         # how many requests share it — the concurrency multiplier
@@ -973,6 +1024,13 @@ class ServingEngine:
         saved_tokens = 0
         dropped_tokens = 0
         cow_copies = 0
+        ckpt_saved = 0
+        ckpt_bytes = 0
+        restored_n = 0
+        restored_tok = 0
+        restore_bytes = 0
+        checksum_failures = 0
+        last_ckpt_step = -1
         decode_s = 0.0
         spec = spec_k > 0
         ledger = SpecLedger() if spec else None
@@ -1076,7 +1134,7 @@ class ServingEngine:
         def release_slot(slot: int, preempted: bool = False):
             nonlocal dropped_tokens
             req = slots.release_paged(slot, table.clear(slot), preempted=preempted)
-            if preempted:
+            if preempted and slot not in restored_slots:
                 # prompt tokens this admission promised but never prefilled:
                 # the recompute debt the saved-token ledger must stay exact
                 # against (cached grants + computed tokens cover the rest)
@@ -1096,6 +1154,7 @@ class ServingEngine:
             slot_cached.pop(slot, None)
             slot_prefilled.pop(slot, None)
             replay_first.discard(slot)
+            restored_slots.discard(slot)
             for p in list(slot_shared.get(slot, [])):
                 unpin(slot, p)
             slot_shared.pop(slot, None)
@@ -1178,6 +1237,63 @@ class ServingEngine:
                 tracer.event("prefix:cow", t0c, clock(), slot=s, page=fresh[0])
             return True
 
+        def snapshot_slot(s: int) -> Optional[PageSnapshot]:
+            """Gather slot ``s``'s live pages into a transferable
+            :class:`PageSnapshot`: one jitted gather of exactly the pages
+            holding its first ``lengths[s]`` tokens (K/V pools and, when
+            quantized, the parallel scale pools — exact stored bytes), plus
+            emitted tokens, length and per-page checksums.  The gather index
+            is padded to a pow2 bucket with repeats of the last real page
+            (sliced off host-side) so variant count stays log2-bounded.
+            Returns None for slots still prefilling (nothing to migrate —
+            replay-from-prompt is already the cheapest recovery for them)."""
+            nonlocal ckpt_saved, ckpt_bytes
+            if s not in decoding or not slot_tokens.get(s):
+                return None
+            req = slots.active[s]
+            length = int(lengths[s])
+            held = table.pages_of(s)[: pool.pages_needed(max(length, 1))]
+            if not held:
+                return None
+            t0s = clock()
+            cnt = bucket_pow2(len(held), cap=max_pages_per_seq)
+            self._xfer_shapes.add((num_pages, page_size, cnt))
+            idx = np.fromiter(held, np.int32, len(held))
+            idx = np.concatenate(
+                [idx, np.full((cnt - len(idx),), idx[-1], np.int32)]
+            )
+            if "k_scales" in cache:
+                arrs = self._export(
+                    cache["k_pages"], cache["v_pages"], idx,
+                    cache["k_scales"], cache["v_scales"],
+                )
+                k, v, ks, vs = (
+                    np.asarray(a)[:, : len(held)] for a in arrs
+                )
+            else:
+                arrs = self._export(cache["k_pages"], cache["v_pages"], idx)
+                k, v = (np.asarray(a)[:, : len(held)] for a in arrs)
+                ks = vs = None
+            snap = PageSnapshot(
+                request_id=req.request_id,
+                prompt_len=len(req.prompt),
+                length=length,
+                tokens=np.asarray(slot_tokens[s], np.int32),
+                k=k, v=v, k_scales=ks, v_scales=vs,
+                checksums=page_checksums(k, v, ks, vs),
+                step=step,
+                kv_dtype=pool_dtype,
+            )
+            ckpt_saved += 1
+            ckpt_bytes += snap.nbytes
+            if tracer is not None:
+                tracer.event(
+                    "ckpt:save", t0s, clock(), request=req.request_id,
+                    step=step, pages=len(held), bytes=snap.nbytes,
+                    tokens=len(slot_tokens[s]),
+                )
+            return snap
+
         def emit_tenant(req, status: str, now: float, latency: float) -> None:
             if tracer is None:
                 return
@@ -1255,15 +1371,41 @@ class ServingEngine:
 
         while queue or slots.num_active:
             progressed = False
-            # 0) boundary fault/heartbeat hook.  WorkerCrash can only be
+            # 0a) periodic checkpoint: runs BEFORE the fault hook, so a
+            #     crash at boundary S observes checkpoints as-of S — the
+            #     migration staleness bound is exactly the cadence.  Cadence
+            #     is keyed on the decode-step counter, once per value
+            #     (prefill-only boundaries don't advance ``step``).
+            if (
+                checkpoint_every > 0
+                and checkpoints is not None
+                and step > 0
+                and step % checkpoint_every == 0
+                and step != last_ckpt_step
+            ):
+                last_ckpt_step = step
+                for s in sorted(decoding):
+                    snap = snapshot_slot(s)
+                    if snap is not None:
+                        checkpoints[snap.request_id] = snap
+            # 0b) boundary fault/heartbeat hook.  WorkerCrash can only be
             #    raised here, so the resumable snapshot (finished results +
             #    replayable pending requests) is attached at this one site.
             if fault_hook is not None:
                 try:
                     fault_hook(FaultContext(
                         step=step, pool=pool, clock=clock, tracer=tracer,
+                        checkpoints=checkpoints,
                     ))
                 except WorkerCrash as crash:
+                    if isinstance(crash, WorkerDrain) and checkpoints is not None:
+                        # planned drain: snapshot EVERY live decoding slot
+                        # fresh (not the stale periodic copy) so the router
+                        # migrates all of them with zero recompute
+                        for s in sorted(decoding):
+                            snap = snapshot_slot(s)
+                            if snap is not None:
+                                checkpoints[snap.request_id] = snap
                     crash.results = [
                         finished[r.request_id] for r in requests
                         if r.request_id in finished
@@ -1338,6 +1480,107 @@ class ServingEngine:
                 ):
                     del queue[idx0]
                     reject(req0, "slo-unmeetable")
+                    progressed = True
+                    continue
+                # migrate-restore admission: a request arriving with a
+                # checkpointed snapshot skips prefill entirely — verify the
+                # per-page checksums, scatter the snapshot into freshly
+                # allocated pages, rebuild lengths + emitted tokens, and
+                # continue decoding bit-identically.  A failed verify drops
+                # the snapshot and falls through to ordinary prefill
+                # (replay-from-prompt): corrupted state is never served.
+                snap = restores.get(req0.request_id) if restores else None
+                if snap is not None and not snap.verify():
+                    checksum_failures += 1
+                    del restores[req0.request_id]
+                    if tracer is not None:
+                        now_cf = clock()
+                        tracer.event(
+                            "migrate:checksum_fail", now_cf, now_cf,
+                            request=req0.request_id, step=step,
+                            pages=snap.num_pages,
+                        )
+                    snap = None
+                if snap is not None:
+                    worst = pool.pages_needed(
+                        len(req0.prompt) + req0.max_new_tokens
+                    )
+                    npages = snap.num_pages
+                    committed = sum(slot_commit.values()) + len(pinned_refs)
+                    if not slots.num_free:
+                        break
+                    if committed + worst > pool.capacity * overcommit:
+                        break
+                    if not ensure_free(npages):
+                        break
+                    req = req0
+                    del queue[idx0]
+                    del restores[req.request_id]
+                    if fair:
+                        tenant_ledger.on_admit(
+                            getattr(req, "tenant", "default"), req_cost(req),
+                            now_adm,
+                        )
+                    t0m = clock()
+                    slot, pages = slots.admit_paged(req, npages, step=step)
+                    table.assign(slot, pages)
+                    # scatter the snapshot into the fresh pages: destination
+                    # AND source are padded to the pow2 bucket with the last
+                    # real page (duplicate scatter indices rewrite the same
+                    # bytes, so the import is idempotent)
+                    cnt = bucket_pow2(len(pages), cap=max_pages_per_seq)
+                    self._xfer_shapes.add((num_pages, page_size, cnt))
+                    dst = np.fromiter(pages, np.int32, len(pages))
+                    dst = np.concatenate(
+                        [dst, np.full((cnt - len(pages),), dst[-1], np.int32)]
+                    )
+                    sel = np.concatenate([
+                        np.arange(len(pages), dtype=np.int32),
+                        np.full((cnt - len(pages),), len(pages) - 1, np.int32),
+                    ])
+                    if "k_scales" in cache:
+                        (cache["k_pages"], cache["v_pages"],
+                         cache["k_scales"], cache["v_scales"]) = self._import_q(
+                            cache["k_pages"], cache["v_pages"], dst,
+                            jnp.asarray(snap.k[:, sel]),
+                            jnp.asarray(snap.v[:, sel]),
+                            cache["k_scales"], cache["v_scales"],
+                            jnp.asarray(snap.k_scales[:, sel]),
+                            jnp.asarray(snap.v_scales[:, sel]),
+                        )
+                    else:
+                        cache["k_pages"], cache["v_pages"] = self._import(
+                            cache["k_pages"], cache["v_pages"], dst,
+                            jnp.asarray(snap.k[:, sel]),
+                            jnp.asarray(snap.v[:, sel]),
+                        )
+                    lengths[slot] = snap.length
+                    toks = [int(t) for t in snap.tokens]
+                    slot_tokens[slot] = toks
+                    slot_times[slot] = []
+                    nxt[slot] = toks[-1]
+                    slot_commit[slot] = worst
+                    slot_cached[slot] = 0
+                    slot_prefilled[slot] = 0
+                    admit_order[slot] = admit_seq
+                    admit_seq += 1
+                    req._admit_step = step      # type: ignore[attr-defined]
+                    # first token was emitted on the source worker; TTFT on
+                    # the survivor is the restore latency itself
+                    req._ttft_s = clock() - submit_s[req.request_id]  # type: ignore
+                    decoding.add(slot)
+                    restored_slots.add(slot)
+                    dirty.add(slot)
+                    restored_n += 1
+                    restored_tok += snap.length
+                    restore_bytes += snap.nbytes
+                    if tracer is not None:
+                        tracer.event(
+                            "migrate:restore", t0m, clock(),
+                            request=req.request_id, pages=len(pages),
+                            bytes=snap.nbytes, tokens=len(toks),
+                            length=snap.length,
+                        )
                     progressed = True
                     continue
                 hit_pages: List[int] = []
@@ -1818,4 +2061,10 @@ class ServingEngine:
             deferred=deferred_n,
             goodput=in_goodput / len(results) if results else 1.0,
             deadline_ms=deadline_ms,
+            checkpoints_saved=ckpt_saved,
+            checkpoint_bytes=ckpt_bytes,
+            restored_requests=restored_n,
+            restored_tokens=restored_tok,
+            restore_bytes=restore_bytes,
+            checksum_failures=checksum_failures,
         )

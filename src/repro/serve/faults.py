@@ -18,6 +18,18 @@ kinds cover the failure classes the router must survive:
 * ``pressure``— the fault seizes pages from the worker's pool for a number
   of boundaries (a noisy-neighbour / fragmentation stand-in), exercising
   preemption and the router's degrade ladder without killing anyone.
+* ``corrupt`` — the fault flips the bytes of one page inside the worker's
+  latest live-KV checkpoint WITHOUT touching its checksum ledger (bit-rot /
+  torn-write stand-in).  Nothing dies; the corruption is only *observable*
+  when a later migration tries to restore that snapshot — the import-side
+  checksum verify must catch it and downgrade the request to
+  replay-from-prompt (corrupted state is never served).  A corrupt spec
+  whose step has arrived but whose worker holds no checkpoint yet stays
+  pending until one exists (it needs a victim to bite).
+
+Two faults may not share a ``worker:step`` slot: the firing order inside
+one boundary would be ambiguous, so :meth:`FaultPlan.parse` rejects the
+duplicate naming the offending spec token.
 
 The engine loop calls the per-worker hook once per boundary behind a no-op
 default (``fault_hook=None`` costs nothing), and every injected fault emits
@@ -37,9 +49,10 @@ __all__ = [
     "FaultPlan",
     "FaultSpec",
     "WorkerCrash",
+    "WorkerDrain",
 ]
 
-FAULT_KINDS = ("crash", "stall", "pressure")
+FAULT_KINDS = ("crash", "stall", "pressure", "corrupt")
 
 
 class FaultError(RuntimeError):
@@ -64,6 +77,22 @@ class WorkerCrash(FaultError):
         self.pending: List[Any] = []   # ServeRequest, attached by the engine
 
 
+class WorkerDrain(WorkerCrash):
+    """Planned elasticity: the router asked this worker to hand off its
+    live work and leave the fleet.
+
+    Shares the :class:`WorkerCrash` recovery path, with one upgrade: the
+    engine catches it at the boundary and snapshots EVERY live decoding
+    slot into the worker's checkpoint store *before* re-raising — the
+    snapshots are as-of the drain boundary, so every migrated request
+    resumes with zero recomputed tokens (a crash can only offer the last
+    periodic checkpoint; a drain is voluntary, so it gets a fresh one).
+    """
+
+    def __init__(self, worker: int, step: int) -> None:
+        super().__init__(worker, step, reason="drain")
+
+
 @dataclass
 class FaultContext:
     """What the engine exposes to a boundary hook: enough to observe and
@@ -75,6 +104,8 @@ class FaultContext:
     pool: Any = None      # the worker's PagePool (pressure faults)
     clock: Callable[[], float] = time.perf_counter
     tracer: Any = None
+    checkpoints: Any = None   # worker's {request_id: PageSnapshot} store
+    #                           (corrupt faults bite the latest snapshot)
 
 
 @dataclass(frozen=True)
@@ -97,6 +128,8 @@ class FaultSpec:
             raise ValueError("stall duration_s must be >= 0")
         if self.kind == "pressure" and (self.pages < 1 or self.hold_steps < 1):
             raise ValueError("pressure needs pages >= 1 and hold_steps >= 1")
+        # corrupt takes no extra arguments: it bites the worker's latest
+        # checkpoint, whichever request that happens to cover
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -137,7 +170,13 @@ class _WorkerHook:
                 ctx.tracer.event("fault:pressure_release", now, now,
                                  worker=self.worker, pages=len(pages))
         while self._pending and self._pending[0].step <= ctx.step:
-            spec = self._pending.pop(0)
+            spec = self._pending[0]
+            if spec.kind == "corrupt" and not ctx.checkpoints:
+                # nothing checkpointed yet: the fault needs a victim, so it
+                # stays pending (holding any later specs — step order is
+                # the contract) until a snapshot exists to corrupt
+                break
+            self._pending.pop(0)
             self.fired.append(spec)
             self._fire(spec, ctx)
 
@@ -154,6 +193,19 @@ class _WorkerHook:
                 ctx.tracer.event("fault:stall", t0, ctx.clock(),
                                  worker=self.worker, step=ctx.step,
                                  duration_s=spec.duration_s)
+            return
+        if spec.kind == "corrupt":
+            # bite the latest snapshot in the worker's checkpoint store
+            # (max request_id of equal-step snapshots is deterministic);
+            # the checksum ledger is deliberately left stale — only a
+            # later restore's verify can observe the damage
+            store = ctx.checkpoints
+            rid = max(store, key=lambda r: (store[r].step, r))
+            store[rid].corrupt(page=0)
+            if ctx.tracer is not None:
+                ctx.tracer.event("fault:corrupt", t0, t0,
+                                 worker=self.worker, step=ctx.step,
+                                 request=rid)
             return
         # pressure: seize what the pool can spare right now
         pool = ctx.pool
@@ -231,14 +283,20 @@ class FaultPlan:
         * ``stall@W:S:DUR``       — stall worker W at step S for DUR seconds
         * ``pressure@W:S:PxH``    — seize P pages on worker W at step S for
           H boundaries
+        * ``corrupt@W:S``         — flip bytes in worker W's latest live-KV
+          checkpoint at step S (checksums stay stale; a later restore's
+          verify must catch it)
 
         e.g. ``crash@1:6,stall@0:3:0.05,pressure@2:4:6x2``; empty or
-        ``none`` parses to an empty plan.
+        ``none`` parses to an empty plan.  Two items landing on the same
+        ``worker:step`` are rejected (the firing order inside one boundary
+        would be ambiguous) with an error naming the offending token.
         """
         text = (text or "").strip()
         if not text or text.lower() == "none":
             return cls(seed=seed)
         specs: List[FaultSpec] = []
+        taken: set = set()              # (worker, step) slots already used
         for item in text.replace(";", ",").split(","):
             item = item.strip()
             if not item:
@@ -247,6 +305,12 @@ class FaultPlan:
                 kind, rest = item.split("@", 1)
                 parts = rest.split(":")
                 worker, step = int(parts[0]), int(parts[1])
+                if (worker, step) in taken:
+                    raise ValueError(
+                        f"duplicate fault at worker {worker} step {step} "
+                        f"(one fault per worker:step slot)"
+                    )
+                taken.add((worker, step))
                 if kind == "crash":
                     specs.append(FaultSpec("crash", worker, step))
                 elif kind == "stall":
@@ -261,6 +325,8 @@ class FaultPlan:
                         hold = int(p[1]) if len(p) > 1 else 2
                     specs.append(FaultSpec("pressure", worker, step,
                                            pages=pages, hold_steps=hold))
+                elif kind == "corrupt":
+                    specs.append(FaultSpec("corrupt", worker, step))
                 else:
                     raise ValueError(f"unknown fault kind {kind!r}")
             except (ValueError, IndexError) as e:
@@ -274,8 +340,8 @@ class FaultPlan:
             return "none"
         out = []
         for s in sorted(self.specs, key=lambda s: (s.step, s.worker)):
-            if s.kind == "crash":
-                out.append(f"crash@{s.worker}:{s.step}")
+            if s.kind in ("crash", "corrupt"):
+                out.append(f"{s.kind}@{s.worker}:{s.step}")
             elif s.kind == "stall":
                 out.append(f"stall@{s.worker}:{s.step}:{s.duration_s:g}")
             else:

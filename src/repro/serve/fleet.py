@@ -14,6 +14,18 @@ instances, each with its own page pool — behind one admission queue:
   carrying a resumable snapshot: finished results commit, pending requests
   replay from their prompts on the survivors (the preemption-recompute
   contract — greedy decode makes the replay bit-identical);
+* **live KV migration** — with ``recovery="migrate"`` workers checkpoint
+  each decoding slot's KV pages every ``checkpoint_every`` steps
+  (:class:`~repro.serve.page_table.PageSnapshot`: exact page bytes +
+  per-page checksums + emitted tokens); orphans whose checkpoint survives
+  are *restored* on a survivor — O(bytes moved) instead of O(prompt
+  tokens recomputed) — and continue bit-identically even beyond greedy
+  decoding.  Replay-from-prompt stays the fallback when no checkpoint
+  exists or its checksums fail (corrupted state is never served);
+* **elasticity** — ``drain(worker)`` snapshots every live slot at a loop
+  boundary and migrates all of them with zero recompute before removing
+  the worker (planned removal, not a death); ``join(engine)`` adds a
+  worker mid-serve that immediately participates in balancing;
 * **idempotent completion** — a request duplicated by straggler/hedge
   dispatch commits exactly once (first commit wins, later ones count as
   ``duplicate_commits``).  In parallel mode a worker whose lease lapses
@@ -47,7 +59,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.registry import KVStore
-from .faults import FaultPlan, WorkerCrash
+from .faults import FaultPlan, WorkerCrash, WorkerDrain
 from .page_table import pages_needed
 from .scheduler import TenantLedger, TenantSpec, backoff_delay
 
@@ -132,6 +144,15 @@ class FleetConfig:
     hedge: bool = True             # parallel mode: detach a lease-expired
     #                                worker and re-dispatch its work now
     max_rounds: int = 1000         # safety valve against router bugs
+    recovery: str = "migrate"      # orphan recovery: "migrate" restores the
+    #                                latest checkpointed KV pages on a
+    #                                survivor (O(bytes) failover); "replay"
+    #                                re-prefills from the prompt (PR-8 path).
+    #                                Replay stays the fallback either way
+    #                                when no checkpoint exists or its
+    #                                checksums fail
+    checkpoint_every: int = 0      # decode steps between KV checkpoints
+    #                                (0 = none: only planned drains migrate)
 
 
 @dataclass
@@ -171,6 +192,16 @@ class FleetStats:
         field(default_factory=list)
     max_degrade_level: int = 0
     per_worker: List[Dict[str, Any]] = field(default_factory=list)
+    # -- migration / elasticity ledger (PR 10) ---------------------------
+    migrated: int = 0              # orphans restored from a KV checkpoint
+    migrated_tokens: int = 0       # KV tokens restored without recompute
+    recomputed_prefill_tokens: int = 0  # replay-path orphans' prompt tokens
+    bytes_moved: int = 0           # snapshot bytes scattered on survivors
+    checkpoints_saved: int = 0
+    checkpoint_bytes: int = 0
+    checksum_failures: int = 0     # corrupted snapshots detected (never served)
+    drains: int = 0                # planned worker removals (not deaths)
+    joins: int = 0                 # workers added mid-serve
 
     def result_of(self, request_id: int) -> FleetResult:
         for r in self.results:
@@ -219,6 +250,9 @@ class _Worker:
         # allocatable worst-case page budget (engine reserves one scratch
         # page) — the router's admission ledger mirror
         self.capacity = num_pages - 1
+        # request_id -> PageSnapshot written by the engine's periodic
+        # checkpoint (and the drain handler); harvested on death/drain
+        self.checkpoints: Dict[int, Any] = {}
 
     @property
     def lease_key(self) -> str:
@@ -269,6 +303,12 @@ class FleetRouter:
         # with the still-running thread and, once done, its outcome
         self._inflight: Dict[int, Dict[str, Any]] = {}
         self._lock = threading.Lock()
+        # elasticity: scripted drains (worker -> boundary step) and pending
+        # joins ((round, engine) — added at the start of that round)
+        self._drain_at: Dict[int, int] = {}
+        self._joins: List[Tuple[int, Any]] = []
+        # harvested snapshots awaiting a survivor: request_id -> snapshot
+        self._migrations: Dict[int, Any] = {}
 
     # -- hooks ---------------------------------------------------------------
     def _make_hook(self, w: _Worker) -> Callable:
@@ -282,11 +322,36 @@ class FleetRouter:
             w.steps += 1
             if not store.renew(key, ttl):
                 raise WorkerCrash(w.index, ctx.step, reason="lease-expired")
+            at = self._drain_at.get(w.index)
+            if at is not None and ctx.step >= at:
+                # planned removal: the engine's drain handler snapshots
+                # every live slot before this propagates (fires once)
+                del self._drain_at[w.index]
+                raise WorkerDrain(w.index, ctx.step)
             if fhook is not None:
                 fhook(ctx)
 
         hook.release = fhook.release if fhook is not None else (lambda: 0)
         return hook
+
+    # -- elasticity ----------------------------------------------------------
+    def drain(self, worker: int, at_step: int = 0) -> None:
+        """Schedule a planned removal of ``worker``: at the first loop
+        boundary with ``step >= at_step`` the worker snapshots every live
+        slot and exits; its requests migrate to survivors with ZERO
+        recompute (drain works even with ``checkpoint_every=0``)."""
+        if not 0 <= worker < len(self.workers):
+            raise ValueError(f"no worker {worker}")
+        self._drain_at[worker] = at_step
+
+    def join(self, engine: Any, at_round: int = 0) -> int:
+        """Add a worker mid-serve: ``engine`` joins the alive set at the
+        start of round ``at_round`` (0 = the next round) and immediately
+        participates in balancing — including picking up migrations.
+        Returns the new worker's index."""
+        index = len(self.workers) + len(self._joins)
+        self._joins.append((at_round, engine))
+        return index
 
     # -- terminal-state bookkeeping -----------------------------------------
     def _commit(self, t: _Tracked, tokens: Any, worker: int,
@@ -445,14 +510,34 @@ class FleetRouter:
     def _run_worker(self, w: _Worker,
                     batch: List[_Tracked]) -> Tuple[str, Any]:
         reqs = [t.req for t in batch]
+        kw = self._degraded_kwargs()
+        restores: Dict[int, Any] = {}
+        if self.config.recovery == "migrate":
+            # arm the engine's checkpoint/restore machinery: a fresh
+            # checkpoint store per run (stale snapshots must not outlive
+            # the run that wrote them) plus this batch's pending migrations
+            w.checkpoints.clear()
+            kw["checkpoints"] = w.checkpoints
+            kw["checkpoint_every"] = self.config.checkpoint_every
+            restores = {
+                t.req.request_id: self._migrations.pop(t.req.request_id)
+                for t in batch if t.req.request_id in self._migrations
+            }
+            if restores:
+                kw["restores"] = restores
         try:
             stats = w.engine.serve_paged(
                 reqs, clock=self.clock, tracer=self.tracer,
-                fault_hook=w.hook, **self._degraded_kwargs(),
+                fault_hook=w.hook, **kw,
             )
             return ("ok", stats)
         except WorkerCrash as crash:
             return ("crash", crash)
+        finally:
+            # snapshots the run never consumed (crash before admission, or
+            # engine-side rejection) go back in the pool for the next
+            # survivor; checksum-failed ones were deleted by the engine
+            self._migrations.update(restores)
 
     # -- the round loop ------------------------------------------------------
     def serve(self, requests: Sequence[Any]) -> FleetStats:
@@ -490,6 +575,23 @@ class FleetRouter:
         rounds = 0
         while any(not t.terminal for t in tracked):
             now = self.clock()
+            # 0) elasticity: pending joins whose round has arrived enter the
+            #    alive set with a fresh lease and hook — they participate in
+            #    this round's balancing (including pending migrations)
+            for rnd, eng in list(self._joins):
+                if rnd <= rounds:
+                    self._joins.remove((rnd, eng))
+                    w = _Worker(len(self.workers), eng, self.engine_kwargs)
+                    w.hook = self._make_hook(w)
+                    self.workers.append(w)
+                    self.store.put(w.lease_key, {"worker": w.index},
+                                   ttl=cfg.lease_ttl_s)
+                    stats.joins += 1
+                    if self.tracer is not None:
+                        self.tracer.event(
+                            "fleet:join", now, now, worker=w.index,
+                            round=rounds,
+                        )
             # collect any detached straggler that finished since last round
             # (their commits dedupe — the idempotent-completion path)
             self._process_outcomes(self._collect_stragglers(block=False),
@@ -600,6 +702,7 @@ class FleetRouter:
             stats.recovery_s.append(tnow - d["t"])
         stats.results = [t.result for t in tracked]
         stats.rounds = rounds
+        stats.num_workers = len(self.workers)   # joins included
         stats.wall_s = tnow - self._t_start
         stats.completed = sum(1 for r in stats.results
                               if r.status == "completed")
@@ -652,6 +755,17 @@ class FleetRouter:
                 for rr in payload.results:
                     self._fold_result(rr, i, tnow)
                 w.served += len(payload.results)
+                # fold the engine's migration ledger into the fleet's
+                # (getattr: stub engines in tests return bare namespaces)
+                stats.migrated += getattr(payload, "restored_requests", 0)
+                stats.migrated_tokens += getattr(payload, "restored_tokens", 0)
+                stats.bytes_moved += getattr(payload, "restore_bytes", 0)
+                stats.checkpoints_saved += getattr(
+                    payload, "checkpoints_saved", 0)
+                stats.checkpoint_bytes += getattr(
+                    payload, "checkpoint_bytes", 0)
+                stats.checksum_failures += getattr(
+                    payload, "checksum_failures", 0)
                 # a worker that returned cleanly is demonstrably responsive:
                 # refresh its lease (a detached straggler's lease lapsed,
                 # and it must not self-crash on its next dispatch)
@@ -659,19 +773,41 @@ class FleetRouter:
                                ttl=self.config.lease_ttl_s)
             else:
                 crash: WorkerCrash = payload
+                drained = crash.reason == "drain"
                 w.alive = False
-                w.deaths += 1
-                stats.deaths += 1
+                if drained:
+                    stats.drains += 1
+                else:
+                    w.deaths += 1
+                    stats.deaths += 1
                 for rr in crash.results:
                     self._fold_result(rr, i, tnow)
                 w.served += len(crash.results)
                 orphans = [self._by_id[r.request_id] for r in crash.pending]
                 orphans = [t for t in orphans if not t.terminal]
+                # harvest the dead worker's checkpoints: orphans with a
+                # snapshot migrate (O(bytes) restore on a survivor); the
+                # rest replay from their prompts — that recompute debt is
+                # exactly their prompt tokens
+                migrated_here = 0
+                recompute_here = 0
+                for t in orphans:
+                    rid = t.req.request_id
+                    snap = (w.checkpoints.pop(rid, None)
+                            if self.config.recovery == "migrate" else None)
+                    if snap is not None:
+                        self._migrations[rid] = snap
+                        migrated_here += 1
+                    else:
+                        recompute_here += len(t.req.prompt)
+                stats.recomputed_prefill_tokens += recompute_here
                 if self.tracer is not None:
                     self.tracer.event(
-                        "fleet:death", tnow, tnow, worker=i,
+                        "fleet:drain" if drained else "fleet:death",
+                        tnow, tnow, worker=i,
                         reason=crash.reason, step=crash.step,
-                        requeued=len(orphans),
+                        requeued=len(orphans), migrating=migrated_here,
+                        recompute_tokens=recompute_here,
                     )
                 n = self._requeue(orphans, tnow)
                 stats.requeued += n

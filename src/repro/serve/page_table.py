@@ -25,14 +25,18 @@ at the engine layer.
 """
 from __future__ import annotations
 
+import zlib
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "PagePool",
+    "PageSnapshot",
     "PageTable",
     "PrefixCache",
+    "page_checksums",
     "pages_needed",
     "scatter_cache_to_pages",
 ]
@@ -72,6 +76,86 @@ def scatter_cache_to_pages(k_cache, v_cache, page_size: int, rng=None):
             v_pages[pid, : blk.shape[0]] = vc[i, j * page_size:(j + 1) * page_size]
             table[i, j] = pid
     return k_pages, v_pages, table
+
+
+def page_checksums(k, v, k_scales=None, v_scales=None) -> List[int]:
+    """CRC32 per page over the exact stored bytes — K then V (then the
+    scale rows in quantized mode), all layers of one page chained into one
+    word.  Computed over snapshot arrays shaped ``(L, n, page_size, ...)``
+    (page axis 1), i.e. the bytes exactly as the append/quantize path wrote
+    them: a quantized pool checksums the int8/fp8 codes plus their f32
+    scales, never a dequantized view, so verification is byte-strict."""
+    n = int(np.asarray(k).shape[1])
+    sums: List[int] = []
+    for j in range(n):
+        c = zlib.crc32(np.ascontiguousarray(k[:, j]).tobytes())
+        c = zlib.crc32(np.ascontiguousarray(v[:, j]).tobytes(), c)
+        if k_scales is not None:
+            c = zlib.crc32(np.ascontiguousarray(k_scales[:, j]).tobytes(), c)
+            c = zlib.crc32(np.ascontiguousarray(v_scales[:, j]).tobytes(), c)
+        sums.append(c & 0xFFFFFFFF)
+    return sums
+
+
+@dataclass
+class PageSnapshot:
+    """A request's in-flight KV state as a first-class transferable
+    artifact: the contiguous page bytes (``ops.export_pages`` output,
+    fetched to host), the lengths/tokens needed to resume decoding, and a
+    per-page checksum ledger guarding the transfer path.
+
+    ``length`` counts the KV positions the pages actually hold (the
+    engine's ``lengths[slot]`` at the checkpoint boundary: prompt plus all
+    emitted tokens except the still-unappended latest one, which is
+    exactly ``tokens[-1]``).  A restore scatters the pages into freshly
+    allocated pages on the destination pool, rebuilds the slot state from
+    ``tokens``/``length``, and continues decoding — bit-identical to an
+    undisturbed run because the pages are exact stored bytes.
+    """
+
+    request_id: int
+    prompt_len: int
+    length: int                 # KV positions held by the pages
+    tokens: np.ndarray          # emitted tokens so far (np.int32)
+    k: np.ndarray               # (L, n, page_size, kvh, d) page bytes
+    v: np.ndarray
+    k_scales: Optional[np.ndarray] = None   # (L, n, page_size, kvh) f32
+    v_scales: Optional[np.ndarray] = None
+    checksums: List[int] = field(default_factory=list)
+    step: int = 0               # engine decode step of the checkpoint
+    kv_dtype: str = "float32"
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.k.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes a migration of this snapshot moves (pages + scales)."""
+        n = self.k.nbytes + self.v.nbytes
+        if self.k_scales is not None:
+            n += self.k_scales.nbytes + self.v_scales.nbytes
+        return n
+
+    def verify(self) -> bool:
+        """Recompute the per-page checksums and compare against the ledger
+        — the import-side guard: a mismatch means the bytes changed between
+        checkpoint and restore and the request MUST replay from its prompt
+        (corrupted state is never served)."""
+        return (
+            page_checksums(self.k, self.v, self.k_scales, self.v_scales)
+            == self.checksums
+        )
+
+    def corrupt(self, page: int = 0) -> None:
+        """Flip the bytes of one page WITHOUT updating the checksum ledger
+        (the seeded ``corrupt@W:S`` fault's payload — a bit-rot / torn-write
+        stand-in that :meth:`verify` must catch)."""
+        # device-fetched arrays arrive read-only: take a writable copy
+        k = np.array(self.k, copy=True)
+        view = k.view(np.uint8)
+        view[:, page] ^= 0xFF
+        self.k = k
 
 
 class PagePool:

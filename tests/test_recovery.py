@@ -1,0 +1,544 @@
+"""Live KV page migration: O(bytes) failover, elastic drain/join, and
+corruption-detecting page checksums.
+
+Three layers:
+
+* unit tests pin the building blocks — the jitted page export/import
+  round-trip, the per-page CRC ledger (any byte flip is caught), the
+  corrupt fault's defer-until-a-snapshot-exists contract, duplicate
+  fault-plan rejection, the serve_paged checkpoint knob validation, and
+  drain/join over stub engines;
+* a property-style test drives PagePool through random
+  alloc/incref/free sequences and asserts the allocator invariants that
+  migration leans on (free list disjoint from in-use, refcounts never
+  negative, capacity conserved) — with and without the quantized-mode
+  mirror pool in lockstep;
+* integration tests run the full recovery matrix {crash, stall, drain,
+  corrupt} x {spec_k 0/2} x {prefix cache on/off} x {kv f32/int8} over
+  real paged engines and require every completed request to be
+  BIT-IDENTICAL to the fault-free oracle — a migrated continuation must
+  be indistinguishable from an undisturbed run, and a corrupted snapshot
+  must be detected and downgraded to replay, never served.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.analysis import recovery_summary
+from repro.core.manifest import EngineKnobs
+from repro.core.tracing import Tracer, TracingServer
+from repro.serve.engine import ServeRequest
+from repro.serve.faults import FaultContext, FaultPlan, FaultSpec, WorkerDrain
+from repro.serve.fleet import FleetConfig, FleetRouter
+from repro.serve.page_table import PagePool, PageSnapshot, page_checksums
+
+from test_fleet import StubEngine, VirtualTime, _reqs
+
+
+# ---------------------------------------------------------------------------
+# ops.export_pages / ops.import_pages round-trip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "int8"])
+def test_export_import_roundtrip(quantized):
+    """Gather pages out of one pool, scatter them into another: the
+    destination pages must hold the exact source bytes (and only the
+    addressed pages may change)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    L, P, S, H, D = 2, 6, 4, 2, 3
+    rng = np.random.default_rng(0)
+    if quantized:
+        k = rng.integers(-128, 128, (L, P, S, H, D)).astype(np.int8)
+        v = rng.integers(-128, 128, (L, P, S, H, D)).astype(np.int8)
+        ks = rng.random((L, P, S, H)).astype(np.float32)
+        vs = rng.random((L, P, S, H)).astype(np.float32)
+    else:
+        k = rng.random((L, P, S, H, D)).astype(np.float32)
+        v = rng.random((L, P, S, H, D)).astype(np.float32)
+        ks = vs = None
+
+    idx = jnp.array([3, 1, 4], dtype=jnp.int32)
+    out = ops.export_pages(jnp.asarray(k), jnp.asarray(v), idx,
+                           None if ks is None else jnp.asarray(ks),
+                           None if vs is None else jnp.asarray(vs))
+    k_snap, v_snap = np.asarray(out[0]), np.asarray(out[1])
+    assert np.array_equal(k_snap, k[:, [3, 1, 4]])
+    assert np.array_equal(v_snap, v[:, [3, 1, 4]])
+    if quantized:
+        assert np.array_equal(np.asarray(out[2]), ks[:, [3, 1, 4]])
+        assert np.array_equal(np.asarray(out[3]), vs[:, [3, 1, 4]])
+
+    dst_k = jnp.zeros_like(jnp.asarray(k))
+    dst_v = jnp.zeros_like(jnp.asarray(v))
+    dst = jnp.array([2, 5, 1], dtype=jnp.int32)
+    if quantized:
+        dk, dv, dks, dvs = ops.import_pages(
+            dst_k, dst_v, dst, out[0], out[1],
+            jnp.zeros_like(jnp.asarray(ks)), jnp.zeros_like(jnp.asarray(vs)),
+            out[2], out[3])
+        assert np.array_equal(np.asarray(dks)[:, [2, 5, 1]], ks[:, [3, 1, 4]])
+        assert np.array_equal(np.asarray(dvs)[:, [2, 5, 1]], vs[:, [3, 1, 4]])
+    else:
+        dk, dv = ops.import_pages(dst_k, dst_v, dst, out[0], out[1])
+    dk, dv = np.asarray(dk), np.asarray(dv)
+    assert np.array_equal(dk[:, [2, 5, 1]], k[:, [3, 1, 4]])
+    assert np.array_equal(dv[:, [2, 5, 1]], v[:, [3, 1, 4]])
+    untouched = [p for p in range(P) if p not in (2, 5, 1)]
+    assert not dk[:, untouched].any() and not dv[:, untouched].any()
+
+
+# ---------------------------------------------------------------------------
+# page_checksums / PageSnapshot
+# ---------------------------------------------------------------------------
+def _snapshot(quantized=False, pages=3, seed=0):
+    L, S, H, D = 2, 4, 2, 3
+    rng = np.random.default_rng(seed)
+    if quantized:
+        k = rng.integers(-128, 128, (L, pages, S, H, D)).astype(np.int8)
+        v = rng.integers(-128, 128, (L, pages, S, H, D)).astype(np.int8)
+        ks = rng.random((L, pages, S, H)).astype(np.float32)
+        vs = rng.random((L, pages, S, H)).astype(np.float32)
+    else:
+        k = rng.random((L, pages, S, H, D)).astype(np.float32)
+        v = rng.random((L, pages, S, H, D)).astype(np.float32)
+        ks = vs = None
+    return PageSnapshot(
+        request_id=7, prompt_len=5, length=9,
+        tokens=np.arange(4, dtype=np.int32),
+        k=k, v=v, k_scales=ks, v_scales=vs,
+        checksums=page_checksums(k, v, ks, vs),
+        kv_dtype="int8" if quantized else "float32",
+    )
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "int8"])
+def test_page_checksums_catch_any_byte_flip(quantized):
+    snap = _snapshot(quantized)
+    assert snap.verify()
+    # a single flipped byte in any page, any array, fails ONLY that page
+    for arr_name in ("k", "v") + (("k_scales", "v_scales") if quantized else ()):
+        arr = np.array(getattr(snap, arr_name), copy=True)
+        flat = arr.view(np.uint8).reshape(arr.shape[0], arr.shape[1], -1)
+        flat[1, 2, -1] ^= 0x01
+        fresh = {
+            "k": snap.k, "v": snap.v,
+            "k_scales": snap.k_scales, "v_scales": snap.v_scales,
+            arr_name: arr,
+        }
+        sums = page_checksums(fresh["k"], fresh["v"],
+                              fresh["k_scales"], fresh["v_scales"])
+        assert sums[2] != snap.checksums[2], arr_name
+        assert sums[:2] == snap.checksums[:2], arr_name
+
+
+def test_page_snapshot_corrupt_is_detected_even_on_readonly_arrays():
+    snap = _snapshot()
+    # device-fetched snapshots arrive as read-only numpy views; corrupt()
+    # must still work (it takes a writable copy) and verify() must catch it
+    snap.k.setflags(write=False)
+    before = snap.k.copy()
+    snap.corrupt(page=0)
+    assert not snap.verify()
+    assert not np.array_equal(snap.k[:, 0], before[:, 0])
+    assert np.array_equal(snap.k[:, 1:], before[:, 1:])  # one page bitten
+    assert snap.nbytes == snap.k.nbytes + snap.v.nbytes
+    assert snap.num_pages == 3
+
+
+# ---------------------------------------------------------------------------
+# corrupt fault semantics + fault-plan hygiene
+# ---------------------------------------------------------------------------
+def test_corrupt_fault_defers_until_a_snapshot_exists():
+    plan = FaultPlan([FaultSpec("corrupt", 0, 1)])
+    hook = plan.hook_for(0)
+    store = {}
+    # no checkpoints yet: the fault stays armed past its step
+    for step in (1, 2):
+        hook(FaultContext(step=step, checkpoints=store))
+    assert not hook.fired
+    snap = _snapshot()
+    store[snap.request_id] = snap
+    hook(FaultContext(step=3, checkpoints=store))
+    assert [s.step for s in hook.fired] == [1]
+    assert not snap.verify()            # bitten, ledger left stale
+    # and it fired exactly once
+    hook(FaultContext(step=4, checkpoints=store))
+    assert len(hook.fired) == 1
+
+
+def test_corrupt_bites_the_latest_snapshot():
+    plan = FaultPlan([FaultSpec("corrupt", 0, 0)])
+    hook = plan.hook_for(0)
+    older, newer = _snapshot(seed=1), _snapshot(seed=2)
+    older.step, newer.step = 2, 5
+    older.request_id, newer.request_id = 1, 3
+    store = {1: older, 3: newer}
+    hook(FaultContext(step=0, checkpoints=store))
+    assert older.verify() and not newer.verify()
+
+
+def test_duplicate_fault_plan_entries_rejected():
+    with pytest.raises(ValueError, match="duplicate fault"):
+        FaultPlan.parse("crash@1:2,corrupt@1:2")
+    with pytest.raises(ValueError, match="duplicate fault"):
+        FaultPlan.parse("stall@0:3:0.1,stall@0:3:0.2")
+    # same step on different workers is fine
+    assert len(FaultPlan.parse("crash@0:2,crash@1:2").specs) == 2
+    # corrupt round-trips through describe
+    plan = FaultPlan.parse("corrupt@1:4,crash@1:5")
+    assert FaultPlan.parse(plan.describe()).describe() == plan.describe()
+
+
+def test_worker_drain_is_a_planned_crash():
+    drain = WorkerDrain(2, 7)
+    assert isinstance(drain, Exception)
+    assert drain.reason == "drain"
+    assert (drain.worker, drain.step) == (2, 7)
+
+
+# ---------------------------------------------------------------------------
+# EngineKnobs stamping (manifest)
+# ---------------------------------------------------------------------------
+def test_engine_knobs_record_recovery_configuration():
+    stock = EngineKnobs(engine="paged", page_size=8)
+    assert "recovery" not in stock.describe()      # old headers byte-stable
+    armed = EngineKnobs(engine="paged", page_size=8,
+                        recovery="migrate", checkpoint_every=4)
+    assert "recovery=migrate checkpoint_every=4" in armed.describe()
+    d = armed.to_dict()
+    assert d["recovery"] == "migrate" and d["checkpoint_every"] == 4
+    assert EngineKnobs.from_dict(d).describe() == armed.describe()
+
+
+# ---------------------------------------------------------------------------
+# check_regression: a missing metric is a named failure, not a traceback
+# ---------------------------------------------------------------------------
+def test_check_regression_missing_metric_fails_legibly(tmp_path, capsys):
+    import json
+
+    from benchmarks.check_regression import main as check
+
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps({"paged": {"tokens_per_s": 10.0}}))
+    base.write_text(json.dumps({"paged": {"tokens_per_s": 10.0}}))
+    # metric present in both: passes
+    assert check([str(cur), str(base),
+                  "--metric", "paged.tokens_per_s"]) == 0
+    # metric missing from the baseline: exit 1 with a named message
+    assert check([str(cur), str(base),
+                  "--metric", "paged.tokens_per_s",
+                  "--metric", "recovery.recompute_ratio"]) == 1
+    out = capsys.readouterr().out
+    assert "MISSING METRIC" in out
+    assert "recovery.recompute_ratio" in out
+    assert str(cur) in out                 # names the offending file
+    # lower-is-better metrics take the same path
+    assert check([str(cur), str(base),
+                  "--metric-lower", "corrupt.lost"]) == 1
+    assert "MISSING METRIC" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# PagePool invariants under random alloc/incref/free (property-style)
+# ---------------------------------------------------------------------------
+def _check_pool(pool: PagePool, model: dict) -> None:
+    in_use = set(model)
+    assert not (set(pool._free) & in_use)                 # disjoint
+    assert pool.num_free + pool.num_in_use == pool.capacity
+    for p, c in model.items():
+        assert c >= 1
+        assert pool.refcount(p) == c
+    for p in pool._free:
+        assert pool.refcount(p) == 0
+    assert pool.num_shared == sum(1 for c in model.values() if c > 1)
+
+
+@settings(max_examples=40)
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "incref", "free"]),
+                  st.integers(min_value=0, max_value=6)),
+        min_size=0, max_size=60,
+    ),
+    mirrored=st.sampled_from([False, True]),
+)
+def test_page_pool_invariants_under_random_traffic(ops, mirrored):
+    """Free list stays disjoint from in-use pages, refcounts never go
+    negative, and capacity is conserved — under arbitrary interleavings of
+    alloc/incref/free.  ``mirrored`` runs the identical sequence against a
+    second pool (the quantized engine keeps scale arrays addressed by the
+    SAME page ids, so allocation decisions must not depend on payload
+    dtype): both pools stay in lockstep."""
+    pools = [PagePool(num_pages=9, page_size=8)]
+    if mirrored:
+        pools.append(PagePool(num_pages=9, page_size=8))
+    model: dict = {}
+    for kind, arg in ops:
+        if kind == "alloc":
+            got = [p.alloc(arg) for p in pools]
+            if got[0] is None:
+                assert arg > pools[0].num_free
+                assert all(g is None for g in got)
+            else:
+                assert all(g == got[0] for g in got)      # lockstep ids
+                assert not (set(got[0]) & set(model))     # fresh pages only
+                for p in got[0]:
+                    model[p] = 1
+        elif kind == "incref" and model:
+            page = sorted(model)[arg % len(model)]
+            for p in pools:
+                p.incref([page])
+            model[page] += 1
+        elif kind == "free" and model:
+            page = sorted(model)[arg % len(model)]
+            released = [p.free([page]) for p in pools]
+            assert all(r == released[0] for r in released)
+            model[page] -= 1
+            if model[page] == 0:
+                assert released[0] == [page]
+                del model[page]
+            else:
+                assert released[0] == []
+        for p in pools:
+            _check_pool(p, model)
+    if mirrored:
+        assert sorted(pools[0]._free) == sorted(pools[1]._free)
+
+
+def test_page_pool_misuse_raises():
+    pool = PagePool(num_pages=5, page_size=8)
+    pages = pool.alloc(2)
+    pool.free([pages[0]])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([pages[0]])
+    with pytest.raises(ValueError, match="incref on free page"):
+        pool.incref([pages[0]])
+    with pytest.raises(ValueError, match="negative page count"):
+        pool.alloc(-1)
+
+
+# ---------------------------------------------------------------------------
+# serve_paged checkpoint-knob validation (real engine, no decoding)
+# ---------------------------------------------------------------------------
+def test_checkpoint_knob_validation(fleet_engines):
+    _, engines, _ = fleet_engines
+    with pytest.raises(ValueError, match="checkpoint_every must be >= 0"):
+        engines[0].serve_paged([], checkpoint_every=-1)
+    with pytest.raises(ValueError, match="needs a checkpoints dict"):
+        engines[0].serve_paged([], checkpoint_every=2)
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter drain/join over stub engines (virtual clock)
+# ---------------------------------------------------------------------------
+def test_drain_is_not_a_death_and_requeues_everything():
+    vt = VirtualTime()
+    engines = [StubEngine(vt) for _ in range(3)]
+    router = FleetRouter(engines, FleetConfig(),
+                         clock=vt.clock, sleep=vt.sleep)
+    router.drain(1, at_step=1)
+    stats = router.serve(_reqs(9))
+    assert stats.completed == 9
+    assert stats.drains == 1 and stats.deaths == 0
+    assert stats.failed == stats.rejected == 0
+    # stub engines carry no snapshots: drained work replays on survivors
+    assert stats.requeued > 0
+
+
+def test_drain_validates_worker_index():
+    vt = VirtualTime()
+    router = FleetRouter([StubEngine(vt)], FleetConfig(),
+                         clock=vt.clock, sleep=vt.sleep)
+    with pytest.raises(ValueError, match="no worker"):
+        router.drain(3)
+
+
+def test_join_adds_a_worker_mid_serve():
+    vt = VirtualTime()
+    late = StubEngine(vt)
+    # one worker admits 2x its 4 slots per round: 10 requests need a second
+    # round, which is exactly when the joiner arrives
+    router = FleetRouter([StubEngine(vt)], FleetConfig(),
+                         clock=vt.clock, sleep=vt.sleep)
+    assert router.join(late, at_round=1) == 1
+    stats = router.serve(_reqs(10))
+    assert stats.completed == 10
+    assert stats.joins == 1
+    assert stats.num_workers == 2
+    assert late.calls > 0                   # the joiner actually served
+
+
+def test_drain_then_join_rolls_the_fleet():
+    vt = VirtualTime()
+    engines = [StubEngine(vt) for _ in range(2)]
+    router = FleetRouter(engines, FleetConfig(),
+                         clock=vt.clock, sleep=vt.sleep)
+    router.drain(0, at_step=0)
+    router.join(StubEngine(vt), at_round=1)
+    stats = router.serve(_reqs(8))
+    assert stats.completed == 8
+    assert stats.drains == 1 and stats.joins == 1 and stats.deaths == 0
+
+
+# ---------------------------------------------------------------------------
+# Integration: real paged engines, full recovery matrix, bit-identity
+# ---------------------------------------------------------------------------
+NUM_SLOTS, PAGE_SIZE, MAX_SEQ = 4, 8, 64
+N_REQS, PROMPT_LEN, GEN = 6, 12, 8
+
+# every scenario runs recovery="migrate"; the corrupt cell needs a cadence
+# GAP between the corruption and the crash (a periodic refresh in between
+# would heal the snapshot — correct behavior, but not what the cell tests)
+SCENARIOS = {
+    "crash": dict(plan="crash@1:2", checkpoint_every=1),
+    "stall": dict(plan="stall@1:1:0.02", checkpoint_every=1),
+    "drain": dict(plan="", checkpoint_every=0, drain=(1, 2)),
+    "corrupt": dict(plan="corrupt@1:4,crash@1:5", checkpoint_every=3),
+}
+
+
+@pytest.fixture(scope="module", params=["float32", "int8"],
+                ids=["f32", "int8"])
+def fleet_engines(request):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServingEngine
+
+    cfg = get_config("glm4-9b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kv_dtype = None if request.param == "float32" else request.param
+    # 3 fleet workers + 1 spare for the join scenario
+    engines = [
+        ServingEngine(model, params, max_batch=NUM_SLOTS, max_seq=MAX_SEQ,
+                      page_size=PAGE_SIZE, kv_dtype=kv_dtype)
+        for _ in range(4)
+    ]
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [
+        np.concatenate([
+            shared,
+            rng.integers(0, cfg.vocab_size,
+                         (PROMPT_LEN - len(shared),)).astype(np.int32),
+        ])
+        for _ in range(N_REQS)
+    ]
+    return request.param, engines, prompts
+
+
+_oracles = {}
+
+
+def _serve(engines, prompts, plan, spec_k, prefix, tracer=None, **cfg_kw):
+    reqs = [
+        ServeRequest(request_id=i, prompt=p, max_new_tokens=GEN)
+        for i, p in enumerate(prompts)
+    ]
+    router = FleetRouter(
+        engines[:3], FleetConfig(recovery="migrate", **cfg_kw),
+        engine_kwargs=dict(num_slots=NUM_SLOTS, page_size=PAGE_SIZE,
+                           spec_k=spec_k, prefix_cache=prefix),
+        fault_plan=FaultPlan.parse(plan) if plan else None,
+        tracer=tracer,
+    )
+    return router, reqs
+
+
+def _oracle(fleet_engines, spec_k, prefix):
+    dtype, engines, prompts = fleet_engines
+    key = (dtype, spec_k, prefix)
+    if key not in _oracles:
+        router, reqs = _serve(engines, prompts, "", spec_k, prefix)
+        base = router.serve(reqs)
+        assert base.completed == N_REQS
+        _oracles[key] = {r.request_id: r.tokens for r in base.results}
+    return _oracles[key]
+
+
+@pytest.mark.parametrize("prefix", [True, False], ids=["prefix", "noprefix"])
+@pytest.mark.parametrize("spec_k", [0, 2], ids=["spec0", "spec2"])
+@pytest.mark.parametrize("kind", sorted(SCENARIOS))
+def test_recovery_matrix_bit_identity(fleet_engines, kind, spec_k, prefix):
+    dtype, engines, prompts = fleet_engines
+    oracle = _oracle(fleet_engines, spec_k, prefix)
+    sc = SCENARIOS[kind]
+
+    router, reqs = _serve(engines, prompts, sc["plan"], spec_k, prefix,
+                          checkpoint_every=sc["checkpoint_every"])
+    if "drain" in sc:
+        worker, at_step = sc["drain"]
+        router.drain(worker, at_step=at_step)
+        router.join(engines[3], at_round=1)
+    stats = router.serve(reqs)
+
+    label = f"{kind}/{dtype}/spec{spec_k}/prefix={prefix}"
+    # zero silent loss, and this matrix has survivors: everything completes
+    assert stats.completed + stats.failed + stats.rejected == N_REQS
+    assert stats.completed == N_REQS, (
+        f"{label}: "
+        f"{[(r.request_id, r.status, r.reason) for r in stats.results]}"
+    )
+    # the O(bytes) contract: a migrated continuation is indistinguishable
+    # from an undisturbed run
+    for r in stats.results:
+        assert np.array_equal(r.tokens, oracle[r.request_id]), (
+            f"{label}: request {r.request_id} diverged after recovery"
+        )
+
+    if kind == "crash":
+        assert stats.deaths == 1
+        assert stats.migrated > 0 and stats.bytes_moved > 0, label
+        assert stats.recomputed_prefill_tokens == 0, label
+        assert stats.checksum_failures == 0, label
+        assert stats.migrated_tokens > 0
+    elif kind == "stall":
+        # checkpointing armed on a run that never dies: pure overhead path,
+        # nothing migrates, nothing recomputes, no checksum ever misses
+        assert stats.deaths == 0 and stats.migrated == 0, label
+        assert stats.checkpoints_saved > 0, label
+        assert stats.checksum_failures == 0, label
+    elif kind == "drain":
+        assert stats.drains == 1 and stats.deaths == 0, label
+        assert stats.joins == 1 and stats.num_workers == 4, label
+        assert stats.migrated > 0, label
+        assert stats.recomputed_prefill_tokens == 0, label
+    elif kind == "corrupt":
+        assert stats.deaths == 1, label
+        # the bite was DETECTED at restore and downgraded to replay —
+        # corrupted state is never served (bit-identity above proves it)
+        assert stats.checksum_failures >= 1, label
+
+
+def test_recovery_events_flow_to_analysis(fleet_engines):
+    dtype, engines, prompts = fleet_engines
+    if dtype != "float32":
+        pytest.skip("tracing shape is dtype-independent")
+    server = TracingServer()
+    tracer = Tracer("t-recovery", server)
+    router, reqs = _serve(engines, prompts, "crash@1:2", 0, False,
+                          tracer=tracer, checkpoint_every=1)
+    stats = router.serve(reqs)
+    assert stats.migrated > 0
+
+    summary = recovery_summary(server.timeline("t-recovery"))
+    # the dead worker's engine counters are lost with its raised serve, but
+    # its ckpt:save trace events survive: traced >= fleet-folded
+    assert summary["checkpoints_saved"] >= float(stats.checkpoints_saved) > 0
+    assert summary["checkpoint_bytes"] >= float(stats.checkpoint_bytes) > 0
+    assert summary["migrated"] == float(stats.migrated)
+    assert summary["migrated_tokens"] == float(stats.migrated_tokens)
+    assert summary["bytes_moved"] == float(stats.bytes_moved)
+    assert summary["recomputed_prefill_tokens"] == \
+        float(stats.recomputed_prefill_tokens)
+    assert summary["checksum_failures"] == 0.0
+    assert summary["migrated_token_fraction"] == 1.0
+    assert summary["restore_mean_s"] >= 0.0
+    # and a run with no recovery activity renders no section at all
+    assert recovery_summary([]) == {}
